@@ -1,0 +1,86 @@
+"""Paper Figs. 6/7/8 + Tables V/VI: AP vs GPU energy, latency, EDP, area,
+energy-per-op — generated from the calibrated cost models (DESIGN.md §3:
+the GPU side is an analytic model of the paper's measured eager-softmax
+baseline; constants in repro/ap/gpu_model.py)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.ap.pipeline import (
+    BATCHES, SEQ_LENS, compare_point, energy_per_op_pj, fig1_softmax_fraction,
+    summarize,
+)
+from repro.core.precision import BEST, PrecisionConfig
+
+
+def fig6_energy() -> list:
+    rows = []
+    for model in ("llama2-7b", "llama2-13b", "llama2-70b"):
+        for L in SEQ_LENS:
+            for B in (1, 8, 32):
+                c = compare_point(model, L, B)
+                rows.append((f"fig6.energy_ratio.{model}.L{L}.B{B}",
+                             c["ap_latency_s"] * 1e6,
+                             f"a100={c['a100_energy_ratio']:.0f}x;"
+                             f"rtx3090={c['rtx3090_energy_ratio']:.0f}x"))
+    return rows
+
+
+def fig7_latency() -> list:
+    rows = []
+    for model in ("llama2-7b", "llama2-13b", "llama2-70b"):
+        for L in SEQ_LENS:
+            c = compare_point(model, L, 8)
+            rows.append((f"fig7.latency_ratio.{model}.L{L}.B8",
+                         c["ap_latency_s"] * 1e6,
+                         f"a100={c['a100_latency_ratio']:.2f}x;"
+                         f"rtx3090={c['rtx3090_latency_ratio']:.2f}x"))
+    return rows
+
+
+def fig8_table5_edp() -> list:
+    rows = []
+    for model in ("llama2-7b", "llama2-13b", "llama2-70b"):
+        s = summarize(model)
+        rows.append((f"table5.max_edp.{model}", 0.0,
+                     f"a100={s['max_edp_ratio_a100']:.0f}"
+                     f"(paper:{ {'llama2-7b':1068,'llama2-13b':1191,'llama2-70b':2091}[model] });"
+                     f"rtx3090={s['max_edp_ratio_rtx3090']:.0f}"
+                     f"(paper:{ {'llama2-7b':4421,'llama2-13b':5524,'llama2-70b':8851}[model] })"))
+        rows.append((f"fig8.edp_always_gt1.{model}", 0.0,
+                     f"min_edp={s['min_edp_ratio_a100']:.2f};holds={s['min_edp_ratio_a100'] > 1}"))
+        rows.append((f"sec5b.area_mm2.{model}", 0.0,
+                     f"{s['area_mm2']:.2f}"
+                     f"(paper:{ {'llama2-7b':0.64,'llama2-13b':0.81,'llama2-70b':1.28}[model] })"))
+        rows.append((f"fig7.crossover_seq.{model}", 0.0,
+                     f"{s['crossover_seq']}(paper:~512-1024)"))
+    return rows
+
+
+def table6_energy_per_op() -> list:
+    rows = []
+    e_elem = energy_per_op_pj(BEST, 4096)
+    # per-cell-cycle energy: the only "op" reading in the paper's quoted
+    # magnitude (see EXPERIMENTS.md discussion of Table VI consistency)
+    from repro.ap.cost_model import E_CELL_FJ
+    rows.append(("table6.energy_per_word_op_pJ", 0.0, f"{e_elem:.3e}"))
+    rows.append(("table6.energy_per_cell_cycle_pJ", 0.0,
+                 f"{E_CELL_FJ*1e-3:.2e}(paper:5.88e-3;consmax:0.2;softermax:0.7)"))
+    return rows
+
+
+def fig1_fraction() -> list:
+    fr = fig1_softmax_fraction()
+    return [(f"fig1.softmax_fraction.L{l}", 0.0,
+             f"{v:.3f}" + ("(paper:0.38)" if l == 16384 else ""))
+            for l, v in fr.items()]
+
+
+def run() -> list:
+    return (fig6_energy() + fig7_latency() + fig8_table5_edp()
+            + table6_energy_per_op() + fig1_fraction())
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

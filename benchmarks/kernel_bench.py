@@ -1,0 +1,50 @@
+"""Kernel microbenchmarks: Pallas int-softmax / fused int-attention vs the
+pure-jnp oracle and FP softmax. Wall times on this CPU host are interpret-mode
+(correctness-path) numbers — the TPU perf story lives in the roofline tables —
+but the derived column reports exactness vs the oracle, which is the contract.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_fn
+from repro.core import BEST, fp_softmax, int_softmax
+from repro.kernels.int_attention.ops import int_attention_pallas
+from repro.kernels.int_attention.ref import int_attention_ref
+from repro.kernels.int_softmax.ops import int_softmax_pallas
+from repro.kernels.int_softmax.ref import int_softmax_ref
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+    for r, c in ((64, 512), (16, 4096)):
+        x = jnp.asarray(rng.normal(0, 2, (r, c)), jnp.float32)
+        jit_ref = jax.jit(lambda x: int_softmax_ref(x, BEST))
+        jit_fp = jax.jit(lambda x: fp_softmax(x))
+        us_k = time_fn(lambda: int_softmax_pallas(x, BEST), iters=3)
+        us_r = time_fn(lambda: jit_ref(x), iters=3)
+        us_f = time_fn(lambda: jit_fp(x), iters=3)
+        exact = bool(jnp.array_equal(int_softmax_pallas(x, BEST), jit_ref(x)))
+        rows.append((f"kernel.int_softmax.{r}x{c}", us_k,
+                     f"exact_vs_oracle={exact};ref_us={us_r:.0f};fp_us={us_f:.0f}"))
+    b, h, kv, s, d = 1, 8, 2, 256, 64
+    q = jnp.asarray(rng.normal(0, 1, (b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, kv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, kv, s, d)), jnp.float32)
+    jref = jax.jit(lambda q, k, v: int_attention_ref(q, k, v, BEST))
+    us_a = time_fn(lambda: int_attention_pallas(q, k, v, BEST, blk_q=64), iters=3)
+    us_ar = time_fn(lambda: jref(q, k, v), iters=3)
+    err = float(jnp.abs(int_attention_pallas(q, k, v, BEST, blk_q=64)
+                        - jref(q, k, v)).max())
+    rows.append((f"kernel.int_attention.{b}x{h}x{s}x{d}", us_a,
+                 f"max_err_vs_oracle={err:.1e};ref_us={us_ar:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

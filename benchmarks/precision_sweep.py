@@ -1,0 +1,91 @@
+"""Paper Tables III/IV: precision sensitivity of the integer-only softmax.
+
+Without Llama2 weights offline, the perplexity columns are reproduced at two
+levels (DESIGN.md §6): here, the numerical-fidelity sweep over the exact
+Table-I grid — KL divergence and total-variation distance of int vs FP
+softmax over attention-calibrated score distributions. The paper's four
+qualitative findings are asserted:
+
+  F1  M=4 is unusable (order-of-magnitude worse than M=6/M=8)
+  F2  quality saturates in N by N=16 (N=8 visibly broken on long rows)
+  F3  v_corr width (M / M+1 / M+2) is irrelevant
+  F4  M=8 >= M=6 >= ... at fixed N
+
+(The end-to-end trained-LM perplexity version is examples/precision_sweep.py.)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_fn
+from repro.core import PrecisionConfig, fp_softmax, int_softmax
+
+SEQ = 2048
+ROWS = 32
+
+
+def _scores(rng):
+    """Attention-like logits: mostly diffuse with a few strong peaks."""
+    x = rng.normal(0.0, 1.0, (ROWS, SEQ)).astype(np.float32)
+    peaks = rng.integers(0, SEQ, (ROWS, 8))
+    for i in range(ROWS):
+        x[i, peaks[i]] += rng.uniform(3, 8, 8)
+    return jnp.asarray(x)
+
+
+def _metrics(f, p):
+    f, p = np.asarray(f, np.float64), np.asarray(p, np.float64)
+    kl = float(np.mean(np.sum(f * (np.log(f + 1e-12) - np.log(p + 1e-12)), -1)))
+    tv = float(np.mean(0.5 * np.abs(f - p).sum(-1)))
+    return kl, tv
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    x = _scores(rng)
+    f = fp_softmax(x)
+    rows: list = []
+    results = {}
+    for M in (4, 6, 8):
+        t_c = -4.0 if M == 4 else -7.0
+        for N in (8, 12, 16, 20):
+            for e in (0, 1, 2):
+                cfg = PrecisionConfig(M=M, N=N, v_corr_extra=e, T_C=t_c)
+                us = time_fn(lambda: int_softmax(x, cfg), iters=3, warmup=1)
+                kl, tv = _metrics(f, int_softmax(x, cfg))
+                results[(M, N, e)] = (kl, tv)
+                rows.append((f"table3.int_softmax.M{M}.N{N}.vcorr{e}", us,
+                             f"KL={kl:.5f};TV={tv:.5f}"))
+    # paper findings as derived assertions. The N-truncation effect needs
+    # long DIFFUSE rows (the sum must overflow w_vapprox + 8 bits); the
+    # M-ordering is measured on KL over gaussian scores (the paper measures
+    # perplexity — KL of the attention distribution is its local analogue).
+    xg = jnp.asarray(rng.normal(0, 2.0, (16, 1024)), jnp.float32)
+    fg = fp_softmax(xg)
+    klg = {M: _metrics(fg, int_softmax(xg, PrecisionConfig(
+        M=M, N=16, T_C=-4.0 if M == 4 else -7.0)))[0] for M in (4, 6, 8)}
+    xl = jnp.asarray(rng.normal(0, 0.5, (4, 16384)), jnp.float32)
+    fl = fp_softmax(xl)
+    tvn = {N: _metrics(fl, int_softmax(xl, PrecisionConfig(M=6, N=N)))[1]
+           for N in (8, 12, 16, 20)}
+    f1 = klg[4] / max(klg[6], 1e-9)
+    f2 = tvn[8] / max(tvn[16], 1e-9)
+    f2b = abs(tvn[16] - tvn[20])
+    f3 = max(abs(results[(6, 16, e)][1] - results[(6, 16, 0)][1])
+             for e in (1, 2))
+    f4 = klg[8] <= klg[6] * 1.05
+    rows.append(("table3.finding1.M4_vs_M6_KL_ratio", 0.0,
+                 f"{f1:.1f}x_worse(paper:8-32x_ppl)"))
+    rows.append(("table3.finding2.N8_vs_N16_TV_ratio_diffuse16k", 0.0,
+                 f"{f2:.1f}x_worse"))
+    rows.append(("table3.finding2b.N16_eq_N20", 0.0, f"delta={f2b:.6f}"))
+    rows.append(("table3.finding3.vcorr_irrelevant", 0.0, f"maxdelta={f3:.6f}"))
+    rows.append(("table3.finding4.M8_le_M6_KL", 0.0, str(bool(f4))))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

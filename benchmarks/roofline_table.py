@@ -1,0 +1,68 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline source).
+
+Reads artifacts/dryrun/<mesh>/<arch>__<shape>.json (produced by
+repro.launch.dryrun) and emits one row per cell with the three terms, the
+dominant bottleneck, and the useful-flops ratio.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(mesh: str = "single"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run() -> list:
+    rows = []
+    for mesh in ("single", "multi"):
+        for c in load(mesh):
+            name = f"roofline.{mesh}.{c['arch']}.{c['shape']}"
+            if "skipped" in c:
+                rows.append((name, 0.0, f"SKIP:{c['skipped'][:60]}"))
+                continue
+            r = c["roofline"]
+            ratio = c.get("useful_flops_ratio")
+            rows.append((
+                name, c["compile_s"] * 1e6,
+                f"compute={r['compute_s']:.4f}s;memory={r['memory_s']:.4f}s;"
+                f"collective={r['collective_s']:.4f}s;dom={r['dominant']};"
+                f"useful_flops={'%.2f' % ratio if ratio else 'n/a'};"
+                f"peak_mem_GB={(c['memory']['peak_bytes'] or 0)/2**30:.2f}"))
+    if not rows:
+        rows.append(("roofline.missing", 0.0,
+                     "run repro.launch.dryrun first"))
+    return rows
+
+
+def markdown(mesh: str = "single") -> str:
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+             "dominant | useful FLOPs | peak mem/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for c in load(mesh):
+        if "skipped" in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        r = c["roofline"]
+        u = c.get("useful_flops_ratio")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} | "
+            f"{'%.2f' % u if u else 'n/a'} | "
+            f"{(c['memory']['peak_bytes'] or 0)/2**30:.2f} GB |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

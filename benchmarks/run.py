@@ -1,0 +1,31 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry: PYTHONPATH=src python -m benchmarks.run [--only X]"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark module name")
+    args = ap.parse_args()
+
+    from benchmarks import ap_comparison, kernel_bench, precision_sweep, roofline_table
+    from benchmarks.common import emit
+
+    suites = [
+        ("precision_sweep", precision_sweep.run),     # Tables III/IV
+        ("ap_comparison", ap_comparison.run),         # Figs 1,6,7,8; Tables V,VI
+        ("kernel_bench", kernel_bench.run),           # Pallas kernels vs oracle
+        ("roofline_table", roofline_table.run),       # EXPERIMENTS.md §Roofline
+    ]
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        print(f"# ---- {name} ----", file=sys.stderr)
+        emit(fn())
+
+
+if __name__ == '__main__':
+    main()

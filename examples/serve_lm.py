@@ -1,0 +1,58 @@
+"""Serving demo: batched generation with the integer-softmax attention path.
+
+    PYTHONPATH=src python examples/serve_lm.py --train-steps 150 --max-new 24
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import smoke_config
+from repro.core.precision import BEST
+from repro.core.softmax_variants import SoftmaxSpec
+from repro.data.synthetic import SyntheticCorpus
+from repro.models import build_model
+from repro.serving.engine import Engine
+from repro.training.optimizer import AdamW, cosine_schedule
+from repro.training.step import init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b", help="smoke config family")
+    ap.add_argument("--train-steps", type=int, default=150)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--sampler", default="greedy",
+                    choices=["greedy", "temperature"])
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    model = build_model(cfg)
+    opt = AdamW(lr=cosine_schedule(1e-2, 20, args.train_steps))
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, opt))
+    corpus = SyntheticCorpus(cfg.vocab, seed=1)
+    print(f"training {cfg.name} ({cfg.param_count()/1e6:.1f}M) briefly...")
+    for i in range(args.train_steps):
+        state, met = step(state, {k: jnp.asarray(v)
+                                  for k, v in corpus.batch(16, 64, seed=i).items()})
+    print(f"train loss: {float(met['loss']):.3f}")
+
+    prompts = corpus.sample(args.batch, 8, seed=777)[:, :8]
+    for name, spec in [("fp softmax", SoftmaxSpec("fp")),
+                       ("SoftmAP int softmax (M=6,N=16)", SoftmaxSpec("int", BEST))]:
+        eng = Engine(build_model(cfg.with_softmax(spec)), state.params,
+                     max_new=args.max_new, sampler=args.sampler)
+        res = eng.generate(prompts)
+        ok = sum(int(row[t + 1] in corpus.table[row[t]])
+                 for row in res.tokens
+                 for t in range(res.prompt_len - 1, res.tokens.shape[1] - 1))
+        total = args.batch * args.max_new
+        print(f"{name}: {ok}/{total} generated transitions follow the corpus")
+        print("  sample:", res.tokens[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

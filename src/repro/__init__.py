@@ -1,0 +1,2 @@
+"""repro: SoftmAP — integer-only Softmax, software-hardware co-design (JAX/TPU)."""
+__version__ = "1.0.0"

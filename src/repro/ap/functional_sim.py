@@ -1,0 +1,124 @@
+"""Functional 2D-AP simulator: word-level execution with per-op cycle metering.
+
+Where isa.py simulates genuine compare/write LUT passes (bit-exact but slow),
+this simulator executes whole ops on int64 vectors — still **bit-exact** with
+respect to the configured column widths (every op masks/saturates to its
+destination width) — while charging cycles from the Table II cost model. It is
+the machine the Fig.-5 dataflow program runs on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.ap import cost_model as cm
+
+
+@dataclasses.dataclass
+class APSim:
+    """One AP: `rows` words per column-field (one softmax vector, 2 words/row)."""
+    n_words: int
+
+    def __post_init__(self):
+        self.fields: Dict[str, np.ndarray] = {}
+        self.widths: Dict[str, int] = {}
+        self.cycles = 0
+        self.cycle_log: Dict[str, int] = {}
+
+    # -- storage ---------------------------------------------------------
+
+    def alloc(self, name: str, width: int, signed_ok: bool = True) -> None:
+        self.fields[name] = np.zeros(self.n_words, np.int64)
+        self.widths[name] = width
+
+    def load(self, name: str, values) -> None:
+        """Host write (DMA); not charged as compute cycles."""
+        self.fields[name] = np.asarray(values, np.int64).copy()
+
+    def read(self, name: str) -> np.ndarray:
+        return self.fields[name].copy()
+
+    def _charge(self, step: str, cycles: int) -> None:
+        self.cycles += cycles
+        self.cycle_log[step] = self.cycle_log.get(step, 0) + cycles
+
+    # -- ops (cycle costs from Table II formulas) --------------------------
+
+    def add(self, dst: str, src: str, step: str, cycles: int = None) -> None:
+        self._charge(step, cm.cycles_add(self.widths[dst]) if cycles is None else cycles)
+        self.fields[dst] = self.fields[dst] + self.fields[src]
+
+    def sub(self, dst: str, src: str, step: str, cycles: int = None) -> None:
+        self._charge(step, cm.cycles_add(self.widths[dst]) if cycles is None else cycles)
+        self.fields[dst] = self.fields[dst] - self.fields[src]
+
+    def add_const(self, dst: str, const: int, step: str, cycles: int = None) -> None:
+        self._charge(step, cm.cycles_add(self.widths[dst]) if cycles is None else cycles)
+        self.fields[dst] = self.fields[dst] + const
+
+    def mul_const(self, dst: str, const: int, step: str, cycles: int = None) -> None:
+        self._charge(step, cm.cycles_const_mult(self.widths[dst], const) if cycles is None else cycles)
+        self.fields[dst] = self.fields[dst] * const
+
+    def square(self, dst: str, src: str, step: str, cycles: int = None) -> None:
+        self._charge(step, cm.cycles_mult(self.widths[src] // 2 + 1) if cycles is None else cycles)
+        self.fields[dst] = self.fields[src] * self.fields[src]
+
+    def shift_right_const(self, dst: str, k: int, step: str) -> None:
+        self._charge(step, 1)  # column re-addressing
+        self.fields[dst] = self.fields[dst] >> k
+
+    def shift_var(self, dst: str, amounts: str, q_max: int, step: str,
+                  left_bias: int = 0, cycles: int = None) -> None:
+        """dst <- dst << (left_bias - q) per word (arithmetic both ways)."""
+        self._charge(step, cm.cycles_varshift(self.widths[dst], q_max) if cycles is None else cycles)
+        q = self.fields[amounts]
+        sh = left_bias - q
+        v = self.fields[dst]
+        self.fields[dst] = np.where(sh >= 0, v << np.maximum(sh, 0),
+                                    v >> np.maximum(-sh, 0))
+
+    def saturate(self, dst: str, width: int, step: str = "saturate") -> None:
+        self._charge(step, 1)
+        self.fields[dst] = np.minimum(self.fields[dst], (1 << width) - 1)
+
+    def where_mask(self, dst: str, mask, value: int, step: str) -> None:
+        """Mask-register write of a constant into masked-off words."""
+        self._charge(step, 2)
+        self.fields[dst] = np.where(mask, self.fields[dst], value)
+
+    def reduce_saturating(self, src: str, saturation: int, step: str,
+                          cycles: int = None) -> int:
+        """2D-AP row-pair tree reduction with a saturating accumulator —
+        the hardware realization of core.int_softmax.saturating_sum."""
+        self._charge(step, cm.cycles_reduction(self.widths[src], self.n_words) if cycles is None else cycles)
+        v = self.fields[src].copy()
+        n = 1 if len(v) == 0 else 1 << (len(v) - 1).bit_length()
+        if n != len(v):
+            v = np.concatenate([v, np.zeros(n - len(v), np.int64)])
+        while len(v) > 1:
+            v = np.minimum(v[0::2] + v[1::2], saturation)
+        return int(min(v[0], saturation))
+
+    def divide_by_scalar(self, dst: str, src: str, denom: int, p_bits: int,
+                         step: str, incam: bool = False, cycles: int = None) -> None:
+        """dst <- floor(src * 2^p / denom) via restoring long division
+        (bit-identical to core.int_softmax.fixedpoint_div)."""
+        if cycles is not None:
+            self._charge(step, cycles)
+        elif incam:
+            self._charge(step, cm.cycles_division_incam(p_bits, self.widths[src]))
+        else:  # reciprocal-multiply costing; result computed exactly either way
+            self._charge(step, cm.cycles_mult(p_bits // 4))
+        num = self.fields[src]
+        rem = num.copy()
+        quo = np.zeros_like(num)
+        for _ in range(p_bits):
+            rem = rem << 1
+            ge = rem >= denom
+            rem = np.where(ge, rem - denom, rem)
+            quo = (quo << 1) | ge.astype(np.int64)
+        self.fields[dst] = quo

@@ -1,0 +1,65 @@
+"""Analytic GPU softmax cost model (A100 / RTX3090).
+
+No GPU exists in this container, so the paper's measured baselines are
+replaced by a documented analytic model of what the paper measured: the
+**eager PyTorch softmax** inside HF attention — a multi-kernel, fp32-upcast,
+memory-bound op — NOT an ideal fused kernel. Fig. 1 of the paper implies
+~10-30x-off-roofline GPU softmax (38% of Llama2-7b runtime at 16k), which an
+eager multi-pass model reproduces and a fused-roofline model cannot.
+
+Model: latency = n_kernels * launch_overhead
+                + n_passes * numel * dtype_bytes / (bw_eff * mem_bw)
+       energy  = latency * board_power.
+
+Constants are stated here and surfaced in EXPERIMENTS.md next to the paper's
+measured ratios.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUSpec:
+    name: str
+    mem_bw: float          # B/s
+    power_w: float         # board power under memory-bound load
+    launch_s: float        # per-kernel launch/dispatch overhead
+    n_kernels: int = 5     # mask-add, max, sub+exp, sum, div (eager path)
+    n_passes: float = 9.0  # fp32-equivalent tensor passes across those kernels
+    dtype_bytes: int = 4   # HF upcasts attention softmax to fp32
+    bw_eff: float = 0.40   # achieved fraction of peak DRAM bandwidth
+    peak_flops: float = 312e12
+
+
+A100 = GPUSpec("A100", mem_bw=2.039e12, power_w=300.0, launch_s=8e-6)
+RTX3090 = GPUSpec("RTX3090", mem_bw=0.936e12, power_w=350.0, launch_s=10e-6,
+                  peak_flops=71e12)
+
+# Fig.-1 variant: the profiler attributes only the F.softmax kernel itself —
+# a single fused kernel (~2.5 passes at good bandwidth), not the whole eager
+# attention-softmax subgraph the offload comparison (Figs. 6-8) targets.
+FUSED_PASSES = 2.5
+FUSED_EFF = 0.55
+
+
+def softmax_cost(spec: GPUSpec, batch: int, n_heads: int, n_rows: int,
+                 seq_len: int, fused: bool = False):
+    """Softmax over scores [batch, heads, n_rows, seq_len] (one layer)."""
+    numel = batch * n_heads * n_rows * seq_len
+    passes = FUSED_PASSES if fused else spec.n_passes
+    eff = FUSED_EFF if fused else spec.bw_eff
+    kernels = 1 if fused else spec.n_kernels
+    move_s = passes * numel * spec.dtype_bytes / (eff * spec.mem_bw)
+    latency = kernels * spec.launch_s + move_s
+    return {"latency_s": latency, "energy_j": latency * spec.power_w}
+
+
+def model_forward_cost(spec: GPUSpec, params: float, batch: int, seq_len: int,
+                       n_layers: int, d_model: int, mfu: float = 0.33):
+    """Coarse whole-forward GEMM latency (Fig.-1 denominator): parameter
+    matmuls + the quadratic attention QK^T/PV terms."""
+    flops = 2.0 * params * batch * seq_len
+    flops += 4.0 * n_layers * batch * seq_len * seq_len * d_model
+    return flops / (mfu * spec.peak_flops)

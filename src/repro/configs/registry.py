@@ -1,0 +1,75 @@
+"""Architecture registry: ``--arch <id>`` resolution + reduced smoke presets."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.softmax_variants import SoftmaxSpec
+
+ARCHS = {
+    "qwen2.5-32b": "qwen2_5_32b",
+    "deepseek-7b": "deepseek_7b",
+    "minicpm3-4b": "minicpm3_4b",
+    "olmo-1b": "olmo_1b",
+    "mamba2-780m": "mamba2_780m",
+    "dbrx-132b": "dbrx_132b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "hymba-1.5b": "hymba_1_5b",
+    "whisper-base": "whisper_base",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "llama2-7b": "llama2_7b",          # the paper's own model
+}
+
+# the ten assigned architectures (dry-run / roofline matrix)
+ASSIGNED = [a for a in ARCHS if a != "llama2-7b"]
+
+
+def get_config(name: str, softmax: Optional[SoftmaxSpec] = None,
+               **overrides) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[name]}")
+    cfg: ModelConfig = mod.CONFIG
+    if softmax is not None:
+        cfg = cfg.with_softmax(softmax)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def smoke_config(name: str, softmax: Optional[SoftmaxSpec] = None) -> ModelConfig:
+    """Reduced config of the same family: small widths/layers/experts/vocab,
+    runnable forward+train on CPU. Full configs are exercised only via the
+    dry-run (ShapeDtypeStruct, no allocation)."""
+    full = get_config(name)
+    shrink: Dict = dict(
+        n_layers=min(full.n_layers, 6 if full.family == "hybrid" else 3),
+        d_model=128, d_head=32, vocab=512, max_seq=128, attn_chunk=32,
+        rope_theta=full.rope_theta,
+    )
+    if full.family == "hybrid":
+        shrink["n_layers"] = 6
+    if full.uses_attention:
+        shrink["n_heads"] = 4
+        shrink["n_kv_heads"] = min(4, max(1, full.n_kv_heads * 4 // full.n_heads))
+    if full.rope_type == "mrope":
+        shrink["mrope_sections"] = (4, 6, 6)  # d_head 32 -> 16 half-dims
+    if full.family != "ssm":
+        shrink["d_ff"] = 256
+    if full.attention == "mla":
+        shrink.update(q_lora_rank=(64 if full.q_lora_rank else 0),
+                      kv_lora_rank=64, qk_nope_dim=32, qk_rope_dim=16,
+                      v_head_dim=32, d_head=48)
+    if full.family == "moe":
+        shrink.update(n_experts=4, moe_top_k=min(2, full.moe_top_k),
+                      d_ff_expert=128, d_ff=256,
+                      n_shared_experts=min(1, full.n_shared_experts))
+    if full.family in ("ssm", "hybrid"):
+        shrink.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=32, window=32)
+    cfg = dataclasses.replace(full, name=full.name + "-smoke", **shrink)
+    if softmax is not None:
+        cfg = cfg.with_softmax(softmax)
+    return cfg

@@ -1,0 +1,28 @@
+# The paper's primary contribution: integer-only low-precision Softmax
+# (SoftmAP Alg. 1) with its mixed-precision space (Table I), plus the
+# dispatcher that plugs it into every attention module in the model zoo.
+from repro.core.int_softmax import (
+    clipped_fp_softmax,
+    fp_softmax,
+    int_exp_codes,
+    int_softmax,
+    int_softmax_from_codes,
+    int_softmax_ste,
+    saturating_sum,
+)
+from repro.core.precision import BEST, LN2, POLY_A, POLY_B, POLY_C, PrecisionConfig, paper_sweep_grid
+from repro.core.quantization import (
+    dequantize_probs,
+    quantize_raw_scores,
+    quantize_stable_scores,
+)
+from repro.core.softmax_variants import FP, INT_BEST, SoftmaxSpec, get_softmax
+
+__all__ = [
+    "BEST", "FP", "INT_BEST", "LN2", "POLY_A", "POLY_B", "POLY_C",
+    "PrecisionConfig", "SoftmaxSpec", "clipped_fp_softmax", "dequantize_probs",
+    "fp_softmax", "get_softmax", "int_exp_codes", "int_softmax",
+    "int_softmax_from_codes",
+    "int_softmax_ste", "paper_sweep_grid", "quantize_raw_scores",
+    "quantize_stable_scores", "saturating_sum",
+]

@@ -1,0 +1,92 @@
+"""Quantization helpers for the integer-only softmax path.
+
+Scores arrive in floating point from the QK^T matmul. SoftmAP's pipeline is:
+
+    x -> (x - max(x))      stabilization (shift-invariant)
+      -> clip to [T_C, 0]  calibrated clipping (Sec. V-A)
+      -> round(x / S)      signed M-bit quantization, S = -T_C / 2^(M-1)
+
+yielding non-positive integer codes in [-2^(M-1), 0]. ``quantize_stable_scores``
+performs the fp-side work; everything downstream of it is integer-only
+(``int_softmax.int_softmax_from_codes``).
+
+For deployments where scores are *already* integer (a fully-quantized pipeline a
+la I-BERT) the integer max-subtract of Alg. 1 line 4 is exercised directly via
+``int_softmax_from_codes`` with ``assume_stable=False``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionConfig
+
+NEG_INF = -1e30
+
+
+def quantize_stable_scores(x, cfg: PrecisionConfig, mask=None, axis: int = -1):
+    """fp scores -> stabilized, clipped, signed-M-bit integer codes (<= 0).
+
+    Args:
+      x: float array of attention scores (any shape).
+      cfg: precision configuration (supplies T_C and S).
+      mask: optional boolean array broadcastable to ``x``; True = valid. Invalid
+        positions quantize to the clipping floor and must be zeroed downstream
+        (the AP masks them out with its mask register; we mirror that in
+        ``int_softmax``).
+      axis: softmax axis.
+
+    Returns:
+      int32 codes in [-(2^(M-1)), 0].
+    """
+    x = x.astype(jnp.float32)
+    if mask is not None:
+        x = jnp.where(mask, x, NEG_INF)
+    row_max = jnp.max(x, axis=axis, keepdims=True)
+    # Guard fully-masked rows (row_max == NEG_INF): stabilized values become 0,
+    # they are zeroed by the mask later.
+    row_max = jnp.where(row_max <= NEG_INF, 0.0, row_max)
+    x_stable = jnp.clip(x - row_max, cfg.T_C, 0.0)
+    v = jnp.round(x_stable / jnp.float32(cfg.S)).astype(jnp.int32)
+    # round() at the clip floor can land exactly on -2^(M-1); keep in range.
+    return jnp.clip(v, -(2 ** (cfg.M - 1)), 0)
+
+
+def quantize_raw_scores(x, cfg: PrecisionConfig, calib_max: float, axis: int = -1):
+    """Absolute (calibrated) quantization: codes share the grid of ``S`` but are
+    offset by a calibrated maximum, so the integer max-subtract of Alg. 1 line 4
+    does real work. Used by tests and the AP dataflow validation."""
+    x = x.astype(jnp.float32)
+    lo = calib_max + cfg.T_C
+    x = jnp.clip(x, lo, calib_max)
+    return jnp.round(x / jnp.float32(cfg.S)).astype(jnp.int32)
+
+
+def dequantize_probs(p_codes, cfg: PrecisionConfig):
+    """Fixed-point probability codes -> float32 probabilities."""
+    return p_codes.astype(jnp.float32) * jnp.float32(2.0 ** (-cfg.P_out))
+
+
+# ---- generic affine quantizer (substrate; used by serving & tests) -----------
+
+
+def affine_qparams(lo: float, hi: float, bits: int, symmetric: bool = False):
+    """Return (scale, zero_point) for an affine integer grid."""
+    if symmetric:
+        amax = max(abs(lo), abs(hi))
+        scale = amax / float(2 ** (bits - 1) - 1)
+        return scale, 0
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    scale = (hi - lo) / float(qmax - qmin)
+    zero = round(qmin - lo / scale) if scale > 0 else 0
+    return scale, int(zero)
+
+
+def affine_quantize(x, scale: float, zero: int, bits: int):
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    q = jnp.round(x / scale) + zero
+    return jnp.clip(q, qmin, qmax).astype(jnp.int32)
+
+
+def affine_dequantize(q, scale: float, zero: int):
+    return (q - zero).astype(jnp.float32) * scale

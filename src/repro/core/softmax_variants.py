@@ -1,0 +1,54 @@
+"""Softmax dispatcher: the pluggable point where SoftmAP enters the models.
+
+Every attention module in the zoo takes a ``SoftmaxSpec``; ``"fp"`` is the
+baseline, ``"int"`` is the paper's integer-only approximation, and
+``"int_pallas"`` routes to the fused Pallas kernel (TPU target; interpret mode
+on CPU — only usable outside jit-traced full-model paths on this host, so model
+code defaults to ``"int"`` and benchmarks exercise the kernel directly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+from repro.core.int_softmax import (clipped_fp_softmax, fp_softmax,
+                                    fp_softmax_lowp, int_softmax,
+                                    int_softmax_ste)
+from repro.core.precision import BEST, PrecisionConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxSpec:
+    kind: str = "fp"  # "fp" | "int" | "int_pallas" | "clipped_fp"
+    precision: PrecisionConfig = BEST
+
+    def __post_init__(self):
+        if self.kind not in ("fp", "int", "int_ste", "int_pallas", "clipped_fp", "fp_lowp"):
+            raise ValueError(f"unknown softmax kind: {self.kind}")
+
+    def fn(self):
+        if self.kind == "fp":
+            return fp_softmax
+        if self.kind == "fp_lowp":
+            return fp_softmax_lowp
+        if self.kind == "clipped_fp":
+            return partial(clipped_fp_softmax, t_c=self.precision.T_C)
+        if self.kind == "int":
+            return partial(int_softmax, cfg=self.precision)
+        if self.kind == "int_ste":
+            return partial(int_softmax_ste, cfg=self.precision)
+        if self.kind == "int_pallas":
+            from repro.kernels.int_softmax.ops import int_softmax_pallas
+
+            return partial(int_softmax_pallas, cfg=self.precision)
+        raise AssertionError(self.kind)
+
+
+def get_softmax(spec: Optional[SoftmaxSpec]):
+    return (spec or SoftmaxSpec()).fn()
+
+
+FP = SoftmaxSpec("fp")
+INT_BEST = SoftmaxSpec("int", BEST)

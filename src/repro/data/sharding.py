@@ -1,0 +1,35 @@
+"""Host-to-device batch placement under a mesh."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.distributed.sharding import ShardingRules
+
+
+def batch_axes(batch):
+    """Logical axes for a host batch: leading dim is always "batch" except the
+    M-RoPE positions tensor [3, B, S]."""
+    def axes(k, v):
+        if k == "positions" and v.ndim == 3 and v.shape[0] == 3:
+            return (None, "batch", None)
+        return ("batch",) + (None,) * (v.ndim - 1)
+    return {k: axes(k, v) for k, v in batch.items()}
+
+
+def shard_batch(batch, mesh, rules: ShardingRules):
+    """numpy batch -> device arrays sharded over the DP axes."""
+    axes = batch_axes(batch)
+    return {
+        k: jax.device_put(v, NamedSharding(mesh, rules.spec(axes[k], mesh)))
+        for k, v in batch.items()
+    }
+
+
+def batch_shardings(batch_struct, mesh, rules: ShardingRules):
+    """ShapeDtypeStruct batch -> NamedSharding tree (dry-run in_shardings)."""
+    axes = batch_axes(batch_struct)
+    return {k: NamedSharding(mesh, rules.spec(axes[k], mesh))
+            for k in batch_struct}

@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (
+    DEFAULT_RULES, ShardingRules, logical_constraint, make_mesh,
+)

@@ -1,0 +1,27 @@
+"""Manual-collective helpers for shard_map regions (the pjit paths rely on
+SPMD-inserted collectives; these are for explicitly scheduled sections)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def psum_tree(tree, axis_name):
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), tree)
+
+
+def pmean_tree(tree, axis_name):
+    return jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), tree)
+
+
+def reduce_scatter_mean(x, axis_name, axis: int = 0):
+    """psum_scatter / n: the ZeRO gradient primitive."""
+    n = jax.lax.psum(1, axis_name)
+    return jax.lax.psum_scatter(x, axis_name, scatter_dimension=axis,
+                                tiled=True) / n
+
+
+def ring_all_gather(x, axis_name, axis: int = 0):
+    """all_gather with tiled concat (bandwidth-optimal ring on ICI)."""
+    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=True)

@@ -1,0 +1,54 @@
+"""Elastic scaling: re-mesh on node loss/gain without touching model code.
+
+Policy: the "model" axis is sacred (TP topology is wired into per-layer
+shardings and ICI locality); elasticity reshapes the pure-DP axes
+("pod" x "data"). Params/optimizer shards move via device_put resharding —
+every tensor's logical axes are device-count independent, so a checkpoint
+written on 512 chips restores onto 256 or 1024 unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import ShardingRules, make_mesh
+
+
+def plan_mesh(n_devices: int, model_parallel: int = 16,
+              prefer_pods: bool = True) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest usable (pod, data, model) shape for the devices that survived.
+    Drops stragglers that don't fit a full data row (documented waste)."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"{n_devices} devices cannot host model_parallel={model_parallel}")
+    rows = n_devices // model_parallel
+    if prefer_pods and rows % 2 == 0 and rows >= 4:
+        return (2, rows // 2, model_parallel), ("pod", "data", "model")
+    return (rows, model_parallel), ("data", "model")
+
+
+def make_elastic_mesh(n_devices: Optional[int] = None,
+                      model_parallel: int = 16) -> Mesh:
+    n = n_devices if n_devices is not None else len(jax.devices())
+    shape, names = plan_mesh(n, model_parallel)
+    return make_mesh(shape, names)
+
+
+def reshard_tree(tree, axes_tree, mesh: Mesh, rules: ShardingRules):
+    """Move a (possibly differently-sharded) pytree onto ``mesh`` according to
+    its logical axes — the whole elastic-restart data move in one call."""
+    def place(x, axes):
+        return jax.device_put(x, NamedSharding(mesh, rules.spec(axes, mesh)))
+    return jax.tree.map(place, tree, axes_tree)
+
+
+def survivors_after_failure(mesh: Mesh, failed: int) -> int:
+    """How many devices remain usable when ``failed`` chips die, rounding down
+    to whole data rows (a failed chip poisons its model-parallel row)."""
+    total = mesh.devices.size
+    model = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    worst_rows_lost = min(failed, total // model)
+    return total - worst_rows_lost * model

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused attention with SoftmAP integer softmax.
+
+The paper (Sec. V-C) notes SoftmAP is orthogonal to partition-parallel softmax
+(FlashAttention-style); this kernel is that composition on TPU, and the
+beyond-paper optimization of the repo: QK^T, the integer softmax, and PV run
+in one VMEM residency — the [Sq, Skv] score tile never touches HBM.
+
+Layout/tiling:
+  grid = (B*H, Sq / BLK_Q)           one program per query tile per head
+  q    tile (1, BLK_Q, D)   VMEM     MXU matmul operand (D = 64/128 aligned)
+  k/v  tile (1, Skv, D)     VMEM     streamed per program; GQA sharing via
+                                     index_map (kv row = head // group)
+  scores (BLK_Q, Skv) f32/int32 VMEM transient only
+
+Exactness: the integer softmax needs true row max/sum; each program holds
+full rows (all Skv columns), so outputs are bit-identical to the oracle —
+no online-rescaling approximation is involved (that trick is unsound for the
+integer exponential, see DESIGN.md).
+
+VMEM: BLK_Q=128, Skv=4096: scores 2 MB + k,v 2x1 MB(bf16 D=128) + q small
+~= 4.5 MB. For 32k context drop BLK_Q to 16 (ops.py auto-scales).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.precision import PrecisionConfig
+from repro.kernels.int_softmax.kernel import _int_softmax_block
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, cfg: PrecisionConfig, scale: float,
+            causal: bool, window: int, blk_q: int, skv: int, sq: int):
+    qt = q_ref[0]                       # [BLK_Q, D]
+    kt = k_ref[0]                       # [Skv, D]
+    vt = v_ref[0]
+    scores = jax.lax.dot_general(
+        qt, kt, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    mask = None
+    if causal:
+        i = pl.program_id(1)
+        qpos = i * blk_q + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+        qpos = qpos + (skv - sq)        # right-aligned (decode-with-cache)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        mask = qpos >= kpos
+        if window:
+            mask &= (qpos - kpos) < window
+    p = _int_softmax_block(scores, mask, cfg)
+    out = jax.lax.dot_general(
+        p.astype(vt.dtype), vt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0] = out
+
+
+def int_attention_kernel(q, k, v, cfg: PrecisionConfig, causal: bool = True,
+                         window: int = 0, blk_q: int = 128,
+                         interpret: bool = True):
+    """q: [BH, Sq, D]; k, v: [BKV, Skv, D] with BH = B*H, BKV = B*KV.
+    Returns [BH, Sq, D] float32."""
+    bh, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    assert bh % bkv == 0, (bh, bkv)
+    group = bh // bkv
+    blk_q = min(blk_q, sq)
+    pad = (-sq) % blk_q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+    grid = (bh, q.shape[1] // blk_q)
+
+    # GQA: all `group` consecutive heads of a batch row share one kv row.
+    def kv_index(h, i):
+        return (h // group, 0, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, cfg=cfg, scale=d ** -0.5, causal=causal,
+                          window=window, blk_q=blk_q, skv=skv, sq=sq),
+        out_shape=jax.ShapeDtypeStruct((bh, q.shape[1], d), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, skv, d), kv_index),
+            pl.BlockSpec((1, skv, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda h, i: (h, i, 0)),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

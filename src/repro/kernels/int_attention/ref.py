@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused integer-softmax attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.int_softmax import int_softmax
+from repro.core.precision import PrecisionConfig
+
+
+def int_attention_ref(q, k, v, cfg: PrecisionConfig, causal: bool = True,
+                      window: int = 0):
+    """q: [B, H, Sq, D]; k, v: [B, KV, Skv, D] (H % KV == 0).
+    Returns [B, H, Sq, D] float32. Softmax = SoftmAP Algorithm 1."""
+    b, h, sq, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, sq, d)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores * (d ** -0.5)
+    mask = None
+    if causal:
+        skv = k.shape[2]
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned
+        kpos = jnp.arange(skv)[None, :]
+        mask = qpos >= kpos
+        if window:
+            mask &= (qpos - kpos) < window
+        mask = mask[None, None, None]
+    p = int_softmax(scores, cfg, mask=mask, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(q.dtype), v)
+    return out.reshape(b, h, sq, d).astype(jnp.float32)

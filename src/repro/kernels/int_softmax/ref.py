@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the int-softmax kernel (kernel-shaped API)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.int_softmax import int_softmax
+from repro.core.precision import PrecisionConfig
+
+
+def int_softmax_ref(x, cfg: PrecisionConfig, mask=None):
+    """x: [rows, cols] float scores -> [rows, cols] float32 probabilities.
+
+    This IS the paper's Algorithm 1 (core.int_softmax); re-exported in the
+    kernel's [rows, cols] layout so kernel sweeps diff against one callable.
+    """
+    assert x.ndim == 2, x.shape
+    return int_softmax(x, cfg, mask=mask, axis=-1).astype(jnp.float32)

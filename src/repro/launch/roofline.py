@@ -1,0 +1,108 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_chip
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_operand_bytes_per_device / link_bw
+
+cost_analysis() reports the per-device (post-SPMD) program, so per-device
+terms equal the spec's global/(chips*bw) formulation. Collective bytes are
+NOT in cost_analysis: we parse the optimized HLO, build an instruction->shape
+table, and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict
+
+# TPU v5e hardware constants (per the brief)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\][^\s]*)\s+([\w\-]+)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    shapes: Dict[str, int] = {}
+    per_kind = {k: 0.0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    operand_re = re.compile(r"%([\w.\-]+)")
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, type_str, _op = m.groups()
+        shapes[name] = _shape_bytes(type_str)
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        kind = next((k for k in _COLLECTIVES if op.startswith(k)), None)
+        if kind is None:
+            continue
+        count[kind] += 1
+        paren = ln[ln.index(op) + len(op):]
+        paren = paren[:paren.find(")") + 1] if ")" in paren else paren
+        ops = [o for o in operand_re.findall(paren) if o in shapes]
+        if ops:
+            per_kind[kind] += sum(shapes[o] for o in ops)
+        else:
+            # start-done pairs print operands elsewhere; fall back to result size
+            per_kind[kind] += _shape_bytes(type_str)
+    per_kind["_counts"] = count
+    return per_kind
+
+
+def roofline_terms(flops_pd: float, bytes_pd: float,
+                   coll_bytes_pd: float) -> Dict[str, float]:
+    compute = flops_pd / PEAK_FLOPS
+    memory = bytes_pd / HBM_BW
+    collective = coll_bytes_pd / ICI_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    total = max(compute, memory, collective)
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dominant,
+            "bound_s": total}
+
+
+def model_flops_train(active_params: float, tokens: float,
+                      attn_flops: float = 0.0) -> float:
+    """6*N_active*D (+ attention quadratic term), global."""
+    return 6.0 * active_params * tokens + attn_flops
+
+
+def mfu_like(model_flops_global: float, flops_pd: float, n_chips: int) -> float:
+    """MODEL_FLOPS / HLO_FLOPS: how much compiled compute is useful."""
+    total_hlo = flops_pd * n_chips
+    return model_flops_global / total_hlo if total_hlo else float("nan")

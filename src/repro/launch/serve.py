@@ -1,0 +1,89 @@
+"""Serving launcher: restore (or briefly train) a model, then run batched
+generation through the engine with FP or SoftmAP integer softmax.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
+        --softmax int --max-new 32
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.configs.registry import get_config, smoke_config
+from repro.core.precision import PrecisionConfig
+from repro.core.softmax_variants import SoftmaxSpec
+from repro.data.synthetic import SyntheticCorpus
+from repro.distributed.sharding import ShardingRules
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import Model
+from repro.serving.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--softmax", default="int", choices=["fp", "int", "fp_lowp"])
+    ap.add_argument("--M", type=int, default=6)
+    ap.add_argument("--N", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore params from a train.py checkpoint")
+    ap.add_argument("--warm-steps", type=int, default=120,
+                    help="if no checkpoint: quick-train so outputs are meaningful")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--sampler", default="greedy",
+                    choices=["greedy", "temperature"])
+    args = ap.parse_args()
+
+    spec = SoftmaxSpec(args.softmax, PrecisionConfig(M=args.M, N=args.N)) \
+        if args.softmax == "int" else SoftmaxSpec(args.softmax)
+    cfg = (smoke_config(args.arch, softmax=spec) if args.smoke
+           else get_config(args.arch, softmax=spec))
+    mesh = make_host_mesh()
+    model = Model(cfg, rules=ShardingRules(cfg.sharding_overrides), mesh=mesh)
+    corpus = SyntheticCorpus(cfg.vocab, seed=1234)
+
+    if args.ckpt_dir:
+        template, _ = model.init_split(jax.random.PRNGKey(0))
+        from repro.training.optimizer import AdamW, constant_schedule
+        from repro.training.step import TrainState, init_state
+        opt = AdamW(lr=constant_schedule(1e-3))
+        state, step, _ = ckpt.restore(
+            args.ckpt_dir, init_state(model, opt, jax.random.PRNGKey(0)))
+        params = state.params
+        print(f"restored step {step} from {args.ckpt_dir}")
+    else:
+        from repro.training.optimizer import AdamW, cosine_schedule
+        from repro.training.step import init_state, make_train_step
+        opt = AdamW(lr=cosine_schedule(1e-2, 20, args.warm_steps))
+        state = init_state(model, opt, jax.random.PRNGKey(0))
+        step_fn = jax.jit(make_train_step(model, opt))
+        for i in range(args.warm_steps):
+            state, met = step_fn(state, {
+                k: jnp.asarray(v)
+                for k, v in corpus.batch(16, 64, seed=i).items()})
+        params = state.params
+        print(f"warm-trained {args.warm_steps} steps, "
+              f"loss={float(met['loss']):.3f}")
+
+    eng = Engine(model, params, max_new=args.max_new, sampler=args.sampler)
+    prompts = corpus.sample(args.batch, args.prompt_len, seed=777)[:, :args.prompt_len]
+    res = eng.generate(prompts)
+    ok = sum(int(row[t + 1] in corpus.table[row[t]])
+             for row in res.tokens
+             for t in range(res.prompt_len - 1, res.tokens.shape[1] - 1))
+    print(f"softmax={cfg.softmax.kind}: {ok}/{args.batch * args.max_new} "
+          f"generated transitions follow the corpus chain")
+    for row in res.tokens[:2]:
+        p, g = row[:args.prompt_len].tolist(), row[args.prompt_len:].tolist()
+        print(f"  prompt {p} -> {g}")
+
+
+if __name__ == "__main__":
+    main()

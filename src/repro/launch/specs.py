@@ -1,0 +1,224 @@
+"""Dry-run cell definitions: (arch x input-shape) -> lowerable function +
+ShapeDtypeStruct inputs + NamedShardings. No device allocation anywhere."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import get_config
+from repro.data.sharding import batch_axes
+from repro.distributed.sharding import ShardingRules
+from repro.models.kv_cache import cache_axes, cache_struct
+from repro.models.model import Model
+from repro.training.optimizer import AdamW, cosine_schedule
+from repro.training.step import make_train_step
+from repro.serving.engine import make_serve_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+DEC_PROMPT = 64  # whisper decoder prompt length for prefill cells
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the cell runs; else the documented skip reason."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full attention is quadratic at 512k context; skipped per "
+                "brief (DESIGN.md §Arch-applicability)")
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_struct(cfg: ModelConfig, b: int, s: int) -> Dict:
+    batch = {"tokens": _sds((b, s), jnp.int32), "labels": _sds((b, s), jnp.int32)}
+    if cfg.rope_type == "mrope":
+        batch["positions"] = _sds((3, b, s), jnp.int32)
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def prefill_batch_struct(cfg: ModelConfig, b: int, s: int) -> Dict:
+    if cfg.family == "encdec":
+        return {"frames": _sds((b, s, cfg.d_model), jnp.bfloat16),
+                "tokens": _sds((b, DEC_PROMPT), jnp.int32)}
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.rope_type == "mrope":
+        batch["positions"] = _sds((3, b, s), jnp.int32)
+    return batch
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything jax.jit needs to lower one (arch x shape x mesh) cell."""
+    fn: object
+    args: tuple
+    in_shardings: tuple
+    donate_argnums: tuple
+    meta: dict
+
+
+def sharding_for(shape, axes, mesh, rules: ShardingRules) -> NamedSharding:
+    """NamedSharding with divisibility enforcement: explicit in_shardings
+    (unlike in-graph constraints, which GSPMD pads) require every sharded dim
+    to divide evenly — mesh axes that don't divide are dropped (right-first),
+    falling back to replication for that dim."""
+    spec = rules.spec(axes, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for i, part in enumerate(tuple(spec)):
+        if part is None:
+            fixed.append(None)
+            continue
+        names = (part,) if isinstance(part, str) else tuple(part)
+        while names:
+            prod = 1
+            for n in names:
+                prod *= sizes[n]
+            if shape[i] % prod == 0:
+                break
+            names = names[:-1]
+        fixed.append(None if not names else
+                     (names[0] if len(names) == 1 else tuple(names)))
+    from jax.sharding import PartitionSpec as P
+    while fixed and fixed[-1] is None:
+        fixed.pop()
+    return NamedSharding(mesh, P(*fixed))
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def _shardings_for(axes_tree, struct_tree, mesh, rules: ShardingRules):
+    return jax.tree.map(
+        lambda axes, s: sharding_for(s.shape, axes, mesh, rules),
+        axes_tree, struct_tree, is_leaf=_is_axes)
+
+
+def _batch_shardings(batch_struct, mesh, rules):
+    axes = batch_axes(batch_struct)
+    return {k: sharding_for(batch_struct[k].shape, axes[k], mesh, rules)
+            for k in batch_struct}
+
+
+def correction_layer_counts(cfg: ModelConfig):
+    """(L_a, L_b) for the scan-undercount linear fit (see dryrun.py): two
+    small UNROLLED lowerings isolate the per-scanned-layer cost. Hybrid keeps
+    its 3 unrolled global-attention layers in the intercept."""
+    if cfg.family == "hybrid":
+        return 5, 7
+    if cfg.family == "moe" and cfg.n_dense_prefix:
+        return cfg.n_dense_prefix + 1, cfg.n_dense_prefix + 3
+    return 1, 3
+
+
+def build_cell(arch: str, shape_name: str, mesh, remat: str = "full",
+               softmax: Optional[object] = None,
+               rules_overrides: tuple = (),
+               n_layers_override: Optional[int] = None,
+               scan_layers: bool = True,
+               cfg_overrides: Optional[dict] = None,
+               params_dtype=None,
+               grad_compress: bool = False) -> Cell:
+    cfg = get_config(arch)
+    if softmax is not None:
+        cfg = cfg.with_softmax(softmax)
+    shape = SHAPES[shape_name]
+    skip = applicable(cfg, shape)
+    if skip:
+        raise ValueError(f"cell ({arch}, {shape_name}) skipped: {skip}")
+    cfg = dataclasses.replace(cfg, remat=remat, scan_layers=scan_layers)
+    if n_layers_override is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers_override)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    rules = ShardingRules(tuple(cfg.sharding_overrides) + tuple(rules_overrides))
+    model = Model(cfg, rules=rules, mesh=mesh)
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "seq": shape.seq, "batch": shape.batch,
+            "params": cfg.param_count(), "active": cfg.active_param_count()}
+
+    params_axes = model.param_axes()
+    params_struct = params_struct_of(model)
+    if params_dtype is not None:  # e.g. bf16 serving weights
+        params_struct = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, params_dtype),
+            params_struct)
+    params_sh = _shardings_for(params_axes, params_struct, mesh, rules)
+
+    if shape.kind == "train":
+        opt = AdamW(lr=cosine_schedule(3e-4, 2000, 100_000))
+        step = make_train_step(model, opt, grad_compress=grad_compress)
+        batch = train_batch_struct(cfg, shape.batch, shape.seq)
+        from repro.training.step import TrainState
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        ef_struct = (jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+            params_struct) if grad_compress else None)
+        state_struct = TrainState(params_struct, opt_struct, ef_struct)
+        from repro.training.optimizer import AdamWState
+        state_sh = TrainState(
+            params_sh,
+            AdamWState(NamedSharding(mesh, rules.spec((), mesh)),
+                       params_sh, params_sh),
+            params_sh if grad_compress else None)
+        return Cell(step, (state_struct, batch),
+                    (state_sh, _batch_shardings(batch, mesh, rules)),
+                    (0,), meta)
+
+    if shape.kind == "prefill":
+        fn = make_serve_step(model, "prefill")
+        batch = prefill_batch_struct(cfg, shape.batch, shape.seq)
+        jfn = lambda params, b: fn(params, b, shape.seq + DEC_PROMPT)
+        return Cell(jfn, (params_struct, batch),
+                    (params_sh, _batch_shardings(batch, mesh, rules)),
+                    (), meta)
+
+    # decode
+    fn = make_serve_step(model, "decode")
+    enc_len = shape.seq if cfg.family == "encdec" else 0
+    cache = cache_struct(cfg, shape.batch, shape.seq, enc_len)
+    c_axes = cache_axes(cfg, shape.batch, shape.seq, enc_len)
+    cache_sh = jax.tree.map(
+        lambda axes, s: sharding_for(s.shape, axes, mesh, rules),
+        c_axes, cache, is_leaf=_is_axes)
+    token = _sds((shape.batch, 1), jnp.int32)
+    token_sh = sharding_for(token.shape, ("batch", None), mesh, rules)
+    pos_scalar = _sds((), jnp.int32)
+    pos_sh = NamedSharding(mesh, rules.spec((), mesh))
+    args = [params_struct, cache, token, pos_scalar]
+    shardings = [params_sh, cache_sh, token_sh, pos_sh]
+    if cfg.rope_type == "mrope":
+        pos3 = _sds((3, shape.batch, 1), jnp.int32)
+        args.append(pos3)
+        shardings.append(sharding_for(pos3.shape, (None, "batch", None),
+                                      mesh, rules))
+    return Cell(fn, tuple(args), tuple(shardings), (1,), meta)
+
+
+def params_struct_of(model: Model):
+    return jax.eval_shape(lambda k: model.init_split(k)[0],
+                          jax.random.PRNGKey(0))

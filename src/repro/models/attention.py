@@ -1,0 +1,203 @@
+"""GQA attention with a pluggable softmax — where SoftmAP enters the model.
+
+Supports: grouped KV heads (GQA/MQA), RoPE / M-RoPE / none, causal or
+sliding-window or full (encoder / cross) masking, query-chunked execution
+(bounded score memory for 32k prefill), and split-KV decode against a cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.softmax_variants import get_softmax
+from repro.models.layers import (
+    Ctx, apply_mrope, apply_rope, dense_apply, dense_init,
+)
+
+
+def attn_init(key, cfg, cross: bool = False):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * dh, ("embed", "heads"), bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, kv * dh, ("embed", "kv_heads"), bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, kv * dh, ("embed", "kv_heads"), bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], h * dh, d, ("heads", "embed")),
+    }
+
+
+def _rope(x, positions, cfg):
+    if cfg.rope_type == "none" or positions is None:
+        return x
+    if cfg.rope_type == "mrope":
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def project_qkv(p, x, cfg, ctx: Ctx, positions):
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = dense_apply(p["wq"], x, ctx).reshape(b, s, h, dh)
+    k = dense_apply(p["wk"], x, ctx).reshape(b, s, kv, dh)
+    v = dense_apply(p["wv"], x, ctx).reshape(b, s, kv, dh)
+    q = _rope(q, positions, cfg)
+    k = _rope(k, positions, cfg)
+    q = ctx.shard(q, ("batch", None, "heads", None))
+    k = ctx.shard(k, ("batch", None, "kv_heads", None))
+    v = ctx.shard(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _mask(q_pos, kv_pos, kind: str, window: int):
+    """[..., Sq, Skv] boolean mask. q_pos/kv_pos: int32 position vectors."""
+    if kind == "none":
+        return None
+    rel = q_pos[..., :, None] - kv_pos[..., None, :]
+    m = rel >= 0
+    if kind == "window":
+        m &= rel < window
+    return m
+
+
+def attend(q, k, v, mask, cfg, ctx: Ctx, scale: Optional[float] = None):
+    """q [B,Sq,H,D], k/v [B,Skv,KV,D] -> [B,Sq,H,D]. mask [B?,Sq,Skv] or None."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    scale = scale if scale is not None else dh ** -0.5
+    qg = q.reshape(b, sq, kvh, group, dh)
+    # scores: [B, KV, G, Sq, Skv]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(
+        jnp.dtype(cfg.scores_dtype)) * scale
+    scores = ctx.shard(scores, ("batch", "kv_heads", None, None, None))
+    softmax_fn = get_softmax(cfg.softmax)
+    m = None if mask is None else mask[:, None, None, :, :]
+    w = softmax_fn(scores, mask=m).astype(ctx.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, sq, h, v.shape[-1])  # v dim may differ (MLA)
+
+
+def attend_chunked(q, k, v, q_pos, kv_pos, kind, cfg, ctx: Ctx,
+                   scale: Optional[float] = None):
+    """Query-chunked attention: bounds live score memory to
+    [B, H, chunk, Skv] (the 32k-prefill enabler). Exact (full rows per chunk)."""
+    b, sq, h, dh = q.shape
+    chunk = cfg.attn_chunk
+    if chunk <= 0 or sq <= chunk or sq % chunk != 0:
+        mask = _mask(q_pos, kv_pos, kind, cfg.window)
+        return attend(q, k, v, mask, cfg, ctx, scale)
+    n = sq // chunk
+    qc = q.reshape(b, n, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    pc = q_pos.reshape(q_pos.shape[0], n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        qi, pi = xs
+        mask = _mask(pi, kv_pos, kind, cfg.window)
+        return carry, attend(qi, k, v, mask, cfg, ctx, scale)
+
+    _, out = jax.lax.scan(body, None, (qc, pc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, out.shape[-1])
+
+
+def attn_apply(p, x, cfg, ctx: Ctx, positions, kind: str = "causal"):
+    """Training / prefill self-attention. kind: causal | window | none."""
+    b, s, _ = x.shape
+    q, k, v = project_qkv(p, x, cfg, ctx, positions)
+    pos = positions[0] if cfg.rope_type == "mrope" else positions
+    out = attend_chunked(q, k, v, pos, pos, kind, cfg, ctx)
+    out = ctx.shard(out, ("batch", None, "heads", None))
+    return dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+
+
+def kv_quantize(x):
+    """bf16 [B, S, KV, D] -> (int8 codes, per-(position, head) f32 scale).
+    Symmetric absmax over the head dim — the integer theme of the paper
+    carried into the serving cache (int8 KV halves decode HBM traffic, the
+    dominant roofline term of every decode cell)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return codes.astype(jnp.int8), scale[..., 0]
+
+
+def kv_dequantize(codes, scale, dtype):
+    return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attn_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
+                kind: str = "causal"):
+    """Single-token decode. cache: {"k","v"} [B, L, KV, D] (kv_seq-sharded:
+    split-KV / flash-decoding style), optionally int8-quantized with
+    per-(position, head) scales ({"k_scale","v_scale"} present).
+    cache_pos: scalar int32 current length."""
+    b, s, _ = x.shape  # s == 1
+    q, k_new, v_new = project_qkv(p, x, cfg, ctx, positions)
+    quant = "k_scale" in cache
+    if quant:
+        kq, ks = kv_quantize(k_new)
+        vq, vs = kv_quantize(v_new)
+        k_codes = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, cache_pos, axis=1)
+        v_codes = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, cache_pos, axis=1)
+        k_sc = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, cache_pos, axis=1)
+        v_sc = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, cache_pos, axis=1)
+        k = kv_dequantize(k_codes, k_sc, ctx.dtype)
+        v = kv_dequantize(v_codes, v_sc, ctx.dtype)
+        new_cache = {"k": k_codes, "v": v_codes, "k_scale": k_sc, "v_scale": v_sc}
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), cache_pos, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), cache_pos, axis=1)
+        new_cache = {"k": k, "v": v}
+    k = ctx.shard(k, ("batch", "kv_seq", None, None))
+    v = ctx.shard(v, ("batch", "kv_seq", None, None))
+    l_max = k.shape[1]
+    kv_pos = jnp.arange(l_max, dtype=jnp.int32)[None, :]
+    valid = kv_pos <= cache_pos
+    if kind == "window":
+        valid &= kv_pos > cache_pos - cfg.window
+    mask = jnp.broadcast_to(valid[:, None, :], (b, 1, l_max))
+    out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
+    y = dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+    return y, new_cache
+
+
+def attn_decode_ring(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
+                     window: int):
+    """Ring-buffer decode for sliding-window layers (and full layers when the
+    ring capacity >= max_seq): cache {"k","v":[B,W,KV,D], "pos":[W]}; the write
+    slot is cache_pos % W and validity is derived from stored absolute
+    positions. RoPE is applied at write time (absolute), so relative geometry
+    is preserved across wraps."""
+    b, s, _ = x.shape  # s == 1
+    q, k_new, v_new = project_qkv(p, x, cfg, ctx, positions)
+    w_cap = cache["k"].shape[1]
+    slot = jax.lax.rem(cache_pos, w_cap)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    pos_buf = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], cache_pos[None].astype(cache["pos"].dtype), slot, axis=0)
+    valid = (pos_buf >= 0) & (pos_buf <= cache_pos) & (pos_buf > cache_pos - window)
+    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, w_cap))
+    out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
+    y = dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+    return y, {"k": k, "v": v, "pos": pos_buf}
+
+
+def attn_cross(p, x, enc_k, enc_v, cfg, ctx: Ctx):
+    """Cross-attention (Whisper decoder): K/V precomputed from encoder."""
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = dense_apply(p["wq"], x, ctx).reshape(b, s, h, dh)
+    q = ctx.shard(q, ("batch", None, "heads", None))
+    out = attend(q, enc_k, enc_v, None, cfg, ctx)
+    return dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+
+
+def cross_kv(p, enc_out, cfg, ctx: Ctx):
+    b, s, _ = enc_out.shape
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    k = dense_apply(p["wk"], enc_out, ctx).reshape(b, s, kv, dh)
+    v = dense_apply(p["wv"], enc_out, ctx).reshape(b, s, kv, dh)
+    return k, v

@@ -1,0 +1,69 @@
+"""Hymba-style hybrid block  [arXiv:2411.13676].
+
+Each layer runs attention heads and Mamba(SSD) heads **in parallel** on the
+same normalized input; each path's output is RMS-normalized and the two are
+averaged before the residual add. Most layers use sliding-window attention;
+layers {0, mid, last} use full ("global") attention — the stack in
+transformer.py unrolls those three and scans the window segments.
+
+(Deviation noted in DESIGN.md: Hymba's cross-layer KV sharing and meta tokens
+are not modeled; the parallel-heads + mostly-window structure — what makes the
+arch sub-quadratic and long_500k-servable — is.)
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.attention import attn_apply, attn_decode, attn_decode_ring, attn_init
+from repro.models.layers import Ctx, mlp_apply, mlp_init, norm_apply, norm_init
+from repro.models.ssm import ssm_apply, ssm_decode, ssm_init
+
+
+def hybrid_block_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.norm),
+        "attn": attn_init(ks[0], cfg),
+        "ssm": ssm_init(ks[1], cfg),
+        "attn_norm": norm_init(cfg.d_model, "rmsnorm"),
+        "ssm_norm": norm_init(cfg.d_model, "rmsnorm"),
+        "norm2": norm_init(cfg.d_model, cfg.norm),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def hybrid_block_apply(p, x, cfg, ctx: Ctx, positions, kind: str):
+    """kind: "causal" (global layer) or "window"."""
+    h = norm_apply(p["norm1"], x, cfg.norm, ctx)
+    a = attn_apply(p["attn"], h, cfg, ctx, positions, kind=kind)
+    s = ssm_apply(p["ssm"], h, cfg, ctx)
+    fused = 0.5 * (norm_apply(p["attn_norm"], a, "rmsnorm", ctx)
+                   + norm_apply(p["ssm_norm"], s, "rmsnorm", ctx))
+    x = x + fused
+    x = x + mlp_apply(p["mlp"], norm_apply(p["norm2"], x, cfg.norm, ctx), cfg.act, ctx)
+    return x
+
+
+def hybrid_block_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
+                        kind: str):
+    h = norm_apply(p["norm1"], x, cfg.norm, ctx)
+    if kind == "window":
+        a, attn_cache = attn_decode_ring(
+            p["attn"], h, cache["attn"], cache_pos, cfg, ctx, positions, cfg.window)
+    else:
+        a, attn_cache = attn_decode(
+            p["attn"], h, cache["attn"], cache_pos, cfg, ctx, positions)
+    s, ssm_cache = ssm_decode(p["ssm"], h, cache["ssm"], cfg, ctx)
+    fused = 0.5 * (norm_apply(p["attn_norm"], a, "rmsnorm", ctx)
+                   + norm_apply(p["ssm_norm"], s, "rmsnorm", ctx))
+    x = x + fused
+    x = x + mlp_apply(p["mlp"], norm_apply(p["norm2"], x, cfg.norm, ctx), cfg.act, ctx)
+    return x, {"attn": attn_cache, "ssm": ssm_cache}
+
+
+def full_attn_layer_ids(cfg):
+    """Hymba rule: global attention at first / middle / last layer."""
+    if cfg.full_attn_every:
+        return tuple(range(0, cfg.n_layers, cfg.full_attn_every))
+    return (0, cfg.n_layers // 2, cfg.n_layers - 1)

@@ -1,0 +1,126 @@
+"""Decode-cache structure per architecture family.
+
+``cache_struct`` returns a ShapeDtypeStruct pytree (dry-run inputs, no
+allocation); ``cache_axes`` returns the matching logical-axes pytree (sharding
+derivation); ``cache_zeros`` materializes zeros (serving engine / tests).
+
+Layouts:
+  dense/moe/vlm : {"k","v": [L, B, C, KV, Dh]}            split-KV over "kv_seq"
+  mla           : {"c_kv": [L,B,C,r], "k_rope": [L,B,C,dr]}  latent cache
+  ssm           : {"state": [L,B,H,P,N], "conv": [L,B,k-1,Cd]}  O(1) in context
+  hybrid        : full/win segments of {attn: ring-or-full, ssm: state}
+  encdec        : {"self": ..., "cross": [L,B,S_enc,KV,Dh]}
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.hybrid import full_attn_layer_ids
+
+KV_DTYPE = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _attn_cache(make, L, b, c, cfg):
+    if getattr(cfg, "kv_quant", False) and cfg.family != "encdec":
+        import jax.numpy as _jnp
+        return {"k": make((L, b, c, cfg.n_kv_heads, cfg.d_head), _jnp.int8),
+                "v": make((L, b, c, cfg.n_kv_heads, cfg.d_head), _jnp.int8),
+                "k_scale": make((L, b, c, cfg.n_kv_heads), _jnp.float32),
+                "v_scale": make((L, b, c, cfg.n_kv_heads), _jnp.float32)}
+    return {"k": make((L, b, c, cfg.n_kv_heads, cfg.d_head), KV_DTYPE),
+            "v": make((L, b, c, cfg.n_kv_heads, cfg.d_head), KV_DTYPE)}
+
+
+def _ring_cache(make, L, b, w, cfg):
+    d = _attn_cache(make, L, b, w, cfg)
+    d["pos"] = make((L, w), jnp.int32)
+    return d
+
+
+def _ssm_cache(make, L, b, cfg):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "state": make((L, b, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32),
+        "conv": make((L, b, cfg.ssm_conv - 1, conv_dim), KV_DTYPE),
+    }
+
+
+def hybrid_segments(cfg):
+    """(n_full, len_win_a, len_win_b) for the unroll/scan/unroll/scan/unroll split."""
+    first, mid, last = full_attn_layer_ids(cfg)
+    return (mid - first - 1, last - mid - 1)
+
+
+def _build(cfg, batch: int, cache_len: int, enc_len: int, make):
+    L, b, c = cfg.n_layers, batch, cache_len
+    if cfg.family == "ssm":
+        return _ssm_cache(make, L, b, cfg)
+    if cfg.family == "hybrid":
+        wa, wb = hybrid_segments(cfg)
+        w = min(cfg.window, c)
+        seg = lambda n, full: {
+            "attn": (_attn_cache(make, n, b, c, cfg) if full
+                     else _ring_cache(make, n, b, w, cfg)),
+            "ssm": _ssm_cache(make, n, b, cfg)}
+        return {"full": seg(3, True), "win_a": seg(wa, False),
+                "win_b": seg(wb, False)}
+    if cfg.family == "encdec":
+        return {"self": _attn_cache(make, L, b, c, cfg),
+                "cross": _attn_cache(make, L, b, enc_len, cfg)}
+    if cfg.attention == "mla":
+        return {"c_kv": make((L, b, c, cfg.kv_lora_rank), KV_DTYPE),
+                "k_rope": make((L, b, c, cfg.qk_rope_dim), KV_DTYPE)}
+    return _attn_cache(make, L, b, c, cfg)
+
+
+def cache_struct(cfg, batch: int, cache_len: int, enc_len: int = 0):
+    return _build(cfg, batch, cache_len, enc_len, _sds)
+
+
+def cache_zeros(cfg, batch: int, cache_len: int, enc_len: int = 0):
+    def mk(shape, dtype):
+        if dtype == jnp.int32:  # ring position buffers start at -1 (empty)
+            return jnp.full(shape, -1, dtype)
+        return jnp.zeros(shape, dtype)
+    return _build(cfg, batch, cache_len, enc_len, mk)
+
+
+def cache_axes(cfg, batch: int, cache_len: int, enc_len: int = 0):
+    """Logical axes tree matching cache_struct (for dry-run in_shardings)."""
+    def axes_for(shape, dtype):
+        rank = len(shape)
+        if rank == 5:   # [L, B, C, KV, Dh] attention cache -> split-KV
+            return ("stacked", "batch", "kv_seq", None, None)
+        if rank == 4 and shape[-1] == cfg.n_kv_heads and \
+                getattr(cfg, "kv_quant", False):  # kv scales [L,B,C,KV]
+            return ("stacked", "batch", "kv_seq", None)
+        if rank == 4 and shape[-1] in (cfg.kv_lora_rank, cfg.qk_rope_dim) \
+                and cfg.attention == "mla" and cfg.family != "hybrid":
+            return ("stacked", "batch", "kv_seq", None)
+        if rank == 4:   # conv cache [L,B,k-1,Cd]
+            return ("stacked", "batch", None, "heads")
+        if rank == 2:   # ring pos [L, W]
+            return ("stacked", None)
+        return ("stacked", "batch") + (None,) * (rank - 2)
+
+    struct = cache_struct(cfg, batch, cache_len, enc_len)
+    tree = jax.tree.map(lambda s: axes_for(s.shape, s.dtype), struct)
+    if cfg.family in ("ssm", "hybrid"):
+        # SSM state [L,B,H,P,N]: shard heads, not seq (there is no seq)
+        def fix(path_axes):
+            return path_axes
+        def set_state(d):
+            d["state"] = ("stacked", "batch", "heads", None, None)
+        if cfg.family == "ssm":
+            set_state(tree)
+        else:
+            for seg in ("full", "win_a", "win_b"):
+                set_state(tree[seg]["ssm"])
+    return tree

@@ -1,0 +1,177 @@
+"""Model substrate: parameter infrastructure + common layers.
+
+Parameters are created as ``Param(value, logical_axes)`` leaves; ``split_tree``
+separates them into a value pytree (what jit sees) and a logical-axes pytree
+(what pjit shardings are derived from). Every layer apply takes a ``Ctx``
+carrying the sharding rules, the (optional) concrete mesh, and compute dtype —
+models never name mesh axes directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules, logical_constraint
+
+
+class Param(NamedTuple):
+    value: jax.Array
+    axes: Tuple[Optional[str], ...]
+
+
+# Registered as a pytree node with ``axes`` as static aux data so that
+# jax.eval_shape(init) yields Param(ShapeDtypeStruct, axes) — this is how the
+# dry-run derives full-scale parameter shardings without allocating anything.
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: Param(children[0], axes),
+)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_tree(tree):
+    """Param tree -> (values, logical_axes)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: tuple(p.axes), tree, is_leaf=is_param)
+    return values, axes
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    rules: Optional[ShardingRules] = None
+    mesh: Optional[object] = None
+    dtype: jnp.dtype = jnp.bfloat16
+
+    def shard(self, x, logical_axes: Sequence[Optional[str]]):
+        return logical_constraint(x, logical_axes, self.rules, self.mesh)
+
+    def cast(self, x):
+        return x.astype(self.dtype)
+
+
+# ---------------------------------------------------------------- primitives
+
+
+def dense_init(key, d_in: int, d_out: int, axes, bias: bool = False,
+               scale: float = 1.0):
+    std = scale / (d_in ** 0.5)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * std
+    p = {"w": Param(w, tuple(axes))}
+    if bias:
+        p["b"] = Param(jnp.zeros((d_out,), jnp.float32), (axes[-1],))
+    return p
+
+
+def dense_apply(p, x, ctx: Ctx):
+    y = x @ ctx.cast(p["w"])
+    if "b" in p:
+        y = y + ctx.cast(p["b"])
+    return y
+
+
+def norm_init(d: int, kind: str):
+    if kind == "layernorm_np":       # OLMo: non-parametric LayerNorm
+        return {}
+    if kind == "layernorm":
+        return {"scale": Param(jnp.ones((d,), jnp.float32), ("embed",)),
+                "bias": Param(jnp.zeros((d,), jnp.float32), ("embed",))}
+    return {"scale": Param(jnp.ones((d,), jnp.float32), ("embed",))}
+
+
+def norm_apply(p, x, kind: str, ctx: Ctx, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        y = y * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int):
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return {"w": Param(w, ("vocab", "embed"))}
+
+
+def embed_apply(p, tokens, ctx: Ctx):
+    return ctx.cast(jnp.take(p["w"], tokens, axis=0))
+
+
+def embed_logits(p, x, ctx: Ctx):
+    """Tied read-out: x @ E^T."""
+    return x @ ctx.cast(p["w"]).T
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp_init(key, d: int, d_ff: int, act: str = "silu"):
+    """Gated (GLU) MLP a la LLaMA/Qwen: gate & up [d, ff], down [ff, d]."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, d_ff, ("embed", "mlp")),
+        "up": dense_init(k2, d, d_ff, ("embed", "mlp")),
+        "down": dense_init(k3, d_ff, d, ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p, x, act: str, ctx: Ctx):
+    h = act_fn(act)(dense_apply(p["gate"], x, ctx)) * dense_apply(p["up"], x, ctx)
+    h = ctx.shard(h, ("batch", None, "mlp"))
+    return dense_apply(p["down"], h, ctx)
+
+
+# ---------------------------------------------------------------- rotary
+
+
+def rope_freqs(d_half: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_half, dtype=jnp.float32) / d_half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d_half = x.shape[-1] // 2
+    freqs = rope_freqs(d_half, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :d_half], x[..., d_half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions, theta: float, sections: Tuple[int, ...]):
+    """Multimodal RoPE (Qwen2-VL): positions [3, ..., S] (t/h/w); the D/2
+    frequency bands are split across the three position streams."""
+    d_half = x.shape[-1] // 2
+    assert sum(sections) == d_half, (sections, d_half)
+    freqs = rope_freqs(d_half, theta)
+    angs = positions[..., None].astype(jnp.float32) * freqs  # [3, ..., S, D/2]
+    pieces, start = [], 0
+    for i, sec in enumerate(sections):
+        pieces.append(angs[i, ..., start:start + sec])
+        start += sec
+    ang = jnp.concatenate(pieces, axis=-1)[..., None, :]     # [..., S, 1, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :d_half], x[..., d_half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positions_for(cfg, tokens_shape, offset=0):
+    """Default position ids: [B, S] iota (+offset for decode)."""
+    b, s = tokens_shape
+    return offset + jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)

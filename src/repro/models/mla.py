@@ -1,0 +1,110 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+Prefill/train: latents are up-projected to full per-head K/V and attention runs
+like MHA (group=1), reusing the pluggable-softmax ``attend_chunked``.
+
+Decode: the **absorbed** formulation — W_uk folds into the query and W_uv into
+the output, so attention runs directly against the cached latent c_kv
+[B, L, r] plus the shared rope key [B, L, dr]. The cache is r+dr per token
+instead of 2*H*dh (the whole point of MLA), and the decode einsums contract
+over the latent rank.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.softmax_variants import get_softmax
+from repro.models.attention import attend_chunked
+from repro.models.layers import Ctx, apply_rope, dense_apply, dense_init, norm_init, norm_apply
+
+
+def mla_init(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    r, dr, dn, dv = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    if cfg.q_lora_rank:
+        p["wdq"] = dense_init(ks[0], d, cfg.q_lora_rank, ("embed", "kv_lora"))
+        p["q_norm"] = norm_init(cfg.q_lora_rank, "rmsnorm")
+        p["wuq"] = dense_init(ks[1], cfg.q_lora_rank, h * (dn + dr), ("kv_lora", "heads"))
+    else:
+        p["wq"] = dense_init(ks[1], d, h * (dn + dr), ("embed", "heads"))
+    p["wdkv"] = dense_init(ks[2], d, r, ("embed", "kv_lora"))
+    p["kv_norm"] = norm_init(r, "rmsnorm")
+    p["wkr"] = dense_init(ks[3], d, dr, ("embed", None))
+    p["wuk"] = dense_init(ks[4], r, h * dn, ("kv_lora", "heads"))
+    p["wuv"] = dense_init(ks[5], r, h * dv, ("kv_lora", "heads"))
+    p["wo"] = dense_init(ks[6], h * dv, d, ("heads", "embed"))
+    return p
+
+
+def _queries(p, x, cfg, ctx, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        ql = norm_apply(p["q_norm"], dense_apply(p["wdq"], x, ctx), "rmsnorm", ctx)
+        q = dense_apply(p["wuq"], ql, ctx)
+    else:
+        q = dense_apply(p["wq"], x, ctx)
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return ctx.shard(q_nope, ("batch", None, "heads", None)), \
+        ctx.shard(q_rope, ("batch", None, "heads", None))
+
+
+def _latents(p, x, cfg, ctx, positions):
+    c_kv = norm_apply(p["kv_norm"], dense_apply(p["wdkv"], x, ctx), "rmsnorm", ctx)
+    k_rope = dense_apply(p["wkr"], x, ctx)[:, :, None, :]      # [B,S,1,dr]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_apply(p, x, cfg, ctx: Ctx, positions, kind: str = "causal"):
+    """Train / prefill path: up-project latents, run full attention."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(p, x, cfg, ctx, positions)
+    c_kv, k_rope = _latents(p, x, cfg, ctx, positions)
+    k_nope = dense_apply(p["wuk"], c_kv, ctx).reshape(b, s, h, dn)
+    v = dense_apply(p["wuv"], c_kv, ctx).reshape(b, s, h, dv)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = ctx.shard(k, ("batch", None, "heads", None))
+    v = ctx.shard(v, ("batch", None, "heads", None))
+    scale = (dn + dr) ** -0.5
+    out = attend_chunked(q, k, v, positions, positions, kind, cfg, ctx, scale)
+    return dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+
+
+def mla_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
+    """Absorbed decode against the latent cache {"c_kv":[B,L,r], "k_rope":[B,L,dr]}."""
+    b, s, _ = x.shape  # s == 1
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    q_nope, q_rope = _queries(p, x, cfg, ctx, positions)
+    c_new, kr_new = _latents(p, x, cfg, ctx, positions)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), cache_pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new[:, :, 0].astype(cache["k_rope"].dtype), cache_pos, axis=1)
+    c_kv = ctx.shard(c_kv, ("batch", "kv_seq", None))
+    k_rope = ctx.shard(k_rope, ("batch", "kv_seq", None))
+    # absorb W_uk into q: q_lat [B,1,H,r]
+    wuk = ctx.cast(p["wuk"]["w"]).reshape(r, h, dn)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wuk)
+    scores = jnp.einsum("bqhr,blr->bhql", q_lat, ctx.cast(c_kv))
+    scores = scores + jnp.einsum("bqhd,bld->bhql", q_rope, ctx.cast(k_rope))
+    scores = scores.astype(jnp.float32) * ((dn + dr) ** -0.5)
+    scores = ctx.shard(scores, ("batch", "heads", None, "kv_seq"))
+    l_max = c_kv.shape[1]
+    valid = jnp.arange(l_max, dtype=jnp.int32)[None, :] <= cache_pos
+    mask = jnp.broadcast_to(valid[:, None, None, :], scores.shape)
+    w = get_softmax(cfg.softmax)(scores, mask=mask).astype(ctx.dtype)
+    o_lat = jnp.einsum("bhql,blr->bqhr", w, ctx.cast(c_kv))
+    wuv = ctx.cast(p["wuv"]["w"]).reshape(r, h, dv)
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wuv)
+    y = dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,332 @@
+"""Model facade: init / train-logits / prefill / decode for every family.
+
+The facade owns embedding + stack orchestration + final norm + LM head and
+hides family differences behind three entry points:
+
+  train_logits(params, batch)              -> (logits, aux_loss)
+  prefill(params, inputs, cache_len)       -> (last_logits, cache)
+  decode_step(params, cache, inputs, pos)  -> (logits, cache)
+
+Batch contracts (all int32 tokens):
+  lm families : {"tokens": [B,S]}   (+ "positions": [3,B,S] for M-RoPE/VLM,
+                 + optional "embeds_override" [B,S,d], "override_mask" [B,S])
+  encdec      : {"frames": [B,Se,d] (stub frontend output), "tokens": [B,Sd]}
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models import transformer as tfm
+from repro.models.hybrid import full_attn_layer_ids
+from repro.models.kv_cache import hybrid_segments
+from repro.models.layers import (
+    Ctx, Param, dense_apply, dense_init, embed_apply, embed_init, embed_logits,
+    is_param, norm_apply, norm_init, positions_for, split_tree,
+)
+
+
+def _sinusoid(length: int, d: int):
+    pos = np.arange(length)[:, None]
+    div = np.exp(np.arange(0, d, 2) / d * -np.log(10000.0))
+    table = np.zeros((length, d), np.float32)
+    table[:, 0::2] = np.sin(pos * div)
+    table[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(table)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, rules: Optional[ShardingRules] = None,
+                 mesh=None, dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.ctx = Ctx(rules=rules, mesh=mesh, dtype=dtype)
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        p = {"embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+             "final_norm": norm_init(cfg.d_model, cfg.norm)}
+        if not cfg.tie_embeddings:
+            p["head"] = dense_init(ks[1], cfg.d_model, cfg.vocab,
+                                   ("embed", "vocab"))
+        if cfg.family == "encdec":
+            L = cfg.n_layers
+            p["pos_embed"] = Param(
+                jax.random.normal(ks[2], (cfg.max_seq, cfg.d_model),
+                                  jnp.float32) * 0.01, (None, "embed"))
+            p["enc_stack"] = tfm.stacked_init(ks[3], cfg, L, "dense")
+            p["enc_final_norm"] = norm_init(cfg.d_model, cfg.norm)
+            keys = jax.random.split(ks[4], L)
+            dec = jax.vmap(lambda k: tfm.dec_block_init(k, cfg))(keys)
+            p["dec_stack"] = jax.tree.map(
+                lambda q: Param(q.value, ("stacked",) + tuple(q.axes)),
+                dec, is_leaf=is_param)
+            return p
+        p["stack"] = self._stack_init(ks[3])
+        return p
+
+    def _stack_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        if cfg.family == "ssm":
+            return {"layers": tfm.stacked_init(ks[0], cfg, cfg.n_layers, "ssm")}
+        if cfg.family == "hybrid":
+            wa, wb = hybrid_segments(cfg)
+            return {"full": tfm.stacked_init(ks[0], cfg, 3, "hybrid_full"),
+                    "win_a": tfm.stacked_init(ks[1], cfg, wa, "hybrid_win"),
+                    "win_b": tfm.stacked_init(ks[2], cfg, wb, "hybrid_win")}
+        if cfg.family == "moe":
+            p = {"layers": tfm.stacked_init(
+                ks[0], cfg, cfg.n_layers - cfg.n_dense_prefix, "moe")}
+            if cfg.n_dense_prefix:
+                p["prefix"] = tfm.stacked_init(ks[1], cfg, cfg.n_dense_prefix,
+                                               "dense")
+            return p
+        return {"layers": tfm.stacked_init(ks[0], cfg, cfg.n_layers, "dense")}
+
+    def param_axes(self, key=None):
+        """Logical-axes pytree via eval_shape — no allocation at any scale."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        shapes = jax.eval_shape(self.init, key)
+        _, axes = split_tree(shapes)
+        return axes
+
+    def init_split(self, key):
+        return split_tree(self.init(key))
+
+    # ------------------------------------------------------------- embedding
+
+    def _embed(self, p, batch):
+        cfg, ctx = self.cfg, self.ctx
+        x = embed_apply(p["embed"], batch["tokens"], ctx)
+        if "embeds_override" in batch:  # VLM stub: precomputed patch embeds
+            ov = ctx.cast(batch["embeds_override"])
+            x = jnp.where(batch["override_mask"][..., None], ov, x)
+        return ctx.shard(x, ("batch", None, None))
+
+    def _positions(self, batch, shape, offset=0):
+        cfg = self.cfg
+        if cfg.rope_type == "mrope":
+            return batch["positions"]
+        return positions_for(cfg, shape, offset)
+
+    def _head(self, p, x):
+        cfg, ctx = self.cfg, self.ctx
+        x = norm_apply(p["final_norm"], x, cfg.norm, ctx)
+        if cfg.tie_embeddings:
+            logits = embed_logits(p["embed"], x, ctx)
+        else:
+            logits = dense_apply(p["head"], x, ctx)
+        logits = ctx.shard(logits, ("batch", None, "vocab"))
+        return logits.astype(jnp.dtype(cfg.logits_dtype))
+
+    # ---------------------------------------------------------------- train
+
+    def train_logits(self, p, batch):
+        cfg, ctx = self.cfg, self.ctx
+        if cfg.family == "encdec":
+            return self._encdec_logits(p, batch)
+        x = self._embed(p, batch)
+        positions = self._positions(batch, batch["tokens"].shape)
+        x, aux = self._stack_apply(p["stack"], x, positions)
+        return self._head(p, x), aux
+
+    def _stack_apply(self, sp, x, positions):
+        cfg, ctx = self.cfg, self.ctx
+        if cfg.family == "ssm":
+            return tfm.scan_apply(sp["layers"], x, cfg, ctx, positions, "ssm")
+        if cfg.family == "hybrid":
+            return self._hybrid_apply(sp, x, positions)
+        aux = 0.0
+        if cfg.family == "moe" and "prefix" in sp:
+            x, a = tfm.scan_apply(sp["prefix"], x, cfg, ctx, positions, "dense")
+            aux += a
+        kind = "moe" if cfg.family == "moe" else "dense"
+        x, a = tfm.scan_apply(sp["layers"], x, cfg, ctx, positions, kind)
+        return x, aux + a
+
+    def _hybrid_apply(self, sp, x, positions):
+        cfg, ctx = self.cfg, self.ctx
+        take = lambda t, i: jax.tree.map(lambda q: q[i], t)
+        x, _ = tfm.scan_apply(take(sp["full"], slice(0, 1)), x, cfg, ctx,
+                              positions, "hybrid_full")
+        x, _ = tfm.scan_apply(sp["win_a"], x, cfg, ctx, positions, "hybrid_win")
+        x, _ = tfm.scan_apply(take(sp["full"], slice(1, 2)), x, cfg, ctx,
+                              positions, "hybrid_full")
+        x, _ = tfm.scan_apply(sp["win_b"], x, cfg, ctx, positions, "hybrid_win")
+        x, _ = tfm.scan_apply(take(sp["full"], slice(2, 3)), x, cfg, ctx,
+                              positions, "hybrid_full")
+        return x, 0.0
+
+    def _encdec_logits(self, p, batch):
+        cfg, ctx = self.cfg, self.ctx
+        enc = self._encode(p, batch["frames"])
+        x = self._dec_embed(p, batch["tokens"], 0)
+        positions = positions_for(cfg, batch["tokens"].shape)
+
+        def body(carry, layer_p):
+            return tfm.dec_block_apply(layer_p, carry, enc, cfg, ctx,
+                                       positions), 0.0
+
+        body = tfm._remat(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, p["dec_stack"])
+        return self._head(p, x), 0.0
+
+    def _encode(self, p, frames):
+        cfg, ctx = self.cfg, self.ctx
+        x = ctx.cast(frames) + ctx.cast(_sinusoid(frames.shape[1], cfg.d_model))
+        x = ctx.shard(x, ("batch", None, None))
+        positions = positions_for(cfg, frames.shape[:2])
+        x, _ = tfm.scan_apply(p["enc_stack"], x, cfg, ctx, positions, "dense",
+                              attn_kind="none")
+        return norm_apply(p["enc_final_norm"], x, cfg.norm, ctx)
+
+    def _dec_embed(self, p, tokens, offset):
+        cfg, ctx = self.cfg, self.ctx
+        x = embed_apply(p["embed"], tokens, ctx)
+        pos = offset + jnp.arange(tokens.shape[1])
+        x = x + ctx.cast(jnp.take(p["pos_embed"], pos, axis=0))
+        return ctx.shard(x, ("batch", None, None))
+
+    # -------------------------------------------------------------- serving
+
+    def prefill(self, p, batch, cache_len: int):
+        cfg, ctx = self.cfg, self.ctx
+        if cfg.family == "encdec":
+            enc = self._encode(p, batch["frames"])
+            x = self._dec_embed(p, batch["tokens"], 0)
+            positions = positions_for(cfg, batch["tokens"].shape)
+
+            def body(carry, layer_p):
+                return tfm.dec_block_prefill(layer_p, carry, enc, cfg, ctx,
+                                             positions, cache_len)
+
+            x, caches = jax.lax.scan(body, x, p["dec_stack"])
+            return self._head(p, x[:, -1:]), caches
+        x = self._embed(p, batch)
+        positions = self._positions(batch, batch["tokens"].shape)
+        x, cache = self._stack_prefill(p["stack"], x, positions, cache_len)
+        return self._head(p, x[:, -1:]), cache
+
+    def _stack_prefill(self, sp, x, positions, cache_len):
+        cfg, ctx = self.cfg, self.ctx
+        if cfg.family == "ssm":
+            return tfm.scan_prefill(sp["layers"], x, cfg, ctx, positions,
+                                    "ssm", cache_len)
+        if cfg.family == "hybrid":
+            take = lambda t, i: jax.tree.map(lambda q: q[i], t)
+            caches = {}
+            x, c0 = tfm.scan_prefill(take(sp["full"], slice(0, 1)), x, cfg, ctx,
+                                     positions, "hybrid_full", cache_len)
+            x, ca = tfm.scan_prefill(sp["win_a"], x, cfg, ctx, positions,
+                                     "hybrid_win", cache_len)
+            x, c1 = tfm.scan_prefill(take(sp["full"], slice(1, 2)), x, cfg, ctx,
+                                     positions, "hybrid_full", cache_len)
+            x, cb = tfm.scan_prefill(sp["win_b"], x, cfg, ctx, positions,
+                                     "hybrid_win", cache_len)
+            x, c2 = tfm.scan_prefill(take(sp["full"], slice(2, 3)), x, cfg, ctx,
+                                     positions, "hybrid_full", cache_len)
+            full = jax.tree.map(lambda a, b, c: jnp.concatenate([a, b, c], 0),
+                                c0, c1, c2)
+            return x, {"full": full, "win_a": ca, "win_b": cb}
+        if cfg.family == "moe":
+            caches = []
+            if "prefix" in sp:
+                x, cpre = tfm.scan_prefill(sp["prefix"], x, cfg, ctx, positions,
+                                           "dense", cache_len)
+                caches.append(cpre)
+            x, cmain = tfm.scan_prefill(sp["layers"], x, cfg, ctx, positions,
+                                        "moe", cache_len)
+            caches.append(cmain)
+            if len(caches) == 1:
+                return x, caches[0]
+            return x, jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], 0), caches[0], caches[1])
+        x, cache = tfm.scan_prefill(sp["layers"], x, cfg, ctx, positions,
+                                    "dense", cache_len)
+        return x, cache
+
+    def decode_step(self, p, cache, batch, cache_pos):
+        """batch: {"token": [B,1]} (+ "positions" [3,B,1] for mrope).
+        cache_pos: scalar int32 — current filled length."""
+        cfg, ctx = self.cfg, self.ctx
+        if cfg.family == "encdec":
+            x = self._dec_embed(p, batch["token"], cache_pos)
+            positions = cache_pos + jnp.zeros(
+                (batch["token"].shape[0], 1), jnp.int32)
+
+            def body(carry, xs):
+                layer_p, c = xs
+                y, nc = tfm.dec_block_decode(layer_p, carry, c, cache_pos, cfg,
+                                             ctx, positions)
+                return y, nc
+
+            x, new_cache = jax.lax.scan(body, x, (p["dec_stack"], cache))
+            return self._head(p, x), new_cache
+        x = self._embed(p, {"tokens": batch["token"], **{
+            k: v for k, v in batch.items() if k != "token"}})
+        if cfg.rope_type == "mrope":
+            positions = batch["positions"]
+        else:
+            positions = cache_pos + jnp.zeros(
+                (batch["token"].shape[0], 1), jnp.int32)
+        x, new_cache = self._stack_decode(p["stack"], cache, x, positions,
+                                          cache_pos)
+        return self._head(p, x), new_cache
+
+    def _stack_decode(self, sp, cache, x, positions, cache_pos):
+        cfg, ctx = self.cfg, self.ctx
+        if cfg.family == "ssm":
+            x, nc = tfm.scan_decode(sp["layers"], cache, x, cache_pos, cfg, ctx,
+                                    positions, "ssm")
+            return x, nc
+        if cfg.family == "hybrid":
+            take = lambda t, i: jax.tree.map(lambda q: q[i], t)
+            new_full = []
+            x, nf = tfm.scan_decode(take(sp["full"], slice(0, 1)),
+                                    take(cache["full"], slice(0, 1)), x,
+                                    cache_pos, cfg, ctx, positions, "hybrid_full")
+            new_full.append(nf)
+            x, ca = tfm.scan_decode(sp["win_a"], cache["win_a"], x, cache_pos,
+                                    cfg, ctx, positions, "hybrid_win")
+            x, nf = tfm.scan_decode(take(sp["full"], slice(1, 2)),
+                                    take(cache["full"], slice(1, 2)), x,
+                                    cache_pos, cfg, ctx, positions, "hybrid_full")
+            new_full.append(nf)
+            x, cb = tfm.scan_decode(sp["win_b"], cache["win_b"], x, cache_pos,
+                                    cfg, ctx, positions, "hybrid_win")
+            x, nf = tfm.scan_decode(take(sp["full"], slice(2, 3)),
+                                    take(cache["full"], slice(2, 3)), x,
+                                    cache_pos, cfg, ctx, positions, "hybrid_full")
+            new_full.append(nf)
+            full = jax.tree.map(lambda a, b, c: jnp.concatenate([a, b, c], 0),
+                                *new_full)
+            return x, {"full": full, "win_a": ca, "win_b": cb}
+        if cfg.family == "moe" and "prefix" in sp:
+            npre = self.cfg.n_dense_prefix
+            cpre = jax.tree.map(lambda c: c[:npre], cache)
+            cmain = jax.tree.map(lambda c: c[npre:], cache)
+            x, c1 = tfm.scan_decode(sp["prefix"], cpre, x, cache_pos, cfg, ctx,
+                                    positions, "dense")
+            x, c2 = tfm.scan_decode(sp["layers"], cmain, x, cache_pos, cfg, ctx,
+                                    positions, "moe")
+            return x, jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                                   c1, c2)
+        kind = "moe" if cfg.family == "moe" else "dense"
+        x, nc = tfm.scan_decode(sp["layers"], cache, x, cache_pos, cfg, ctx,
+                                positions, kind)
+        return x, nc
+
+
+def build_model(cfg: ModelConfig, rules: Optional[ShardingRules] = None,
+                mesh=None) -> Model:
+    return Model(cfg, rules=rules, mesh=mesh)

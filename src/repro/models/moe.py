@@ -1,0 +1,307 @@
+"""Mixture-of-Experts FFN (DBRX 16e/top-4, DeepSeek-V2 160e/top-6 + shared).
+
+Token-choice top-k routing with capacity-bounded scatter dispatch:
+
+  router logits -> top-k experts -> per-(group,expert) slot via one-hot cumsum
+  -> scatter tokens into [E, C, d] expert buffers (EP-sharded over "experts")
+  -> batched expert GLU einsums -> gather back with combine weights.
+
+All shapes are static (capacity factor); overflowing assignments drop (their
+combine weight is zeroed), underfull slots compute on zeros. Differentiable
+end-to-end (scatter-add / take are linear). A load-balancing aux loss is
+returned for the training loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Ctx, act_fn, dense_init, dense_apply, mlp_init, mlp_apply
+
+
+def moe_init(key, cfg):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    std = 1.0 / (d ** 0.5)
+    tp = getattr(cfg, "moe_impl", "gather") == "expert_tp"
+    p = {
+        "router": dense_init(ks[0], d, e, ("embed", "experts")),
+        "gate": {"w": _expert_w(ks[1], e, d, f, std, tp=tp)},
+        "up": {"w": _expert_w(ks[2], e, d, f, std, tp=tp)},
+        "down": {"w": _expert_w(ks[3], e, f, d, 1.0 / (f ** 0.5), out=True, tp=tp)},
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, cfg.n_shared_experts * f, cfg.act)
+    return p
+
+
+def _expert_w(key, e, d_in, d_out, std, out=False, tp=False):
+    from repro.models.layers import Param
+    w = jax.random.normal(key, (e, d_in, d_out), jnp.float32) * std
+    if tp:  # expert-TP: shard every expert's hidden dim over "mlp" (model)
+        axes = (None, "mlp", "embed") if out else (None, "embed", "mlp")
+    else:   # EP: shard the expert dim
+        axes = ("experts", "expert_mlp", "embed") if out else ("experts", "embed", "expert_mlp")
+    return Param(w, axes)
+
+
+def capacity(cfg, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.moe_top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def _route(p, x, cfg, ctx):
+    """Shared routing: slot assignment via one-hot cumsum (token order)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    c = capacity(cfg, s)
+    logits = dense_apply(p["router"], x, ctx).astype(jnp.float32)   # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                          # [B,S,K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    flat_i = top_i.reshape(b, s * k)
+    oh = jax.nn.one_hot(flat_i, e, dtype=jnp.int32)                 # [B,SK,E]
+    pos = jnp.cumsum(oh, axis=1) - 1                                # slot index
+    slot = jnp.take_along_axis(pos, flat_i[..., None], -1)[..., 0]  # [B,SK]
+    ok = slot < c
+    target = jnp.where(ok, flat_i * c + slot, e * c)                # drop -> E*C
+    w_flat = jnp.where(ok, top_w.reshape(b, s * k), 0.0)
+    # GShard load-balance aux: E * mean_e(frac_tokens_e * mean_prob_e)
+    frac = jnp.mean(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=(1, 2))
+    mean_p = jnp.mean(probs, axis=1)
+    aux = e * jnp.mean(jnp.sum(frac * mean_p, -1)) * cfg.router_aux_weight
+    return c, target, w_flat, aux
+
+
+def _experts_ffn(p, buf, cfg, ctx):
+    gate = jnp.einsum("becd,edf->becf", buf, ctx.cast(p["gate"]["w"]))
+    up = jnp.einsum("becd,edf->becf", buf, ctx.cast(p["up"]["w"]))
+    h = act_fn(cfg.act)(gate) * up
+    h = ctx.shard(h, ("batch", "experts", None, "expert_mlp"))
+    return jnp.einsum("becf,efd->becd", h, ctx.cast(p["down"]["w"]))
+
+
+def moe_apply(p, x, cfg, ctx: Ctx):
+    """x: [B, S, d] -> (y, aux_loss). Groups = batch rows (one routing group
+    per sequence keeps routing local to the data shard).
+
+    Two dispatch implementations (selected by cfg.moe_impl; identical math,
+    different data movement — see EXPERIMENTS.md §Perf):
+
+    * "gather": capacity buffer sharded over ("batch","experts") at dispatch
+      time; the scatter/gather cross (data -> experts) sharding and GSPMD
+      falls back to replicating the E*C*d buffers with giant all-reduces.
+    * "scatter_combine": dispatch scatter stays LOCAL into an
+      E-replicated buffer, expert FFN runs on the local E-shard, and the
+      combine scatter-adds each shard's expert outputs back into token space
+      as a partial sum — SPMD then needs exactly ONE activation-sized
+      all-reduce per layer ([B,S,d], the Megatron pattern) instead of
+      buffer-sized ones.
+    * "a2a": segment-local capacity slots + dim-to-dim buffer reshard that
+      GSPMD lowers to a true all-to-all — each token activation moves once.
+      The production choice: −61/−67% collective bytes on the measured MoE
+      cells (EXPERIMENTS.md §Perf round 4).
+    """
+    impl = getattr(cfg, "moe_impl", "gather")
+    if impl == "gather":
+        return _moe_apply_gather(p, x, cfg, ctx)
+    if impl == "expert_tp":
+        return _moe_apply_expert_tp(p, x, cfg, ctx)
+    if impl == "a2a":
+        return _moe_apply_a2a(p, x, cfg, ctx)
+    return _moe_apply_scatter_combine(p, x, cfg, ctx)
+
+
+def _moe_apply_a2a(p, x, cfg, ctx: Ctx):
+    """All-to-all expert dispatch expressed with pure sharding constraints.
+
+    Tokens are split into ``n`` contiguous segments (n = the model-axis size
+    the layout targets); capacity slots are per-(segment, expert), so the
+    dispatch scatter touches only the caller's segment slice and is
+    shard-local when the token axis is sharded over "seq_sp" (model). The
+    buffer is then resharded from segment-sharded to expert-sharded — a
+    dim-to-dim reshard GSPMD lowers to a single all-to-all moving each token's
+    activation exactly once (the DeepSpeed-MoE/GShard EP pattern), instead of
+    the buffer-sized all-reduces of the scatter/gather formulations.
+
+    Capacity semantics: bounded per (segment, expert) — marginally more drops
+    under heavy skew than a global per-group bound (documented trade).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    n = getattr(cfg, "moe_a2a_segments", 16)
+    sk = s * k
+    if sk % n:
+        return _moe_apply_scatter_combine(p, x, cfg, ctx)
+    seg_tokens = sk // n
+    c_seg = max(4, -(-int(seg_tokens * cfg.capacity_factor / e) // 4) * 4)
+
+    # routing with per-segment slot assignment. The segment axis is a REAL
+    # array dimension and all scatter/gather indices are segment-LOCAL, so
+    # the partitioner can prove the vmapped scatters never cross segments
+    # (a flat global slot space defeats that analysis — measured, round 4).
+    logits = dense_apply(p["router"], x, ctx).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    flat_i = top_i.reshape(b, n, seg_tokens)                 # [B,n,T]
+    oh = jax.nn.one_hot(flat_i, e, dtype=jnp.int32)          # [B,n,T,E]
+    pos = jnp.cumsum(oh, axis=2) - 1
+    slot = jnp.take_along_axis(pos, flat_i[..., None], -1)[..., 0]
+    ok = slot < c_seg
+    target = jnp.where(ok, flat_i * c_seg + slot, e * c_seg)  # local slots
+    w_seg = jnp.where(ok, top_w.reshape(b, n, seg_tokens), 0.0)
+
+    x_seg = jnp.repeat(x, k, axis=1).reshape(b, n, seg_tokens, d)
+    x_seg = ctx.shard(x_seg, ("batch", "seq_sp", None, None))
+
+    def scatter_one(xr, tgt, wf):
+        buf = jnp.zeros((e * c_seg + 1, d), xr.dtype)
+        buf = buf.at[tgt].add(xr, mode="drop")
+        tok = jnp.full((e * c_seg + 1,), seg_tokens, jnp.int32)
+        tok = tok.at[tgt].set(jnp.arange(seg_tokens, dtype=jnp.int32),
+                              mode="drop")
+        wgt = jnp.zeros((e * c_seg + 1,), jnp.float32)
+        wgt = wgt.at[tgt].set(wf, mode="drop")
+        return buf[:-1], tok[:-1], wgt[:-1]
+
+    buf, tok, wgt = jax.vmap(jax.vmap(scatter_one))(x_seg, target, w_seg)
+    buf = buf.reshape(b, n, e, c_seg, d)
+    buf = ctx.shard(buf, ("batch", "seq_sp", None, None, None))
+    # ---- the all-to-all: segment-sharded -> expert-sharded ----
+    buf = buf.transpose(0, 2, 1, 3, 4)                        # [B,E,n,C,d]
+    buf = ctx.shard(buf, ("batch", "experts", None, None, None))
+    out = _experts_ffn(p, buf.reshape(b, e, n * c_seg, d), cfg, ctx)
+    out = ctx.shard(out.reshape(b, e, n, c_seg, d),
+                    ("batch", "experts", None, None, None))
+    # ---- all-to-all back: expert-sharded -> segment-sharded ----
+    out = out.transpose(0, 2, 1, 3, 4)                        # [B,n,E,C,d]
+    out = ctx.shard(out, ("batch", "seq_sp", None, None, None))
+    wgt = ctx.shard(wgt, ("batch", "seq_sp", None))
+    out = out.reshape(b, n, e * c_seg, d) * wgt[..., None].astype(out.dtype)
+
+    def combine_one(ob, tk):
+        y = jnp.zeros((seg_tokens + 1, d), ob.dtype)
+        return y.at[tk].add(ob, mode="drop")[:-1]
+
+    y_rep = jax.vmap(jax.vmap(combine_one))(out, tok)        # [B,n,T,d]
+    y_rep = ctx.shard(y_rep, ("batch", "seq_sp", None, None))
+    y = y_rep.reshape(b, s, k, d).sum(2)
+    y = ctx.shard(y, ("batch", "seq_sp", None))
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, cfg.act, ctx)
+    frac = jnp.mean(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=(1, 2))
+    mean_p = jnp.mean(probs, axis=1)
+    aux = e * jnp.mean(jnp.sum(frac * mean_p, -1)) * cfg.router_aux_weight
+    return y, aux
+
+
+def _moe_apply_gather(p, x, cfg, ctx: Ctx):
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    c, target, w_flat, aux = _route(p, x, cfg, ctx)
+    x_rep = jnp.repeat(x, k, axis=1)                                # [B,SK,d]
+
+    def scatter_one(xr, tgt):
+        buf = jnp.zeros((e * c + 1, d), xr.dtype)
+        return buf.at[tgt].add(xr, mode="drop")[:-1]
+
+    buf = jax.vmap(scatter_one)(x_rep, target).reshape(b, e, c, d)
+    buf = ctx.shard(buf, ("batch", "experts", None, None))
+    out = _experts_ffn(p, buf, cfg, ctx)
+    out = ctx.shard(out, ("batch", "experts", None, None))
+    out = out.reshape(b, e * c, d)
+
+    def gather_one(ob, tgt):
+        padded = jnp.concatenate([ob, jnp.zeros((1, d), ob.dtype)], 0)
+        return padded[tgt]
+
+    y_rep = jax.vmap(gather_one)(out, target)                       # [B,SK,d]
+    y = (y_rep.reshape(b, s, k, d)
+         * w_flat.reshape(b, s, k, 1).astype(y_rep.dtype)).sum(2)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, cfg.act, ctx)
+    return y, aux
+
+
+def _moe_apply_expert_tp(p, x, cfg, ctx: Ctx):
+    """Expert-TP: every expert's hidden dim sharded over "mlp" (the dense-MLP
+    pattern applied per expert). Dispatch and combine are fully LOCAL; the
+    down-projection's partial sums ride through the (linear) combine, so SPMD
+    needs one [B,S,d] all-reduce per layer. Best for coarse experts (DBRX
+    f=10752); fine-grained experts (DeepSeek-V2 f=1536 -> f/16=96) under-fill
+    the MXU — EP is the right axis there (see EXPERIMENTS.md §Perf)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    c, target, w_flat, aux = _route(p, x, cfg, ctx)
+    x_rep = jnp.repeat(x, k, axis=1)
+    sk = s * k
+
+    def scatter_one(xr, tgt, wf):
+        buf = jnp.zeros((e * c + 1, d), xr.dtype)
+        buf = buf.at[tgt].add(xr, mode="drop")
+        tok = jnp.full((e * c + 1,), sk, jnp.int32)
+        tok = tok.at[tgt].set(jnp.arange(sk, dtype=jnp.int32), mode="drop")
+        wgt = jnp.zeros((e * c + 1,), jnp.float32)
+        wgt = wgt.at[tgt].set(wf, mode="drop")
+        return buf[:-1], tok[:-1], wgt[:-1]
+
+    buf, tok, wgt = jax.vmap(scatter_one)(x_rep, target, w_flat)
+    buf = buf.reshape(b, e, c, d)
+    buf = ctx.shard(buf, ("batch", None, None, None))
+    gate = jnp.einsum("becd,edf->becf", buf, ctx.cast(p["gate"]["w"]))
+    up = jnp.einsum("becd,edf->becf", buf, ctx.cast(p["up"]["w"]))
+    h = act_fn(cfg.act)(gate) * up
+    h = ctx.shard(h, ("batch", None, None, "mlp"))
+    out = jnp.einsum("becf,efd->becd", h, ctx.cast(p["down"]["w"]))
+    out = out * wgt.reshape(b, e, c, 1).astype(out.dtype)
+
+    def combine_one(ob, tk):
+        y = jnp.zeros((sk + 1, d), ob.dtype)
+        return y.at[tk].add(ob, mode="drop")[:-1]
+
+    y_rep = jax.vmap(combine_one)(out.reshape(b, e * c, d), tok)
+    y = y_rep.reshape(b, s, k, d).sum(2)
+    y = ctx.shard(y, ("batch", None, None))
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, cfg.act, ctx)
+    return y, aux
+
+
+def _moe_apply_scatter_combine(p, x, cfg, ctx: Ctx):
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    c, target, w_flat, aux = _route(p, x, cfg, ctx)
+    x_rep = jnp.repeat(x, k, axis=1)                                # [B,SK,d]
+    sk = s * k
+
+    def scatter_one(xr, tgt, wf):
+        buf = jnp.zeros((e * c + 1, d), xr.dtype)
+        buf = buf.at[tgt].add(xr, mode="drop")
+        tok = jnp.full((e * c + 1,), sk, jnp.int32)
+        tok = tok.at[tgt].set(jnp.arange(sk, dtype=jnp.int32), mode="drop")
+        wgt = jnp.zeros((e * c + 1,), jnp.float32)
+        wgt = wgt.at[tgt].set(wf, mode="drop")
+        return buf[:-1], tok[:-1], wgt[:-1]
+
+    # dispatch is fully local: buf replicated over the experts axis
+    buf, tok, wgt = jax.vmap(scatter_one)(x_rep, target, w_flat)
+    buf = buf.reshape(b, e, c, d)
+    buf = ctx.shard(buf, ("batch", None, None, None))
+    out = _experts_ffn(p, buf, cfg, ctx)                            # E-sharded
+    out = out * wgt.reshape(b, e, c, 1).astype(out.dtype)  # keep compute dtype
+    out = ctx.shard(out, ("batch", "experts", None, None))
+
+    def combine_one(ob, tk):
+        y = jnp.zeros((sk + 1, d), ob.dtype)
+        return y.at[tk].add(ob, mode="drop")[:-1]
+
+    # combine: each experts-shard contributes its slots -> partial sums over
+    # the token axis; SPMD resolves with one [B,S,d] all-reduce
+    y_rep = jax.vmap(combine_one)(out.reshape(b, e * c, d), tok)
+    y = y_rep.reshape(b, s, k, d).sum(2)
+    y = ctx.shard(y, ("batch", None, None))
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, cfg.act, ctx)
+    return y, aux

@@ -1,0 +1,164 @@
+"""Mamba2 / SSD (state-space duality) block  [arXiv:2405.21060].
+
+Train/prefill uses the chunked SSD algorithm: quadratic attention-like term
+inside chunks of length Q, linear state recurrence across chunks (lax.scan).
+Decode is the O(1) recurrent update on the [B, H, P, N] state — the reason the
+``long_500k`` cell is trivial for this family (constant-size cache).
+
+Layout: d_inner = expand*d_model = H*P heads; B/C projections have G groups of
+state size N; depthwise causal conv (k=4) over [x, B, C] features.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Ctx, Param, dense_apply, dense_init, norm_apply, norm_init
+
+
+def ssm_init(key, cfg):
+    d, di, n, g = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    h = cfg.ssm_nheads
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (h,), jnp.float32,
+                                    jnp.log(0.001), jnp.log(0.1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # softplus^-1
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * g * n + h, ("embed", "heads")),
+        "conv_w": Param(jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32)
+                        * (cfg.ssm_conv ** -0.5), (None, "heads")),
+        "conv_b": Param(jnp.zeros((conv_dim,), jnp.float32), ("heads",)),
+        "dt_bias": Param(dt_bias, ("heads",)),
+        "A_log": Param(jnp.log(jax.random.uniform(ks[3], (h,), jnp.float32, 1.0, 16.0)),
+                       ("heads",)),
+        "D": Param(jnp.ones((h,), jnp.float32), ("heads",)),
+        "gate_norm": norm_init(di, "rmsnorm"),
+        "out_proj": dense_init(jax.random.fold_in(key, 7), di, d, ("heads", "embed")),
+    }
+
+
+def _split_proj(p, x, cfg, ctx):
+    di, n, g, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_nheads
+    zxbcdt = dense_apply(p["in_proj"], x, ctx)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * g * n]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, ctx):
+    """Depthwise causal conv over time. xbc: [B, L, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * ctx.cast(w[i]) for i in range(k))
+    return jax.nn.silu(out + ctx.cast(b))
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD chunked scan. x:[b,l,h,p] dt:[b,l,h] A:[h] B,C:[b,l,g,n].
+    Returns (y [b,l,h,p], final_state [b,h,p,n])."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(chunk, l)
+    nc = l // q
+    assert l % q == 0, (l, q)
+    rep = h // g
+
+    xs = x.reshape(b, nc, q, h, p)
+    dts = dt.reshape(b, nc, q, h)
+    Bs = jnp.repeat(B.reshape(b, nc, q, g, n), rep, axis=3)   # [b,nc,q,h,n]
+    Cs = jnp.repeat(C.reshape(b, nc, q, g, n), rep, axis=3)
+
+    dA = dts * (-jnp.exp(A))[None, None, None, :]             # [b,nc,q,h] (<=0)
+    seg = jnp.cumsum(dA, axis=2)                              # within-chunk cumsum
+
+    # intra-chunk (quadratic in q): y_ij = C_i . B_j * exp(seg_i - seg_j) * dt_j
+    li = seg[:, :, :, None, :] - seg[:, :, None, :, :]        # [b,nc,qi,qj,h]
+    causal = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # clamp masked (j > i) entries BEFORE exp: they are positive and overflow
+    # to inf, and where(mask, inf, 0) back-propagates 0*inf = NaN
+    li = jnp.where(causal, li, -30.0)
+    decay = jnp.where(causal, jnp.exp(li), 0.0)
+    cb = jnp.einsum("bcqhn,bcshn->bcqsh", Cs, Bs)
+    y_diag = jnp.einsum("bcqsh,bcqsh,bcsh,bcshp->bcqhp",
+                        cb, decay.astype(cb.dtype), dts.astype(cb.dtype), xs)
+
+    # chunk states: S_c = sum_j exp(seg_last - seg_j) * dt_j * B_j x_j^T
+    # (state recurrence accumulates in f32; the matmul-heavy terms stay bf16)
+    last = seg[:, :, -1:, :]
+    w_state = jnp.exp(last - seg) * dts                       # [b,nc,q,h]
+    S_c = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn",
+                     w_state.astype(xs.dtype), Bs, xs).astype(jnp.float32)
+    chunk_decay = jnp.exp(last[:, :, 0, :]).astype(jnp.float32)   # [b,nc,h]
+
+    def scan_fn(state, inp):
+        s_c, dec = inp                                        # [b,h,p,n], [b,h]
+        new = state * dec[:, :, None, None] + s_c
+        return new, state                                     # emit state *before* chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (S_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # [b,nc,h,p,n]
+
+    # inter-chunk: y_i += C_i . state_prev * exp(seg_i)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       Cs, prev_states.astype(xs.dtype),
+                       jnp.exp(seg).astype(xs.dtype))
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def ssm_apply(p, x_in, cfg, ctx: Ctx, return_state: bool = False):
+    """Full-sequence SSD. x_in: [B, L, d]."""
+    b, l, _ = x_in.shape
+    di, n, g, h, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_nheads, cfg.ssm_head_dim
+    z, xbc_raw, dt = _split_proj(p, x_in, cfg, ctx)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"], ctx)
+    xs = xbc[..., :di].reshape(b, l, h, ph)
+    B = xbc[..., di:di + g * n].reshape(b, l, g, n)
+    C = xbc[..., di + g * n:].reshape(b, l, g, n)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]).astype(ctx.dtype)
+    xs = ctx.shard(xs, ("batch", None, "heads", None))
+    y, state = ssd_chunked(xs, dtv, p["A_log"], B, C, cfg.ssm_chunk)
+    y = y + xs * ctx.cast(p["D"])[None, None, :, None]
+    y = y.reshape(b, l, di) * jax.nn.silu(z)
+    y = norm_apply(p["gate_norm"], y, "rmsnorm", ctx)
+    out = dense_apply(p["out_proj"], y, ctx)
+    if return_state:
+        # conv cache = last k-1 *pre-conv* feature rows (zero-padded if short)
+        conv_tail = jnp.concatenate(
+            [jnp.zeros((b, cfg.ssm_conv - 1, xbc_raw.shape[-1]), xbc_raw.dtype),
+             xbc_raw], 1)[:, -(cfg.ssm_conv - 1):]
+        return out, {"state": state, "conv": conv_tail}
+    return out
+
+
+def ssm_decode(p, x_in, cache, cfg, ctx: Ctx):
+    """One-token recurrent update. cache: {"state":[B,H,P,N], "conv":[B,k-1,C]}."""
+    b, s, _ = x_in.shape  # s == 1
+    di, n, g, h, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_nheads, cfg.ssm_head_dim
+    z, xbc_new, dt = _split_proj(p, x_in, cfg, ctx)
+    conv_in = jnp.concatenate([cache["conv"], xbc_new.astype(cache["conv"].dtype)], 1)
+    w = ctx.cast(p["conv_w"])
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_in.astype(ctx.dtype), w)
+                      + ctx.cast(p["conv_b"]))[:, None, :]
+    xs = xbc[..., :di].reshape(b, h, ph)
+    B = jnp.repeat(xbc[..., di:di + g * n].reshape(b, g, n), h // g, axis=1)
+    C = jnp.repeat(xbc[..., di + g * n:].reshape(b, g, n), h // g, axis=1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # [B,H]
+    dA = jnp.exp(dtv * (-jnp.exp(p["A_log"])))                           # [B,H]
+    state = cache["state"].astype(jnp.float32)
+    state = state * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dtv, B.astype(jnp.float32), xs.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", C.astype(jnp.float32), state).astype(ctx.dtype)
+    y = y + xs * ctx.cast(p["D"])[None, :, None]
+    y = y.reshape(b, 1, di) * jax.nn.silu(z)
+    y = norm_apply(p["gate_norm"], y, "rmsnorm", ctx)
+    out = dense_apply(p["out_proj"], y, ctx)
+    new_cache = {"state": state.astype(cache["state"].dtype),
+                 "conv": conv_in[:, 1:]}
+    return out, new_cache

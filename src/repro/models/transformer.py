@@ -1,0 +1,323 @@
+"""Block definitions and scan-over-layers stacking (with remat policies).
+
+Layers are stacked with ``jax.lax.scan`` over vmapped-init parameters so HLO
+size and compile time stay bounded at 64 layers. Heterogeneous stacks (MoE
+dense prefix, Hymba's three global-attention layers) unroll the exceptional
+layers and scan the homogeneous segments.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attend_chunked, attn_apply, attn_decode, attn_decode_ring, attn_init,
+    project_qkv,
+)
+from repro.models.hybrid import (
+    full_attn_layer_ids, hybrid_block_apply, hybrid_block_decode,
+    hybrid_block_init,
+)
+from repro.models.layers import (
+    Ctx, Param, dense_apply, is_param, mlp_apply, mlp_init, norm_apply,
+    norm_init,
+)
+from repro.models.mla import mla_apply, mla_decode, mla_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import ssm_apply, ssm_decode, ssm_init
+
+
+# --------------------------------------------------------------------- blocks
+
+
+def block_init(key, cfg, kind: str):
+    ks = jax.random.split(key, 3)
+    if kind == "ssm":
+        return {"norm1": norm_init(cfg.d_model, cfg.norm),
+                "ssm": ssm_init(ks[0], cfg)}
+    if kind in ("hybrid_full", "hybrid_win"):
+        return hybrid_block_init(key, cfg)
+    p = {"norm1": norm_init(cfg.d_model, cfg.norm),
+         "norm2": norm_init(cfg.d_model, cfg.norm)}
+    if cfg.attention == "mla":
+        p["attn"] = mla_init(ks[0], cfg)
+    else:
+        p["attn"] = attn_init(ks[0], cfg)
+    if kind == "moe":
+        p["ffn"] = moe_init(ks[1], cfg)
+    else:
+        p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _self_attn(p, h, cfg, ctx, positions, kind):
+    if cfg.attention == "mla":
+        return mla_apply(p, h, cfg, ctx, positions, kind=kind)
+    return attn_apply(p, h, cfg, ctx, positions, kind=kind)
+
+
+def block_apply(p, x, cfg, ctx: Ctx, positions, kind: str,
+                attn_kind: str = "causal"):
+    """Returns (x, aux_loss)."""
+    x = ctx.shard(x, ("batch", "seq_sp", None))
+    if kind == "ssm":
+        return x + ssm_apply(p["ssm"], norm_apply(p["norm1"], x, cfg.norm, ctx),
+                             cfg, ctx), 0.0
+    if kind in ("hybrid_full", "hybrid_win"):
+        ak = "causal" if kind == "hybrid_full" else "window"
+        return hybrid_block_apply(p, x, cfg, ctx, positions, ak), 0.0
+    h = norm_apply(p["norm1"], x, cfg.norm, ctx)
+    x = x + _self_attn(p["attn"], h, cfg, ctx, positions, attn_kind)
+    h = norm_apply(p["norm2"], x, cfg.norm, ctx)
+    if kind == "moe":
+        y, aux = moe_apply(p["ffn"], h, cfg, ctx)
+        return x + y, aux
+    return x + mlp_apply(p["ffn"], h, cfg.act, ctx), 0.0
+
+
+def block_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions, kind: str):
+    """Single-token decode step. Returns (x, new_cache)."""
+    x = ctx.shard(x, ("batch", None, None))
+    if kind == "ssm":
+        y, c = ssm_decode(p["ssm"], norm_apply(p["norm1"], x, cfg.norm, ctx), cache, cfg, ctx)
+        return x + y, c
+    if kind in ("hybrid_full", "hybrid_win"):
+        ak = "causal" if kind == "hybrid_full" else "window"
+        return hybrid_block_decode(p, x, cache, cache_pos, cfg, ctx, positions, ak)
+    h = norm_apply(p["norm1"], x, cfg.norm, ctx)
+    if cfg.attention == "mla":
+        a, c = mla_decode(p["attn"], h, cache, cache_pos, cfg, ctx, positions)
+    else:
+        a, c = attn_decode(p["attn"], h, cache, cache_pos, cfg, ctx, positions)
+    x = x + a
+    h = norm_apply(p["norm2"], x, cfg.norm, ctx)
+    if kind == "moe":
+        y, _ = moe_apply(p["ffn"], h, cfg, ctx)
+        return x + y, c
+    return x + mlp_apply(p["ffn"], h, cfg.act, ctx), c
+
+
+# --------------------------------------------------------------- stacked scan
+
+
+def stacked_init(key, cfg, n: int, kind: str):
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(lambda k: block_init(k, cfg, kind))(keys)
+    return jax.tree.map(lambda p: Param(p.value, ("stacked",) + tuple(p.axes)),
+                        stacked, is_leaf=is_param)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full"
+
+
+def scan_apply(params, x, cfg, ctx: Ctx, positions, kind: str,
+               attn_kind: str = "causal"):
+    """Scan a homogeneous stacked segment. Returns (x, summed aux)."""
+
+    def body(carry, layer_p):
+        y, aux = block_apply(layer_p, carry, cfg, ctx, positions, kind,
+                             attn_kind)
+        return y, aux
+
+    body = _remat(body, cfg.remat)
+    if not cfg.scan_layers:
+        aux_total = 0.0
+        for i in range(jax.tree.leaves(params)[0].shape[0]):
+            layer = jax.tree.map(lambda p: p[i], params)
+            x, aux = body(x, layer)
+            aux_total += aux
+        return x, aux_total
+    x, auxs = jax.lax.scan(body, x, params)
+    return x, jnp.sum(auxs)
+
+
+# -------------------------------------------------------------- prefill paths
+
+
+def _pad_cache(arr, cache_len: int):
+    """[B, S, ...] -> [B, cache_len, ...] zero-padded on the right."""
+    b, s = arr.shape[0], arr.shape[1]
+    if s == cache_len:
+        return arr
+    pad = [(0, 0), (0, cache_len - s)] + [(0, 0)] * (arr.ndim - 2)
+    return jnp.pad(arr, pad)
+
+
+def attn_prefill(p, x, cfg, ctx: Ctx, positions, kind: str, cache_len: int):
+    """Self-attention over the prompt + cache construction for decode."""
+    import numpy as np
+    b, s, _ = x.shape
+    q, k, v = project_qkv(p, x, cfg, ctx, positions)
+    pos = positions[0] if cfg.rope_type == "mrope" else positions
+    out = attend_chunked(q, k, v, pos, pos, kind, cfg, ctx)
+    y = dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+    if kind == "window":
+        w_cap = min(cfg.window, cache_len)
+        ring_k = jnp.zeros((b, w_cap) + k.shape[2:], k.dtype)
+        ring_v = jnp.zeros_like(ring_k)
+        pos_buf = jnp.full((w_cap,), -1, jnp.int32)
+        lo = max(0, s - w_cap)
+        slots = np.arange(lo, s) % w_cap
+        ring_k = ring_k.at[:, slots].set(k[:, lo:s])
+        ring_v = ring_v.at[:, slots].set(v[:, lo:s])
+        pos_buf = pos_buf.at[slots].set(jnp.arange(lo, s, dtype=jnp.int32))
+        cache = {"k": ring_k, "v": ring_v, "pos": pos_buf}
+    else:
+        if getattr(cfg, "kv_quant", False):
+            from repro.models.attention import kv_quantize
+            kq, ks = kv_quantize(k)
+            vq, vs = kv_quantize(v)
+            cache = {"k": _pad_cache(kq, cache_len),
+                     "v": _pad_cache(vq, cache_len),
+                     "k_scale": _pad_cache(ks, cache_len),
+                     "v_scale": _pad_cache(vs, cache_len)}
+        else:
+            cache = {"k": _pad_cache(k, cache_len),
+                     "v": _pad_cache(v, cache_len)}
+    return y, cache
+
+
+def mla_prefill(p, x, cfg, ctx: Ctx, positions, cache_len: int):
+    from repro.models.mla import _latents
+    y = mla_apply(p, x, cfg, ctx, positions)
+    c_kv, k_rope = _latents(p, x, cfg, ctx, positions)
+    return y, {"c_kv": _pad_cache(c_kv, cache_len),
+               "k_rope": _pad_cache(k_rope[:, :, 0, :], cache_len)}
+
+
+def block_prefill(p, x, cfg, ctx: Ctx, positions, kind: str, cache_len: int):
+    """Returns (x, cache) — the decode-ready cache for this layer."""
+    x = ctx.shard(x, ("batch", "seq_sp", None))
+    if kind == "ssm":
+        y, c = ssm_apply(p["ssm"], norm_apply(p["norm1"], x, cfg.norm, ctx),
+                         cfg, ctx, return_state=True)
+        return x + y, c
+    if kind in ("hybrid_full", "hybrid_win"):
+        ak = "causal" if kind == "hybrid_full" else "window"
+        h = norm_apply(p["norm1"], x, cfg.norm, ctx)
+        a, ac = attn_prefill(p["attn"], h, cfg, ctx, positions, ak,
+                             cache_len if ak == "causal" else cfg.window)
+        s_, sc = ssm_apply(p["ssm"], h, cfg, ctx, return_state=True)
+        fused = 0.5 * (norm_apply(p["attn_norm"], a, "rmsnorm", ctx)
+                       + norm_apply(p["ssm_norm"], s_, "rmsnorm", ctx))
+        x = x + fused
+        x = x + mlp_apply(p["mlp"], norm_apply(p["norm2"], x, cfg.norm, ctx),
+                          cfg.act, ctx)
+        return x, {"attn": ac, "ssm": sc}
+    h = norm_apply(p["norm1"], x, cfg.norm, ctx)
+    if cfg.attention == "mla":
+        a, c = mla_prefill(p["attn"], h, cfg, ctx, positions, cache_len)
+    else:
+        a, c = attn_prefill(p["attn"], h, cfg, ctx, positions, "causal", cache_len)
+    x = x + a
+    h = norm_apply(p["norm2"], x, cfg.norm, ctx)
+    if kind == "moe":
+        y, _ = moe_apply(p["ffn"], h, cfg, ctx)
+        return x + y, c
+    return x + mlp_apply(p["ffn"], h, cfg.act, ctx), c
+
+
+def scan_prefill(params, x, cfg, ctx: Ctx, positions, kind: str, cache_len: int):
+    def body(carry, layer_p):
+        y, cache = block_prefill(layer_p, carry, cfg, ctx, positions, kind,
+                                 cache_len)
+        return y, cache
+
+    # no remat: prefill is inference (no grads through it)
+    if not cfg.scan_layers:
+        outs = []
+        for i in range(jax.tree.leaves(params)[0].shape[0]):
+            layer = jax.tree.map(lambda p: p[i], params)
+            x, c = body(x, layer)
+            outs.append(c)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return jax.lax.scan(body, x, params)
+
+
+# ------------------------------------------------------- encoder-decoder (Whisper)
+
+
+def dec_block_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.norm),
+        "self": attn_init(ks[0], cfg),
+        "norm_x": norm_init(cfg.d_model, cfg.norm),
+        "cross": attn_init(ks[1], cfg),
+        "norm2": norm_init(cfg.d_model, cfg.norm),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def dec_block_apply(p, x, enc_out, cfg, ctx: Ctx, positions):
+    from repro.models.attention import attn_cross, cross_kv
+    h = norm_apply(p["norm1"], x, cfg.norm, ctx)
+    x = x + attn_apply(p["self"], h, cfg, ctx, positions, kind="causal")
+    h = norm_apply(p["norm_x"], x, cfg.norm, ctx)
+    ek, ev = cross_kv(p["cross"], enc_out, cfg, ctx)
+    x = x + attn_cross(p["cross"], h, ek, ev, cfg, ctx)
+    h = norm_apply(p["norm2"], x, cfg.norm, ctx)
+    return x + mlp_apply(p["mlp"], h, cfg.act, ctx)
+
+
+def dec_block_prefill(p, x, enc_out, cfg, ctx: Ctx, positions, cache_len: int):
+    from repro.models.attention import attn_cross, cross_kv
+    h = norm_apply(p["norm1"], x, cfg.norm, ctx)
+    a, self_cache = attn_prefill(p["self"], h, cfg, ctx, positions, "causal",
+                                 cache_len)
+    x = x + a
+    h = norm_apply(p["norm_x"], x, cfg.norm, ctx)
+    ek, ev = cross_kv(p["cross"], enc_out, cfg, ctx)
+    x = x + attn_cross(p["cross"], h, ek, ev, cfg, ctx)
+    h = norm_apply(p["norm2"], x, cfg.norm, ctx)
+    x = x + mlp_apply(p["mlp"], h, cfg.act, ctx)
+    return x, {"self": self_cache,
+               "cross": {"k": ek.astype(jnp.bfloat16), "v": ev.astype(jnp.bfloat16)}}
+
+
+def dec_block_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
+    from repro.models.attention import attn_cross
+    h = norm_apply(p["norm1"], x, cfg.norm, ctx)
+    a, self_cache = attn_decode(p["self"], h, cache["self"], cache_pos, cfg,
+                                ctx, positions)
+    x = x + a
+    h = norm_apply(p["norm_x"], x, cfg.norm, ctx)
+    x = x + attn_cross(p["cross"], h, ctx.cast(cache["cross"]["k"]),
+                       ctx.cast(cache["cross"]["v"]), cfg, ctx)
+    h = norm_apply(p["norm2"], x, cfg.norm, ctx)
+    x = x + mlp_apply(p["mlp"], h, cfg.act, ctx)
+    return x, {"self": self_cache, "cross": cache["cross"]}
+
+
+def scan_decode(params, caches, x, cache_pos, cfg, ctx: Ctx, positions,
+                kind: str):
+    """Scan a stacked segment in decode mode, threading per-layer caches."""
+
+    def body(carry, xs):
+        layer_p, cache = xs
+        y, new_cache = block_decode(layer_p, carry, cache, cache_pos, cfg, ctx,
+                                    positions, kind)
+        return y, new_cache
+
+    if not cfg.scan_layers:
+        n = jax.tree.leaves(params)[0].shape[0]
+        outs = []
+        for i in range(n):
+            layer = jax.tree.map(lambda p: p[i], params)
+            cache = jax.tree.map(lambda c: c[i], caches)
+            x, nc = body(x, (layer, cache))
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return x, new_caches
+    x, new_caches = jax.lax.scan(body, x, (params, caches))
+    return x, new_caches

@@ -1,0 +1,79 @@
+"""Batched serving engine: prefill + jit'd decode loop over the KV cache.
+
+The serve path the dry-run lowers (``serve_step``) is exactly the
+``decode_step`` closure built here; the engine adds batching, sampling, and
+the prompt-alignment policy (left-padding so all sequences share a cache
+position — the uniform-position batching documented in DESIGN.md)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serving.sampler import make_sampler
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # [B, prompt + generated]
+    prompt_len: int
+    steps: int
+
+
+class Engine:
+    def __init__(self, model: Model, params, max_new: int = 64,
+                 sampler: str = "greedy", **sampler_kw):
+        self.model = model
+        self.params = params
+        self.max_new = max_new
+        self.sample = make_sampler(sampler, **sampler_kw)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill, static_argnames=("cache_len",))
+
+    def generate(self, prompts: np.ndarray, key=None,
+                 extra_inputs: Optional[dict] = None) -> GenerationResult:
+        """prompts: [B, P] int32 (left-pad with a fill token upstream; the
+        engine batches uniformly at cache position P)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        b, p = prompts.shape
+        cache_len = p + self.max_new
+        batch = {"tokens": jnp.asarray(prompts), **(extra_inputs or {})}
+        logits, cache = self._prefill(self.params, batch, cache_len=cache_len)
+        toks = [jnp.asarray(prompts)]
+        key, sub = jax.random.split(key)
+        nxt = self.sample(logits[:, -1], sub)[:, None]
+        toks.append(nxt)
+        for t in range(self.max_new - 1):
+            step_in = {"token": nxt}
+            if self.model.cfg.rope_type == "mrope":
+                pos = jnp.full((3, b, 1), p + t, jnp.int32)
+                step_in["positions"] = pos
+            logits, cache = self._decode(self.params, cache, step_in,
+                                         jnp.int32(p + t))
+            key, sub = jax.random.split(key)
+            nxt = self.sample(logits[:, -1], sub)[:, None]
+            toks.append(nxt)
+        out = np.asarray(jnp.concatenate(toks, axis=1))
+        return GenerationResult(out, prompt_len=p, steps=self.max_new)
+
+
+def make_serve_step(model: Model, kind: str):
+    """The function the dry-run lowers for decode cells: one token for the
+    whole batch against a fixed-size cache."""
+    if kind == "decode":
+        def serve_step(params, cache, token, cache_pos, positions=None):
+            batch = {"token": token}
+            if positions is not None:
+                batch["positions"] = positions
+            return model.decode_step(params, cache, batch, cache_pos)
+        return serve_step
+    if kind == "prefill":
+        def prefill_step(params, batch, cache_len):
+            return model.prefill(params, batch, cache_len=cache_len)
+        return prefill_step
+    raise ValueError(kind)

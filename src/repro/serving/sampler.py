@@ -1,0 +1,26 @@
+"""Token samplers (pure functions of logits + key)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits, key=None):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
+    logits = logits.astype(jnp.float32) / max(temp, 1e-6)
+    if top_k:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k:-top_k + 1]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def make_sampler(kind: str = "greedy", **kw):
+    if kind == "greedy":
+        return lambda logits, key: greedy(logits)
+    if kind == "temperature":
+        return lambda logits, key: temperature(logits, key, **kw)
+    raise ValueError(kind)

@@ -1,0 +1,40 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+At 512+ chips the gradient all-reduce over the DP axes dominates step time for
+small per-device batches. We compress the reduce payload to bf16 with **error
+feedback** (the fp32 residual of the cast is carried to the next step), which
+keeps convergence within noise of fp32 reduction [Seide et al. 2014-style EF].
+
+The compression is expressed as a pair of pure functions so the train step
+stays jit-friendly; the actual reduction stays an XLA all-reduce (which then
+moves half the bytes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress(grads, error_fb):
+    """fp32 grads + residual -> (bf16 payload, new residual)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        payload = corrected.astype(jnp.bfloat16)
+        new_e = corrected - payload.astype(jnp.float32)
+        return payload, new_e
+
+    flat = jax.tree.map(one, grads, error_fb)
+    payload = jax.tree.map(lambda pe: pe[0], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda pe: pe[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return payload, new_e
+
+
+def decompress(payload):
+    return jax.tree.map(lambda p: p.astype(jnp.float32), payload)

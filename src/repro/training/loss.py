@@ -1,0 +1,32 @@
+"""Cross-entropy over (possibly vocab-sharded) logits, with ignore index and
+optional z-loss (stabilizes the softmax normalizer at scale)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -1
+
+
+def softmax_xent(logits, labels, z_loss: float = 1e-4):
+    """logits [B,S,V] (f32 recommended), labels [B,S] int32 with IGNORE skips.
+    Returns (mean loss, metrics dict)."""
+    logits = logits.astype(jnp.float32)
+    valid = labels != IGNORE
+    labels_safe = jnp.where(valid, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], -1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    n = jnp.maximum(valid.sum(), 1)
+    loss = jnp.where(valid, nll, 0.0).sum() / n
+    acc = jnp.where(valid, jnp.argmax(logits, -1) == labels_safe, False).sum() / n
+    return loss, {"loss": loss, "accuracy": acc, "tokens": n}
+
+
+def perplexity(logits, labels):
+    """Standard eval perplexity (no z-loss)."""
+    loss, _ = softmax_xent(logits, labels, z_loss=0.0)
+    return jnp.exp(loss)

@@ -1,0 +1,85 @@
+"""Train-step factory: value_and_grad + AdamW + (optional) microbatch
+accumulation and bf16 gradient compression with error feedback.
+
+The returned function is pure and pjit-friendly; the launcher decides
+in/out shardings from the model's logical axes.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.grad_compression import compress, decompress, init_error_feedback
+from repro.training.loss import softmax_xent
+from repro.training.optimizer import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt: AdamWState
+    error_fb: Optional[object]  # grad-compression residual (or None)
+
+
+def init_state(model, opt: AdamW, key, grad_compress: bool = False) -> TrainState:
+    params, _ = model.init_split(key)
+    ef = init_error_feedback(params) if grad_compress else None
+    return TrainState(params, opt.init(params), ef)
+
+
+def make_train_step(model, opt: AdamW, grad_compress: bool = False,
+                    microbatches: int = 0):
+    """batch: {"tokens": [B,S], "labels": [B,S], ...family extras}."""
+
+    def loss_fn(params, batch):
+        logits, aux = model.train_logits(params, batch)
+        loss, metrics = softmax_xent(logits, batch["labels"])
+        metrics["aux_loss"] = aux
+        return loss + aux, metrics
+
+    def grads_of(params, batch):
+        if microbatches and microbatches > 1:
+            def split(x):
+                b = x.shape[0] if x.ndim >= 1 else 0
+                mb = microbatches
+                if x.ndim >= 2 and x.shape[0] % mb == 0:
+                    return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+                if x.ndim == 3 and x.shape[1] % mb == 0:  # mrope positions [3,B,S]
+                    return x.transpose(1, 0, 2).reshape(
+                        mb, x.shape[1] // mb, x.shape[0], x.shape[2]
+                    ).transpose(0, 2, 1, 3)
+                raise ValueError(f"cannot microbatch shape {x.shape}")
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb_batch):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb_batch)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), m
+
+            zero = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+            (gsum, lsum), ms = jax.lax.scan(body, (zero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+            return grads, metrics
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch):
+        grads, metrics = grads_of(state.params, batch)
+        ef = state.error_fb
+        if grad_compress:
+            # bf16 reduce payload + error feedback: the all-reduce over the DP
+            # axes (inserted by SPMD at the sharding boundary) moves half the
+            # bytes; the fp32 residual is folded into the next step.
+            payload, ef = compress(grads, ef)
+            grads = decompress(payload)
+        params, opt_state, gnorm = opt.update(grads, state.opt, state.params)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = opt.lr(opt_state.step)
+        return TrainState(params, opt_state, ef), metrics
+
+    return train_step

@@ -1,0 +1,8 @@
+import os
+
+# keep tests on the single real CPU device; the dry-run subprocess sets its
+# own XLA_FLAGS (512 fake devices) — never set that globally here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running (subprocess dry-run)")

@@ -1,0 +1,129 @@
+"""AP co-design tests: genuine LUT machinery, dataflow bit-exactness vs the
+JAX reference, Table-II cost accounting, and paper-anchor invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ap import cost_model as cm
+from repro.ap.dataflow import ap_softmax_rows, ap_softmax_vector
+from repro.ap.isa import CAM, lut_add, lut_sub
+from repro.ap.pipeline import compare_point, summarize
+from repro.core import PrecisionConfig, int_softmax_from_codes
+from repro.core.quantization import quantize_stable_scores
+
+
+def test_lut_add_bit_exact():
+    rng = np.random.default_rng(0)
+    W = 12
+    cam = CAM(rows=256, bits=32)
+    cam.alloc("a", W); cam.alloc("b", W); cam.alloc("carry", 1)
+    a = rng.integers(0, 2 ** (W - 1), 256)
+    b = rng.integers(0, 2 ** (W - 1), 256)
+    cam.load("a", a); cam.load("b", b)
+    lut_add(cam, "a", "b")
+    assert np.array_equal(cam.read("a"), (a + b) % 2 ** W)
+    # 4 compare + 4 write passes per bit == the Table-II "8M" term
+    assert cam.compares == 4 * W and cam.writes == 4 * W + 1  # +1 carry clear
+
+
+def test_lut_sub_bit_exact():
+    rng = np.random.default_rng(1)
+    W = 10
+    cam = CAM(rows=128, bits=32)
+    cam.alloc("a", W); cam.alloc("b", W); cam.alloc("carry", 1)
+    a = rng.integers(0, 2 ** (W - 1), 128)
+    b = rng.integers(0, 2 ** (W - 1), 128)
+    cam.load("a", a); cam.load("b", b)
+    lut_sub(cam, "a", "b")
+    assert np.array_equal(cam.read("a", signed=True), a - b)
+
+
+@given(st.integers(0, 2 ** 31))
+@settings(max_examples=15, deadline=None)
+def test_lut_add_property(seed):
+    rng = np.random.default_rng(seed)
+    W = int(rng.integers(2, 16))
+    n = int(rng.integers(1, 64))
+    cam = CAM(rows=n, bits=2 * W + 1)
+    cam.alloc("a", W); cam.alloc("b", W); cam.alloc("carry", 1)
+    a = rng.integers(0, 2 ** (W - 1), n)
+    b = rng.integers(0, 2 ** (W - 1), n)
+    cam.load("a", a); cam.load("b", b)
+    lut_add(cam, "a", "b")
+    assert np.array_equal(cam.read("a"), (a + b) % 2 ** W)
+
+
+@pytest.mark.parametrize("M,N,e", [(6, 16, 0), (8, 12, 1), (4, 8, 0),
+                                   (6, 8, 2), (8, 20, 0)])
+def test_dataflow_bit_exact_vs_jax(M, N, e):
+    cfg = PrecisionConfig(M=M, N=N, v_corr_extra=e,
+                          T_C=-4.0 if M == 4 else -7.0)
+    rng = np.random.default_rng(M * 100 + N)
+    x = rng.normal(0, 2, (6, 257)).astype(np.float32)
+    mask = rng.random((6, 257)) > 0.25
+    v = np.asarray(quantize_stable_scores(jnp.asarray(x), cfg,
+                                          mask=jnp.asarray(mask)))
+    ref = np.asarray(int_softmax_from_codes(
+        jnp.asarray(v), cfg, mask=jnp.asarray(mask), assume_stable=True))
+    got, _ = ap_softmax_rows(v, cfg, mask=mask)
+    assert np.array_equal(got, ref), "AP dataflow diverged from Algorithm 1"
+
+
+def test_dataflow_cycles_match_breakdown():
+    cfg = PrecisionConfig(M=6, N=16)
+    v = np.asarray(quantize_stable_scores(
+        jnp.asarray(np.random.default_rng(0).normal(0, 1, (1, 512)),
+                    jnp.float32), cfg))
+    _, ap = ap_softmax_vector(v[0], cfg)
+    br = cm.softmax_cycle_breakdown(cfg, 512)
+    for step, cyc in br.items():
+        assert ap.cycle_log.get(step, 0) == cyc, step
+    overhead = {"saturate", "mask_register"}
+    assert ap.cycles == sum(br.values()) + sum(
+        ap.cycle_log.get(s, 0) for s in overhead)
+
+
+def test_table2_formulas():
+    assert cm.cycles_add(6) == 2 * 6 + 8 * 6 + 6 + 1
+    assert cm.cycles_mult(6) == 2 * 6 + 8 * 36 + 2 * 6
+    assert cm.cycles_reduction(28, 4096) == 2 * 28 + 8 * 28 + 8 * 11 + 1
+
+
+def test_area_anchors():
+    """Paper Sec. V-B: 0.64 / 0.81 / 1.28 mm^2 for 7b/13b/70b."""
+    for model, paper in [("llama2-7b", 0.64), ("llama2-13b", 0.81),
+                         ("llama2-70b", 1.28)]:
+        area = summarize(model)["area_mm2"]
+        assert abs(area - paper) / paper < 0.05, (model, area, paper)
+
+
+def test_edp_always_favors_ap():
+    for model in ("llama2-7b", "llama2-13b", "llama2-70b"):
+        s = summarize(model)
+        assert s["min_edp_ratio_a100"] > 1.0, "paper: EDP ratio > 1 everywhere"
+
+
+def test_energy_ratio_peaks_at_small_batch_short_seq():
+    small = compare_point("llama2-7b", 128, 1)["a100_energy_ratio"]
+    big = compare_point("llama2-7b", 4096, 32)["a100_energy_ratio"]
+    assert small > big, "paper: highest savings at batch 1, seq 128"
+
+
+def test_latency_crossover_structure():
+    """AP slower at short seq, faster at 4096 for the largest model."""
+    short = compare_point("llama2-70b", 128, 8)["a100_latency_ratio"]
+    long_ = compare_point("llama2-70b", 4096, 8)["a100_latency_ratio"]
+    assert short < 1.0 < long_, (short, long_)
+
+
+def test_incam_division_costs_more_but_same_values():
+    cfg = PrecisionConfig(M=6, N=16)
+    v = np.asarray(quantize_stable_scores(
+        jnp.asarray(np.random.default_rng(3).normal(0, 1, (1, 128)),
+                    jnp.float32), cfg))
+    out_a, ap_a = ap_softmax_vector(v[0], cfg, incam_division=False)
+    out_b, ap_b = ap_softmax_vector(v[0], cfg, incam_division=True)
+    assert np.array_equal(out_a, out_b)
+    assert ap_b.cycles > ap_a.cycles

@@ -1,0 +1,69 @@
+"""Checkpointing: atomic commit, roundtrip exactness, retention, crash
+recovery, auto-resume."""
+
+import os
+import shutil
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.checkpoint.manager import CheckpointManager
+
+
+@pytest.fixture
+def tree():
+    rng = np.random.default_rng(0)
+    return {"params": {"w": jnp.asarray(rng.normal(0, 1, (8, 8)), jnp.float32),
+                       "b": jnp.asarray(rng.normal(0, 1, (8,)), jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32),
+            "nested": [jnp.arange(4), {"x": jnp.ones((2, 2))}]}
+
+
+def test_roundtrip_exact(tmp_path, tree):
+    ckpt.save(str(tmp_path), 10, tree, extra={"k": "v"})
+    restored, step, extra = ckpt.restore(str(tmp_path), tree)
+    assert step == 10 and extra == {"k": "v"}
+    for a, b in zip(np.asarray(restored["params"]["w"]),
+                    np.asarray(tree["params"]["w"])):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(np.asarray(restored["nested"][1]["x"]),
+                                  np.ones((2, 2)))
+
+
+def test_latest_and_retention(tmp_path, tree):
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    ckpt.cleanup(str(tmp_path), keep=2)
+    assert sorted(int(d[5:]) for d in os.listdir(tmp_path)) == [3, 4]
+
+
+def test_crash_leaves_tmp_only(tmp_path, tree):
+    ckpt.save(str(tmp_path), 1, tree)
+    # simulate a crash: a stale .tmp dir from a dead writer
+    os.makedirs(tmp_path / "step_000000002.tmp")
+    assert ckpt.latest_step(str(tmp_path)) == 1       # tmp ignored
+    ckpt.cleanup(str(tmp_path), keep=3)
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_shape_mismatch_rejected(tmp_path, tree):
+    ckpt.save(str(tmp_path), 1, tree)
+    bad = dict(tree)
+    bad["params"] = {"w": jnp.zeros((4, 4)), "b": tree["params"]["b"]}
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), bad)
+
+
+def test_manager_auto_resume(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), interval=5, keep=2)
+    assert mgr.maybe_save(3, tree) is None            # off schedule
+    assert mgr.maybe_save(5, tree) is not None
+    state, nxt = mgr.restore_or_init(lambda: tree)
+    assert nxt == 6
+    # cold start
+    mgr2 = CheckpointManager(str(tmp_path / "fresh"), interval=5)
+    state, nxt = mgr2.restore_or_init(lambda: {"a": jnp.zeros(1)})
+    assert nxt == 0

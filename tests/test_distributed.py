@@ -1,0 +1,99 @@
+"""Sharding rules, divisibility fallback, elastic re-mesh, data placement."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.elastic import plan_mesh, reshard_tree, survivors_after_failure
+from repro.distributed.sharding import DEFAULT_RULES, ShardingRules, make_mesh
+from repro.launch.specs import sharding_for
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    n = len(jax.devices())
+    return make_mesh((n, 1), ("data", "model"))
+
+
+def test_rules_spec_basic(mesh):
+    rules = ShardingRules()
+    assert rules.spec(("batch", None, "mlp"), mesh) == P(("data",), None, "model")
+    assert rules.spec(("embed", "vocab"), mesh) == P(("data",), "model")
+    # trailing Nones trimmed
+    assert rules.spec(("heads", None, None), mesh) == P("model")
+
+
+def test_rules_overrides(mesh):
+    rules = ShardingRules((("heads", None), ("kv_seq", "data")))
+    assert rules.spec(("heads",), mesh) == P()
+    assert rules.spec((None, "kv_seq"), mesh) == P(None, "data")
+
+
+def test_duplicate_mesh_axis_dropped(mesh):
+    rules = ShardingRules()
+    # "batch" (pod,data) then "embed" (pod,data): second use must drop used axes
+    spec = rules.spec(("batch", "embed"), mesh)
+    flat = []
+    for part in tuple(spec):
+        if isinstance(part, tuple):
+            flat.extend(part)
+        elif part:
+            flat.append(part)
+    assert len(flat) == len(set(flat)), f"mesh axis reused: {spec}"
+
+
+def test_sharding_for_divisibility():
+    # 4-way fake mesh via AbstractMesh-free arithmetic: use a (2,2) mesh shape
+    # through jax.sharding.Mesh over repeated devices is not possible on one
+    # CPU; validate the divisibility invariant instead: every axis kept by
+    # sharding_for must divide its dim.
+    import jax
+    mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
+    rules = ShardingRules()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim0 in (1, 5, 16, 50280, 152064):
+        sh = sharding_for((dim0, 8), ("vocab", "embed"), mesh, rules)
+        for i, part in enumerate(tuple(sh.spec)):
+            if part is None:
+                continue
+            names = (part,) if isinstance(part, str) else part
+            prod = 1
+            for n in names:
+                prod *= sizes[n]
+            assert (dim0, 8)[i] % prod == 0
+
+
+def test_plan_mesh():
+    assert plan_mesh(512, 16) == ((2, 16, 16), ("pod", "data", "model"))
+    assert plan_mesh(256, 16) == ((2, 8, 16), ("pod", "data", "model"))
+    assert plan_mesh(48, 16) == ((3, 16), ("data", "model"))
+    with pytest.raises(ValueError):
+        plan_mesh(8, 16)
+
+
+def test_survivors_after_failure():
+    mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
+    total = mesh.devices.size
+    assert survivors_after_failure(mesh, 0) == total
+    assert survivors_after_failure(mesh, 1) == total - 1  # model=1 row
+
+
+def test_reshard_tree(mesh):
+    rules = ShardingRules()
+    tree = {"w": jnp.ones((len(jax.devices()) * 2, 4))}
+    axes = {"w": ("batch", None)}
+    out = reshard_tree(tree, axes, mesh, rules)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    assert out["w"].sharding.spec == rules.spec(("batch", None), mesh)
+
+
+def test_shard_batch_roundtrip(mesh):
+    from repro.data.sharding import shard_batch
+    rules = ShardingRules()
+    b = len(jax.devices()) * 2
+    batch = {"tokens": np.arange(b * 8, dtype=np.int32).reshape(b, 8),
+             "positions": np.zeros((3, b, 8), np.int32)}
+    out = shard_batch(batch, mesh, rules)
+    np.testing.assert_array_equal(np.asarray(out["tokens"]), batch["tokens"])

@@ -1,0 +1,91 @@
+"""Dry-run machinery tests: HLO collective parsing, roofline terms, cell specs
+(the full 512-device matrix runs via repro.launch.dryrun; here we validate the
+machinery on the host mesh + one real subprocess cell, marked slow)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.roofline import collective_bytes, mfu_like, roofline_terms
+from repro.distributed.sharding import make_mesh
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_collective_parser_on_real_hlo():
+    n = len(jax.devices())
+    if n < 2:
+        mesh = make_mesh((1,), ("model",))
+    else:
+        mesh = make_mesh((n,), ("model",))
+    x = jax.ShapeDtypeStruct((n * 64, 128), jnp.float32)
+    sh = NamedSharding(mesh, P("model", None))
+    with jax.set_mesh(mesh):
+        f = jax.jit(lambda a: jnp.sum(a ** 2), in_shardings=sh)
+        comp = f.lower(x).compile()
+    coll = collective_bytes(comp.as_text())
+    total = sum(v for k, v in coll.items() if not k.startswith("_"))
+    if n > 1:
+        assert total > 0, "sharded reduction must emit a collective"
+    assert isinstance(coll["_counts"], dict)
+
+
+def test_collective_parser_synthetic():
+    hlo = """
+HloModule m
+ENTRY e {
+  %p0 = bf16[8,128]{1,0} parameter(0)
+  %ag = bf16[64,128]{1,0} all-gather(%p0), dimensions={0}
+  %ar = bf16[64,128]{1,0} all-reduce(%ag), to_apply=%sum
+  ROOT %out = bf16[64,128]{1,0} copy(%ar)
+}
+"""
+    coll = collective_bytes(hlo)
+    assert coll["all-gather"] == 8 * 128 * 2        # operand bytes
+    assert coll["all-reduce"] == 64 * 128 * 2
+    assert coll["_counts"]["all-gather"] == 1
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(197e12, 100e9, 1e9)   # 1s compute, .12s mem, .02s coll
+    assert t["dominant"] == "compute"
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    t2 = roofline_terms(1e12, 819e9, 500e9)
+    assert t2["dominant"] == "collective"
+
+
+def test_mfu_like():
+    assert abs(mfu_like(100.0, 1.0, 100) - 1.0) < 1e-9
+
+
+def test_shapes_and_applicability():
+    from repro.configs.registry import get_config
+    from repro.launch.specs import SHAPES, applicable
+    assert applicable(get_config("qwen2.5-32b"), SHAPES["long_500k"])
+    assert applicable(get_config("mamba2-780m"), SHAPES["long_500k"]) is None
+    assert applicable(get_config("hymba-1.5b"), SHAPES["long_500k"]) is None
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        assert applicable(get_config("whisper-base"), SHAPES[s]) is None
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_one_cell(tmp_path):
+    """The real thing: 512 fake devices, production mesh, one arch x shape."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "olmo-1b",
+         "--shape", "decode_32k", "--mesh", "single", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=560, cwd=REPO)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    with open(tmp_path / "single" / "olmo-1b__decode_32k.json") as f:
+        res = json.load(f)
+    assert res["n_chips"] == 256
+    assert res["flops_per_device"] > 0
+    assert res["roofline"]["dominant"] in ("compute", "memory", "collective")

@@ -1,0 +1,180 @@
+"""Algorithm-1 unit tests: exactness of every integer stage + the paper's
+precision-sensitivity findings at fidelity level."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    BEST, PrecisionConfig, fp_softmax, int_softmax, int_softmax_from_codes,
+    paper_sweep_grid, saturating_sum,
+)
+from repro.core.int_softmax import fixedpoint_div, int_exp_codes
+from repro.core.quantization import quantize_stable_scores
+
+
+def _kl(f, p):
+    f, p = np.asarray(f, np.float64), np.asarray(p, np.float64)
+    return float(np.mean(np.sum(f * (np.log(f + 1e-12) - np.log(p + 1e-12)), -1)))
+
+
+def test_table1_width_accounting():
+    # verified against every cell of the paper's Table I
+    for M, e in [(4, 0), (4, 1), (4, 2), (6, 0), (6, 1), (6, 2),
+                 (8, 0), (8, 1), (8, 2)]:
+        cfg = PrecisionConfig(M=M, v_corr_extra=e, T_C=-4.0 if M == 4 else -7.0)
+        assert cfg.w_vapprox == M + 6 + 2 * e
+        assert cfg.w_sum == cfg.w_vapprox + cfg.N
+        assert cfg.poly_max.bit_length() + cfg.exp_shift == cfg.w_vapprox
+    assert PrecisionConfig(M=8).v_ln2 == 12      # fits Table I's 4-bit column
+    assert PrecisionConfig(M=8).P_out == 28      # R column = 2M + 12
+
+
+def test_int_exp_monotone_and_bounded():
+    cfg = BEST
+    v = jnp.arange(-(2 ** (cfg.M - 1)), 1, dtype=jnp.int32)
+    e = np.asarray(int_exp_codes(v, cfg))
+    assert (np.diff(e) >= 0).all(), "integer exp must be monotone"
+    assert e.min() >= 0 and e.max() < 2 ** cfg.w_vapprox
+    # value fidelity: Algorithm 1 carries a systematic per-q drift because
+    # v_ln2 = floor(ln2/S) makes each >>q step off by e^(ln2 - v_ln2*S);
+    # assert the error stays within that analytic bound + poly error (6%).
+    import math
+    codes = np.arange(-(2 ** (cfg.M - 1)), 1)
+    ref = np.exp(codes * cfg.S)
+    got = e * cfg.exp_scale
+    qs = (-codes) // cfg.v_ln2
+    drift = np.exp(qs * (math.log(2) - cfg.v_ln2 * cfg.S)) - 1
+    bound = drift + 0.06 + (2.0 / np.maximum(e, 1))  # +- 1-code floor noise
+    rel = np.abs(got - ref) / ref
+    assert (rel <= bound).all(), (rel - bound).max()
+    assert np.abs(got - ref).max() < 0.05
+
+
+def test_exp_q0_code_fills_table1_width():
+    for M in (4, 6, 8):
+        cfg = PrecisionConfig(M=M, T_C=-4.0 if M == 4 else -7.0)
+        top = int(int_exp_codes(jnp.zeros((1,), jnp.int32), cfg)[0])
+        assert 2 ** (cfg.w_vapprox - 1) <= top < 2 ** cfg.w_vapprox
+
+
+def test_saturating_sum_equals_min():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 7, 100, 1000):
+        x = jnp.asarray(rng.integers(0, 2 ** 16, (3, n)), jnp.int32)
+        for sat in (2 ** 14 - 1, 2 ** 20 - 1, 2 ** 30 - 1):
+            got = np.asarray(saturating_sum(x, sat))
+            want = np.minimum(np.asarray(x, np.int64).sum(-1), sat)
+            assert (got == want).all()
+
+
+def test_fixedpoint_div_exact():
+    rng = np.random.default_rng(1)
+    num = rng.integers(0, 2 ** 18, 500)
+    den = rng.integers(2 ** 18, 2 ** 29, 500)
+    got = np.asarray(fixedpoint_div(jnp.asarray(num, jnp.int32),
+                                    jnp.asarray(den, jnp.int32), 24))
+    want = (num.astype(object) * 2 ** 24) // den.astype(object)
+    assert (got.astype(object) == want).all()
+
+
+def test_probability_codes_sum_to_one():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 2, (8, 512)), jnp.float32)
+    for cfg in (BEST, PrecisionConfig(M=8, N=16)):
+        p = np.asarray(int_softmax(x, cfg))
+        s = p.sum(-1)
+        assert (np.abs(s - 1.0) < 2e-3).all(), s
+
+
+def test_masking_zeroes_and_no_leak():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 1, (4, 64)), jnp.float32)
+    mask = jnp.asarray(np.tril(np.ones((4, 64), bool), k=10))
+    p = np.asarray(int_softmax(x, BEST, mask=mask))
+    assert (p[~np.asarray(mask)] == 0).all()
+    assert (np.abs(p.sum(-1) - 1.0) < 2e-3).all()
+
+
+def test_fully_masked_row_is_zero():
+    x = jnp.zeros((2, 16), jnp.float32)
+    mask = jnp.zeros((2, 16), bool)
+    p = np.asarray(int_softmax(x, BEST, mask=mask))
+    assert (p == 0).all()
+
+
+def test_integer_max_subtract_path():
+    """Alg.1 line 4 on absolutely-quantized codes == stabilized path."""
+    from repro.core.quantization import quantize_raw_scores
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(2.0, 1.0, (4, 128)), jnp.float32)
+    cfg = BEST
+    calib_max = float(x.max())
+    v_raw = quantize_raw_scores(x, cfg, calib_max=calib_max)
+    p_raw = int_softmax_from_codes(v_raw, cfg)
+    f = fp_softmax(x)
+    p = np.asarray(p_raw, np.float64) * 2.0 ** (-cfg.P_out)
+    assert _kl(f, p) < 0.05
+
+
+@pytest.mark.parametrize("M,expect_bad", [(4, True), (6, False), (8, False)])
+def test_paper_finding_M4_unusable(M, expect_bad):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(0, 2, (16, 1024)), jnp.float32)
+    cfg = PrecisionConfig(M=M, N=16, T_C=-4.0 if M == 4 else -7.0)
+    kl = _kl(fp_softmax(x), int_softmax(x, cfg))
+    if expect_bad:
+        assert kl > 0.05
+    else:
+        assert kl < 0.02
+
+
+def test_paper_finding_N_saturates_at_16():
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(0, 0.5, (4, 16384)), jnp.float32)  # diffuse, long
+    f = fp_softmax(x)
+    def tv(cfg):
+        return float(np.abs(np.asarray(int_softmax(x, cfg)) - np.asarray(f)).sum(-1).mean())
+    tv8 = tv(PrecisionConfig(M=6, N=8))
+    tv16 = tv(PrecisionConfig(M=6, N=16))
+    tv20 = tv(PrecisionConfig(M=6, N=20))
+    assert tv8 > 5 * tv16, (tv8, tv16)          # N=8 breaks (saturated sum)
+    assert abs(tv16 - tv20) < 1e-6              # N>=16 saturated
+
+
+def test_paper_finding_vcorr_width_irrelevant():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(0, 2, (8, 512)), jnp.float32)
+    outs = [np.asarray(int_softmax(x, PrecisionConfig(M=6, N=16, v_corr_extra=e)))
+            for e in (0, 1, 2)]
+    # v_corr never clips for any paper config -> e changes only exp_shift
+    # resolution; distributions must agree to ~1 code
+    assert np.abs(outs[0] - outs[1]).max() < 2e-3
+    assert np.abs(outs[0] - outs[2]).max() < 2e-3
+
+
+def test_full_grid_runs():
+    x = jnp.asarray(np.random.default_rng(8).normal(0, 1, (2, 64)), jnp.float32)
+    for cfg in paper_sweep_grid():
+        p = np.asarray(int_softmax(x, cfg))
+        assert np.isfinite(p).all() and (p >= 0).all()
+
+
+def test_int_softmax_ste_forward_and_gradient():
+    """STE: integer forward, FP-softmax Jacobian backward (QAT contract)."""
+    import jax
+    from repro.core import int_softmax_ste
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(0, 1, (4, 64)), jnp.float32)
+    mask = jnp.asarray(rng.random((4, 64)) > 0.3)
+    g = jnp.asarray(rng.normal(0, 1, (4, 64)), jnp.float32)
+    # forward identical to the plain integer softmax
+    np.testing.assert_array_equal(
+        np.asarray(int_softmax_ste(x, BEST, mask=mask)),
+        np.asarray(int_softmax(x, BEST, mask=mask)))
+    # backward == fp softmax gradient; plain int gradient is zero a.e.
+    gi = jax.grad(lambda t: (int_softmax_ste(t, BEST, mask=mask) * g).sum())(x)
+    gf = jax.grad(lambda t: (fp_softmax(t, mask=mask) * g).sum())(x)
+    g0 = jax.grad(lambda t: (int_softmax(t, BEST, mask=mask) * g).sum())(x)
+    assert bool(jnp.allclose(gi, gf, atol=1e-6))
+    assert float(jnp.abs(g0).max()) == 0.0

@@ -1,0 +1,102 @@
+"""Pallas kernel sweeps: shapes x dtypes x precisions vs the ref.py oracles
+(interpret mode on CPU; the kernels' BlockSpecs target TPU VMEM)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.precision import BEST, PrecisionConfig
+from repro.kernels.int_attention.ops import int_attention_pallas
+from repro.kernels.int_attention.ref import int_attention_ref
+from repro.kernels.int_softmax.ops import int_softmax_pallas
+from repro.kernels.int_softmax.ref import int_softmax_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("rows,cols", [(4, 128), (17, 256), (1, 1000),
+                                       (33, 2048), (8, 64)])
+@pytest.mark.parametrize("M", [4, 6, 8])
+def test_int_softmax_kernel_exact(rows, cols, M):
+    cfg = PrecisionConfig(M=M, N=16, T_C=-4.0 if M == 4 else -7.0)
+    x = jnp.asarray(RNG.normal(0, 2, (rows, cols)), jnp.float32)
+    got = int_softmax_pallas(x, cfg)
+    want = int_softmax_ref(x, cfg)
+    assert jnp.array_equal(got, want), "integer path must be bit-exact"
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int_softmax_kernel_dtypes(dtype):
+    x = jnp.asarray(RNG.normal(0, 2, (8, 512)), dtype)
+    got = int_softmax_pallas(x, BEST)
+    want = int_softmax_ref(x, BEST)
+    if dtype == jnp.float32:
+        assert jnp.array_equal(got, want)
+    else:
+        # bf16 inputs: jit vs eager f32 upcast arithmetic (div vs recip-mul)
+        # can flip a quantization boundary by 1 ulp -> one input code
+        assert float(jnp.abs(got - want).max()) < 3e-3
+
+
+def test_int_softmax_kernel_masked():
+    x = jnp.asarray(RNG.normal(0, 1, (16, 300)), jnp.float32)
+    mask = jnp.asarray(RNG.random((16, 300)) > 0.3)
+    got = int_softmax_pallas(x, BEST, mask=mask)
+    want = int_softmax_ref(x, BEST, mask=mask)
+    assert jnp.array_equal(got, want)
+
+
+def test_int_softmax_kernel_row_blocks():
+    x = jnp.asarray(RNG.normal(0, 1, (30, 256)), jnp.float32)
+    outs = [int_softmax_pallas(x, BEST, row_block=rb) for rb in (1, 4, 8, 32)]
+    for o in outs[1:]:
+        assert jnp.array_equal(outs[0], o), "row blocking must not change values"
+
+
+# fused attention: score matmul reorder can flip a quantization boundary
+# (f32 ulp -> one input code -> ~e^S relative on one element); tolerance
+# documents that, the integer path itself is exact (tests above).
+ATOL = 5e-3
+
+
+@pytest.mark.parametrize("b,h,kv,sq,skv,d", [
+    (2, 4, 2, 64, 64, 32), (1, 8, 8, 96, 96, 64), (2, 4, 1, 33, 33, 32),
+    (1, 2, 2, 16, 64, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_int_attention_kernel(b, h, kv, sq, skv, d, causal):
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, sq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, kv, skv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, kv, skv, d)), jnp.float32)
+    got = int_attention_pallas(q, k, v, BEST, causal=causal, blk_q=16)
+    want = int_attention_ref(q, k, v, BEST, causal=causal)
+    assert float(jnp.abs(got - want).max()) < ATOL
+
+
+def test_int_attention_window():
+    q = jnp.asarray(RNG.normal(0, 1, (1, 4, 64, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (1, 2, 64, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (1, 2, 64, 32)), jnp.float32)
+    got = int_attention_pallas(q, k, v, BEST, causal=True, window=16, blk_q=16)
+    want = int_attention_ref(q, k, v, BEST, causal=True, window=16)
+    assert float(jnp.abs(got - want).max()) < ATOL
+
+
+def test_int_attention_bf16_inputs():
+    q = jnp.asarray(RNG.normal(0, 1, (1, 4, 32, 32)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(0, 1, (1, 4, 32, 32)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(0, 1, (1, 4, 32, 32)), jnp.bfloat16)
+    got = int_attention_pallas(q, k, v, BEST, blk_q=16)
+    want = int_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), BEST)
+    assert float(jnp.abs(got - want).max()) < 2e-2  # bf16 score noise
+
+
+def test_int_attention_blkq_invariance():
+    q = jnp.asarray(RNG.normal(0, 1, (1, 2, 64, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (1, 2, 64, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (1, 2, 64, 32)), jnp.float32)
+    outs = [int_attention_pallas(q, k, v, BEST, blk_q=bq) for bq in (16, 32, 64)]
+    for o in outs[1:]:
+        # PV dot accumulation order varies with the LHS tile shape (f32 ulp)
+        assert float(jnp.abs(outs[0] - o).max()) < 1e-6

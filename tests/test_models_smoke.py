@@ -1,0 +1,159 @@
+"""Per-arch smoke tests: REDUCED config of the same family, one forward and
+one train step on CPU, asserting shapes + no NaNs (full configs are exercised
+only by the dry-run)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS, smoke_config
+from repro.core.softmax_variants import SoftmaxSpec
+from repro.data.synthetic import family_batch
+from repro.models import build_model
+from repro.training.optimizer import AdamW, constant_schedule
+from repro.training.step import init_state, make_train_step
+
+B, S = 2, 64
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_forward_and_train_step(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    batch = {k: jnp.asarray(v) for k, v in family_batch(cfg, B, S, seed=0).items()}
+    logits, aux = jax.jit(model.train_logits)(model.init_split(jax.random.PRNGKey(0))[0], batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+    opt = AdamW(lr=constant_schedule(1e-3))
+    state = init_state(model, opt, jax.random.PRNGKey(1))
+    step = jax.jit(make_train_step(model, opt))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "deepseek-v2-236b",
+                                  "mamba2-780m", "hymba-1.5b", "whisper-base"])
+def test_arch_int_softmax_forward(arch):
+    """The paper's technique plugged into each family (no-op for SSM)."""
+    cfg = smoke_config(arch, softmax=SoftmaxSpec("int"))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in family_batch(cfg, B, S, seed=1).items()}
+    logits, _ = jax.jit(model.train_logits)(params, batch)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "minicpm3-4b", "dbrx-132b",
+                                  "hymba-1.5b", "whisper-base", "qwen2-vl-7b",
+                                  "mamba2-780m"])
+def test_arch_prefill_decode_consistency(arch):
+    cfg = smoke_config(arch)
+    if cfg.family == "moe":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no drops
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    fb = family_batch(cfg, B, 16, seed=2)
+    batch = {k: jnp.asarray(v) for k, v in fb.items() if k != "labels"}
+    full, _ = jax.jit(model.train_logits)(
+        {**params}, {**batch, "labels": jnp.asarray(fb["labels"])})
+    pre_in = {k: (v[:, :8] if k == "tokens" else
+                  (v[:, :, :8] if k == "positions" else v))
+              for k, v in batch.items()}
+    pre, cache = model.prefill(params, pre_in, cache_len=16)
+    assert float(jnp.abs(pre[:, 0] - full[:, 7]).max()) < 0.15  # bf16
+    dec = jax.jit(model.decode_step)
+    errs = []
+    for t in range(8, 12):
+        din = {"token": batch["tokens"][:, t:t + 1]}
+        if cfg.rope_type == "mrope":
+            din["positions"] = batch["positions"][:, :, t:t + 1]
+        lg, cache = dec(params, cache, din, jnp.int32(t))
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+    assert max(errs) < 0.25, errs  # bf16 recurrence/absorption reorder
+
+
+def test_param_counts_match_published():
+    from repro.configs.registry import get_config
+    published = {"qwen2.5-32b": 32.8e9, "deepseek-7b": 6.9e9,
+                 "minicpm3-4b": 4.1e9, "olmo-1b": 1.2e9,
+                 "mamba2-780m": 0.83e9, "dbrx-132b": 132e9,
+                 "deepseek-v2-236b": 236e9, "hymba-1.5b": 1.5e9,
+                 # whisper: +10M vs the paper's 73M because the zoo uses a
+                 # uniform gated (GLU) MLP for every family (DESIGN.md)
+                 "whisper-base": 0.083e9, "qwen2-vl-7b": 7.6e9}
+    for arch, want in published.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < 0.12, (arch, got, want)
+
+
+def test_moe_impl_equivalence():
+    """gather vs scatter_combine dispatch: identical math (exact in f32)."""
+    import dataclasses
+    from repro.models.moe import (_moe_apply_gather,
+                                  _moe_apply_scatter_combine, moe_init)
+    from repro.models.layers import Ctx, split_tree
+    from repro.configs.base import ModelConfig
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=64, n_experts=8,
+                      moe_top_k=2, d_ff_expert=64, capacity_factor=1.0,
+                      n_shared_experts=1)
+    p, _ = split_tree(moe_init(jax.random.PRNGKey(0), cfg))
+    ctx = Ctx(dtype=jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (2, 16, 32)),
+                    jnp.float32)
+    ya, aux_a = _moe_apply_gather(p, x, cfg, ctx)
+    yb, aux_b = _moe_apply_scatter_combine(p, x, cfg, ctx)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb),
+                               rtol=1e-5, atol=1e-6)
+    assert abs(float(aux_a) - float(aux_b)) < 1e-6
+
+
+def test_moe_a2a_equivalence():
+    """a2a dispatch == gather dispatch (exact in f32, no drops) + grads flow."""
+    import dataclasses
+    from repro.models.moe import moe_init, moe_apply
+    from repro.models.layers import Ctx, split_tree
+    from repro.configs.base import ModelConfig
+    cfg_a = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                        n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                        n_experts=8, moe_top_k=2, d_ff_expert=64,
+                        capacity_factor=16.0, n_shared_experts=1,
+                        moe_impl="a2a", moe_a2a_segments=4)
+    cfg_g = dataclasses.replace(cfg_a, moe_impl="gather")
+    p, _ = split_tree(moe_init(jax.random.PRNGKey(0), cfg_a))
+    from repro.models.layers import Ctx
+    ctx = Ctx(dtype=jnp.float32)
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 1, (2, 16, 32)),
+                    jnp.float32)
+    ya, _ = moe_apply(p, x, cfg_g, ctx)
+    yb, _ = moe_apply(p, x, cfg_a, ctx)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb),
+                               rtol=1e-5, atol=1e-6)
+    g = jax.grad(lambda pp: moe_apply(pp, x, cfg_a, ctx)[0].sum())(p)
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))
+
+
+def test_hybrid_ring_buffer_wraparound():
+    """Decode far past the sliding window: ring-cache slots wrap and the
+    masked window must keep matching the full (non-ring) computation."""
+    import dataclasses
+    cfg = smoke_config("hymba-1.5b")
+    cfg = dataclasses.replace(cfg, window=8, max_seq=64, ssm_chunk=8)
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(3).integers(
+        0, cfg.vocab, (2, 40)), jnp.int32)
+    # reference: full forward over all 40 tokens
+    full, _ = jax.jit(model.train_logits)(params, {"tokens": toks})
+    # decode token-by-token from position 4 -> wraps the 8-slot ring 4x
+    pre, cache = model.prefill(params, {"tokens": toks[:, :4]}, cache_len=40)
+    dec = jax.jit(model.decode_step)
+    errs = []
+    for t in range(4, 40):
+        lg, cache = dec(params, cache, {"token": toks[:, t:t + 1]},
+                        jnp.int32(t))
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+    assert max(errs) < 0.35, max(errs)  # bf16 recurrence noise only

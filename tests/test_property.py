@@ -1,0 +1,83 @@
+"""Hypothesis property tests on the system's integer-arithmetic invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BEST, PrecisionConfig, int_softmax, saturating_sum
+from repro.core.int_softmax import fixedpoint_div, int_exp_codes
+from repro.core.quantization import affine_dequantize, affine_qparams, affine_quantize
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.lists(st.integers(0, 2 ** 18 - 1), min_size=1, max_size=200),
+       st.integers(10, 30))
+@settings(**SETTINGS)
+def test_saturating_sum_is_min_of_sum(vals, sat_bits):
+    sat = min(2 ** sat_bits - 1, 2 ** 30 - 1)
+    got = int(saturating_sum(jnp.asarray(vals, jnp.int32), sat))
+    assert got == min(sum(vals), sat)
+
+
+@given(st.integers(0, 2 ** 20 - 1), st.integers(1, 2 ** 29),
+       st.integers(1, 28))
+@settings(**SETTINGS)
+def test_fixedpoint_div_is_floor(num, den, p):
+    num = num % den  # contract: num <= den
+    got = int(fixedpoint_div(jnp.asarray([num], jnp.int32),
+                             jnp.asarray([den], jnp.int32), p)[0])
+    assert got == (num * 2 ** p) // den
+
+
+@given(st.sampled_from([6, 8]),
+       st.lists(st.floats(-30, 5, allow_nan=False), min_size=2, max_size=64))
+@settings(**SETTINGS)
+def test_int_softmax_invariants(M, scores):
+    cfg = PrecisionConfig(M=M, N=16)
+    x = jnp.asarray(np.array(scores, np.float32))[None, :]
+    p = np.asarray(int_softmax(x, cfg))[0]
+    assert (p >= 0).all()
+    assert p.sum() <= 1.0 + 1e-6          # codes sum to <= 2^P_out (floor div)
+    assert p.sum() > 0.5                  # and don't collapse
+    # monotonicity: strictly larger score -> no smaller probability
+    order = np.argsort(np.array(scores))
+    ps = p[order]
+    xs = np.array(scores)[order]
+    for i in range(len(xs) - 1):
+        if xs[i + 1] > xs[i] + 1e-6:
+            assert ps[i + 1] >= ps[i] - 1e-9
+
+
+@given(st.lists(st.integers(-(2 ** 5), 0), min_size=1, max_size=64))
+@settings(**SETTINGS)
+def test_int_exp_monotone_property(codes):
+    cfg = BEST
+    v = jnp.asarray(np.clip(codes, -(2 ** (cfg.M - 1)), 0), jnp.int32)
+    e = np.asarray(int_exp_codes(v, cfg))
+    order = np.argsort(np.asarray(v))
+    assert (np.diff(e[order]) >= 0).all()
+
+
+@given(st.floats(-100, -0.1), st.floats(0.1, 100), st.integers(3, 8))
+@settings(**SETTINGS)
+def test_affine_quant_roundtrip_error_bounded(lo, hi, bits):
+    scale, zero = affine_qparams(lo, hi, bits)
+    x = jnp.asarray(np.linspace(lo, hi, 100), jnp.float32)
+    q = affine_quantize(x, scale, zero, bits)
+    back = np.asarray(affine_dequantize(q, scale, zero))
+    assert np.abs(back - np.asarray(x)).max() <= scale * 0.51 + 1e-6
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_shift_invariance_up_to_quantization(seed):
+    """Softmax shift invariance survives integer quantization up to f32
+    rounding at quantization-grid boundaries (a single input-code flip moves
+    one element's mass by <= e^S - 1)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (1, 32)).astype(np.float32)
+    p1 = np.asarray(int_softmax(jnp.asarray(x), BEST))
+    p2 = np.asarray(int_softmax(jnp.asarray(x + 13.7), BEST))
+    tv = 0.5 * np.abs(p1 - p2).sum()
+    assert tv < 0.05, tv

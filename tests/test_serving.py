@@ -1,0 +1,78 @@
+"""Serving engine: generation loop, sampler determinism, int-softmax serving."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import smoke_config
+from repro.core.softmax_variants import SoftmaxSpec
+from repro.data.synthetic import SyntheticCorpus
+from repro.models import build_model
+from repro.serving.engine import Engine
+from repro.serving.sampler import greedy, temperature
+
+
+def _trained_model(steps=80):
+    from repro.training.optimizer import AdamW, cosine_schedule
+    from repro.training.step import init_state, make_train_step
+    cfg = smoke_config("olmo-1b")
+    m = build_model(cfg)
+    opt = AdamW(lr=cosine_schedule(1e-2, 10, 200))
+    state = init_state(m, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(m, opt))
+    corpus = SyntheticCorpus(cfg.vocab, seed=1)
+    for i in range(steps):
+        state, _ = step(state, {k: jnp.asarray(v)
+                                for k, v in corpus.batch(16, 64, seed=i).items()})
+    return cfg, m, state.params, corpus
+
+
+def test_generate_and_int_agreement():
+    cfg, m, params, corpus = _trained_model()
+    eng = Engine(m, params, max_new=8)
+    prompts = corpus.sample(4, 8, seed=77)[:, :8]
+    res = eng.generate(prompts)
+    assert res.tokens.shape == (4, 16)
+    # generated transitions follow the learned chain most of the time
+    ok = sum(int(row[t + 1] in corpus.table[row[t]])
+             for row in res.tokens for t in range(7, 15))
+    assert ok >= 24, ok  # >= 75%
+    # the paper's claim: int softmax does not change behavior
+    m_int = build_model(cfg.with_softmax(SoftmaxSpec("int")))
+    res_int = Engine(m_int, params, max_new=8).generate(prompts)
+    agree = (res_int.tokens == res.tokens).mean()
+    assert agree > 0.9, agree
+
+
+def test_samplers():
+    logits = jnp.asarray([[0.0, 5.0, 1.0]])
+    assert int(greedy(logits)[0]) == 1
+    k = jax.random.PRNGKey(0)
+    t = temperature(jnp.repeat(logits, 64, 0), k, temp=0.01)
+    assert (np.asarray(t) == 1).mean() > 0.95
+    tk = temperature(jnp.repeat(logits, 64, 0), k, temp=10.0, top_k=2)
+    assert set(np.unique(np.asarray(tk))) <= {1, 2}
+
+
+def test_int8_kv_cache_decode_close_to_full_precision():
+    """kv_quant: decode against the int8 cache tracks fp decode closely and
+    halves+ the cache bytes (the decode-cell memory-term lever, §Perf)."""
+    import dataclasses
+    cfg, m, params, corpus = _trained_model(steps=40)
+    cfg_q = dataclasses.replace(cfg, kv_quant=True)
+    mq = build_model(cfg_q)
+    toks = corpus.sample(2, 16, seed=5)
+    full, _ = jax.jit(m.train_logits)(params, {"tokens": jnp.asarray(toks[:, :16])})
+    pre, cache = mq.prefill(params, {"tokens": jnp.asarray(toks[:, :8])}, cache_len=16)
+    errs = []
+    for t in range(8, 16):
+        lg, cache = mq.decode_step(params, cache,
+                                   {"token": jnp.asarray(toks[:, t:t+1])},
+                                   jnp.int32(t))
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+    # int8 KV noise is bounded (logits O(10)); greedy decisions survive
+    assert max(errs) < 0.5, errs
+    leaves = {".".join(str(getattr(p, "key", p)) for p in path): l
+              for path, l in jax.tree_util.tree_flatten_with_path(cache)[0]}
+    ks = [l for name, l in leaves.items() if name.endswith(".k")]
+    assert all(l.dtype == jnp.int8 for l in ks)

@@ -1,0 +1,57 @@
+"""Straggler monitor: detection levels + mitigation glue."""
+
+from repro.distributed.straggler import Recommendation, StragglerMonitor, mitigate
+
+
+def test_healthy_run_stays_quiet():
+    m = StragglerMonitor()
+    recs = [m.observe(1.0 + 0.01 * (i % 3)) for i in range(100)]
+    assert all(r.level == 0 for r in recs[m.warmup:])
+
+
+def test_transient_spike_logged_not_escalated():
+    m = StragglerMonitor()
+    for _ in range(20):
+        m.observe(1.0)
+    r = m.observe(3.0)
+    assert r.level == 1 and r.action == "log"
+    assert m.observe(1.0).level == 0  # recovers immediately
+
+
+def test_sustained_slowdown_checkpoints_then_remeshes():
+    m = StragglerMonitor(sustain_steps=5, chronic_steps=15)
+    for _ in range(20):
+        m.observe(1.0)
+    actions = [m.observe(1.5).action for _ in range(15)]
+    assert "checkpoint" in actions
+    assert actions[-1] == "remesh"
+
+
+def test_slow_steps_do_not_poison_baseline():
+    m = StragglerMonitor(sustain_steps=3, chronic_steps=100)
+    for _ in range(20):
+        m.observe(1.0)
+    for _ in range(30):
+        m.observe(1.6)   # sustained slow — excluded from the median
+    assert abs(m.median() - 1.0) < 0.05
+
+
+class _FakeMgr:
+    def __init__(self):
+        self.saved = []
+
+    def maybe_save(self, step, state, force=False):
+        self.saved.append((step, force))
+        return "path"
+
+
+def test_mitigate_glue():
+    mgr = _FakeMgr()
+    done = mitigate(Recommendation(2, "checkpoint", "slow", 1.5),
+                    mgr, state={}, step=42)
+    assert "checkpointed" in done and mgr.saved == [(42, True)]
+    called = []
+    done = mitigate(Recommendation(3, "remesh", "chronic", 1.8), mgr,
+                    state={}, step=43, remesh_fn=lambda: called.append(1))
+    assert called and "re-mesh" in done
+    assert mitigate(Recommendation(0, "none", "ok", 1.0), mgr, {}, 1) is None
