@@ -7,8 +7,8 @@ from __future__ import annotations
 
 from benchmarks.common import Row
 from repro.ap.pipeline import (
-    BATCHES, SEQ_LENS, compare_point, energy_per_op_pj, fig1_softmax_fraction,
-    summarize,
+    BATCHES, SEQ_LENS, compare_point, energy_per_cell_cycle_pj,
+    energy_per_op_pj, fig1_softmax_fraction, summarize,
 )
 from repro.core.precision import BEST, PrecisionConfig
 
@@ -62,10 +62,10 @@ def table6_energy_per_op() -> list:
     e_elem = energy_per_op_pj(BEST, 4096)
     # per-cell-cycle energy: the only "op" reading in the paper's quoted
     # magnitude (see EXPERIMENTS.md discussion of Table VI consistency)
-    from repro.ap.cost_model import E_CELL_FJ
     rows.append(("table6.energy_per_word_op_pJ", 0.0, f"{e_elem:.3e}"))
     rows.append(("table6.energy_per_cell_cycle_pJ", 0.0,
-                 f"{E_CELL_FJ*1e-3:.2e}(paper:5.88e-3;consmax:0.2;softermax:0.7)"))
+                 f"{energy_per_cell_cycle_pj():.2e}"
+                 f"(paper:5.88e-3;consmax:0.2;softermax:0.7)"))
     return rows
 
 

@@ -1,13 +1,18 @@
 """End-to-end SoftmAP evaluation pipeline: AP vs GPU energy / latency / EDP
-for the paper's Llama2 workloads (Figs. 6-8, Tables V-VI, area numbers)."""
+for the paper's Llama2 workloads (Figs. 6-8, Tables V-VI, area numbers).
+
+The AP side is priced through the softmax execution-backend registry
+(``repro.backends``): the same ``meter`` that serves per-request cost
+telemetry in ``serving.engine`` produces the paper-figure numbers here, so
+benchmarks and serving can never drift apart. ``cost_model`` is reached only
+through the backend."""
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List
 
-from repro.ap import cost_model as cm
 from repro.ap import gpu_model as gm
+from repro.backends import get_backend
 from repro.core.precision import BEST, PrecisionConfig
 
 # Llama2 attention geometry (q heads define softmax rows; Sec. IV)
@@ -22,27 +27,31 @@ AREA_SEQ = 4096  # APs are provisioned for the paper's max sequence length
 SEQ_LENS = (128, 256, 512, 1024, 2048, 4096)
 BATCHES = (1, 2, 4, 8, 16, 32)
 
+# Any integer-family backend meters identically (they share the Table-II
+# model); ap_sim is the canonical "this is the hardware" choice.
+AP_BACKEND = "ap_sim"
+
 
 def compare_point(model: str, seq_len: int, batch: int,
                   cfg: PrecisionConfig = BEST) -> Dict:
     """One (model, L, B) cell: per-layer softmax cost on AP vs both GPUs."""
     spec = LLAMA_SPECS[model]
     h = spec["heads"]
-    ap = cm.attention_softmax_cost(cfg, seq_len, batch, h)
-    area = h * cm.APDesign(rows=AREA_SEQ // 2,
-                           row_bits=cm.row_bits_for(cfg)).area_mm2
+    backend = get_backend(AP_BACKEND, cfg)
+    # full prefill attention matrix: batch x heads x seq_len rows of seq_len
+    ap = backend.meter((batch, h, seq_len, seq_len), heads=h)
+    area = h * backend.design(AREA_SEQ).area_mm2
     out = {"model": model, "seq_len": seq_len, "batch": batch,
-           "ap_latency_s": ap["latency_s"], "ap_energy_j": ap["energy_j"],
-           "ap_area_mm2": area}
+           "ap_latency_s": ap.latency_s, "ap_energy_j": ap.energy_j,
+           "ap_cycles": ap.cycles, "ap_area_mm2": area}
     for g in (gm.A100, gm.RTX3090):
         c = gm.softmax_cost(g, batch, h, seq_len, seq_len)
         k = g.name.lower()
         out[f"{k}_latency_s"] = c["latency_s"]
         out[f"{k}_energy_j"] = c["energy_j"]
-        out[f"{k}_energy_ratio"] = c["energy_j"] / ap["energy_j"]
-        out[f"{k}_latency_ratio"] = c["latency_s"] / ap["latency_s"]
-        out[f"{k}_edp_ratio"] = (c["energy_j"] * c["latency_s"]) / (
-            ap["energy_j"] * ap["latency_s"])
+        out[f"{k}_energy_ratio"] = c["energy_j"] / ap.energy_j
+        out[f"{k}_latency_ratio"] = c["latency_s"] / ap.latency_s
+        out[f"{k}_edp_ratio"] = (c["energy_j"] * c["latency_s"]) / ap.edp
     return out
 
 
@@ -91,9 +100,14 @@ def _crossover(rows) -> int:
 def energy_per_op_pj(cfg: PrecisionConfig = BEST, seq_len: int = 4096) -> float:
     """Table VI metric: softmax energy / elementary word-ops (13 dataflow steps
     per word)."""
-    _, _, energy, _ = cm.softmax_vector_cost(cfg, seq_len)
+    rep = get_backend(AP_BACKEND, cfg).meter((1, seq_len))
     word_ops = seq_len * 13
-    return energy / word_ops * 1e12
+    return rep.energy_j / word_ops * 1e12
+
+
+def energy_per_cell_cycle_pj(cfg: PrecisionConfig = BEST) -> float:
+    """The 16 nm per-cell-per-cycle energy the backend's meter is built on."""
+    return get_backend(AP_BACKEND, cfg).cell_energy_fj * 1e-3
 
 
 def fig1_softmax_fraction(seq_lens=(128, 512, 1024, 2048, 4096, 8192, 16384),

@@ -1,0 +1,24 @@
+"""Softmax execution backends: one algorithm body, many substrates.
+
+The registry maps string keys to :class:`SoftmaxBackend` implementations —
+``fp`` / ``fp_lowp`` / ``clipped_fp`` (floating-point baselines), ``int_jax``
+(alias ``int``), ``int_ste``, ``int_pallas`` (the integer family, all running
+the shared Alg.-1 body from ``core.alg1``), and ``ap_sim`` (the functional
+2D-AP simulator as a real execution target). Integer backends also *meter*:
+``meter(shape)`` prices the work on the paper's AP via the Table-II cost
+model, and ``repro.backends.telemetry`` accumulates those prices across a
+model forward pass into per-request :class:`CostReport`\\ s.
+"""
+
+from repro.backends.base import CostReport, SoftmaxBackend, ZERO_COST
+from repro.backends.registry import (
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from repro.backends import telemetry  # noqa: F401
+
+__all__ = [
+    "CostReport", "SoftmaxBackend", "ZERO_COST", "available_backends",
+    "get_backend", "register_backend", "telemetry",
+]

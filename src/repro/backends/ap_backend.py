@@ -1,0 +1,72 @@
+"""``ap_sim`` backend: the functional 2D-AP simulator as an execution target.
+
+Routes softmax rows through the Fig.-5 dataflow program
+(``ap.dataflow.ap_softmax_vector`` on ``ap.functional_sim.APSim``) via
+``jax.pure_callback``, so the bit-exact hardware simulation can sit inside a
+jit-traced model forward pass — small models really *serve* through the AP
+simulator instead of it being a standalone script. The float boundary is the
+same as every integer backend: ``quantize_stable_scores`` on the way in, one
+multiply by 2^-P_out on the way out; the codes in between are produced by the
+simulated hardware.
+
+Cost metering stays analytic (the shared Table-II meter): the dataflow program
+charges exactly ``cost_model.softmax_cycle_breakdown`` per vector, so the
+metered cycles equal what the simulator would log, without paying a host
+round-trip at meter time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ap.dataflow import ap_softmax_rows
+from repro.backends.jax_backends import IntBackendBase
+from repro.backends.registry import register_backend
+from repro.core.quantization import dequantize_probs, quantize_stable_scores
+
+
+@register_backend("ap_sim")
+class APSimBackend(IntBackendBase):
+    """Bit-exact functional AP execution (host callback; CPU-speed)."""
+
+    name = "ap_sim"
+    differentiable = False  # no VJP through pure_callback
+
+    def apply(self, scores, mask=None, axis: int = -1):
+        cfg = self.cfg
+        x = jnp.asarray(scores)
+        ax = axis if axis >= 0 else x.ndim + axis
+        moved = ax != x.ndim - 1
+        if mask is not None:
+            mask = jnp.broadcast_to(mask, x.shape)
+        if moved:
+            x = jnp.moveaxis(x, ax, -1)
+            if mask is not None:
+                mask = jnp.moveaxis(mask, ax, -1)
+        shape = x.shape
+        v = quantize_stable_scores(x, cfg, mask=mask, axis=-1)
+        v2 = v.reshape(-1, shape[-1])
+        out_sd = jax.ShapeDtypeStruct(v2.shape, jnp.int32)
+
+        if mask is None:
+            def host(codes):
+                out, _ = ap_softmax_rows(np.asarray(codes), cfg)
+                return np.asarray(out, np.int32)
+
+            codes = jax.pure_callback(host, out_sd, v2)
+        else:
+            m2 = mask.reshape(-1, shape[-1])
+
+            def host(codes, valid):
+                out, _ = ap_softmax_rows(np.asarray(codes), cfg,
+                                         mask=np.asarray(valid))
+                return np.asarray(out, np.int32)
+
+            codes = jax.pure_callback(host, out_sd, v2, m2)
+
+        probs = dequantize_probs(codes.reshape(shape), cfg)
+        if moved:
+            probs = jnp.moveaxis(probs, -1, ax)
+        return probs

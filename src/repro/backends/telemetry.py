@@ -1,0 +1,105 @@
+"""AP cost telemetry: CostReport accumulation across a model forward pass.
+
+Softmax executions happen deep inside jit-traced model code, where Python-side
+counters cannot observe runtime. The trick: every cost quantity depends only on
+*static* tensor shapes, so a single abstract trace (``jax.eval_shape``) of the
+forward pass visits every softmax call site with its real shapes at Python
+speed. ``models/attention.py`` calls :func:`record_softmax` at each site; this
+module routes the metered :class:`CostReport` into whichever accumulators are
+active on the current thread.
+
+Scan-stacked layers trace their body ONCE for n iterations — the
+:func:`repeat` context (wrapped around ``jax.lax.scan`` in
+``models/transformer.py`` and around the query-chunk scan in ``attention.py``)
+multiplies anything recorded inside by the trip count, so the accumulated total
+reflects what actually executes.
+
+Usage (what ``serving.engine.Engine.generate(report_cost=True)`` does):
+
+    with telemetry.collect() as acc:
+        jax.eval_shape(model.prefill, params, batch, cache_len=L)
+    prefill_cost = acc.total()
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import List, Optional, Sequence
+
+from repro.backends.base import ZERO_COST, CostReport, SoftmaxBackend
+
+_TLS = threading.local()
+
+
+def _accumulators() -> List["CostAccumulator"]:
+    if not hasattr(_TLS, "accumulators"):
+        _TLS.accumulators = []
+    return _TLS.accumulators
+
+
+def _multiplier() -> int:
+    return getattr(_TLS, "multiplier", 1)
+
+
+class CostAccumulator:
+    """Collects CostReports recorded while it is active."""
+
+    def __init__(self):
+        self.reports: List[CostReport] = []
+
+    def add(self, report: CostReport) -> None:
+        self.reports.append(report)
+
+    def total(self) -> CostReport:
+        total = ZERO_COST
+        for r in self.reports:
+            total = total + r
+        return total
+
+
+@contextlib.contextmanager
+def collect():
+    """Activate a fresh accumulator on this thread; yields it."""
+    acc = CostAccumulator()
+    _accumulators().append(acc)
+    try:
+        yield acc
+    finally:
+        _accumulators().remove(acc)
+
+
+@contextlib.contextmanager
+def repeat(n: int):
+    """Multiply any record() inside by ``n`` (trace-once/run-n scan bodies).
+    Nested repeats compose multiplicatively."""
+    old = _multiplier()
+    _TLS.multiplier = old * max(int(n), 0)
+    try:
+        yield
+    finally:
+        _TLS.multiplier = old
+
+
+def active() -> bool:
+    return bool(_accumulators())
+
+
+def record(report: Optional[CostReport]) -> None:
+    """Add a report (scaled by the ambient repeat multiplier) to every active
+    accumulator. No-op when nothing is collecting or the report is None."""
+    accs = _accumulators()
+    if not accs or report is None:
+        return
+    report = report.scaled(_multiplier())
+    for acc in accs:
+        acc.add(report)
+
+
+def record_softmax(backend: SoftmaxBackend, shape: Sequence[int],
+                   axis: int = -1, heads: int = 1) -> None:
+    """Meter one softmax call site. Cheap no-op when nothing is collecting —
+    safe to leave in hot trace paths."""
+    if not _accumulators():
+        return
+    record(backend.meter(tuple(int(d) for d in shape), axis=axis, heads=heads))

@@ -1,53 +1,56 @@
 """Softmax dispatcher: the pluggable point where SoftmAP enters the models.
 
-Every attention module in the zoo takes a ``SoftmaxSpec``; ``"fp"`` is the
-baseline, ``"int"`` is the paper's integer-only approximation, and
-``"int_pallas"`` routes to the fused Pallas kernel (TPU target; interpret mode
-on CPU — only usable outside jit-traced full-model paths on this host, so model
-code defaults to ``"int"`` and benchmarks exercise the kernel directly).
+``SoftmaxSpec`` names an execution backend from the registry in
+``repro.backends`` plus its precision point. ``"fp"`` is the baseline,
+``"int"``/``"int_jax"`` is the paper's integer-only approximation,
+``"int_pallas"`` the fused Pallas kernel (TPU target; interpret mode on CPU),
+and ``"ap_sim"`` executes rows on the functional 2D-AP simulator via a host
+callback. New backends register themselves with
+``repro.backends.register_backend`` and become valid ``kind`` values with no
+change here.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
-from repro.core.int_softmax import (clipped_fp_softmax, fp_softmax,
-                                    fp_softmax_lowp, int_softmax,
-                                    int_softmax_ste)
+from repro.backends.base import SoftmaxBackend
+from repro.backends.registry import get_backend, settled_backend_names
 from repro.core.precision import BEST, PrecisionConfig
 
 
 @dataclasses.dataclass(frozen=True)
 class SoftmaxSpec:
-    kind: str = "fp"  # "fp" | "int" | "int_pallas" | "clipped_fp"
+    kind: str = "fp"  # any key in repro.backends.available_backends()
     precision: PrecisionConfig = BEST
 
     def __post_init__(self):
-        if self.kind not in ("fp", "int", "int_ste", "int_pallas", "clipped_fp", "fp_lowp"):
-            raise ValueError(f"unknown softmax kind: {self.kind}")
+        # Eager validation whenever the registry is settled; None only while
+        # the backend modules are mid-import (the FP / INT_BEST constants
+        # below construct during that cycle), where an unknown kind still
+        # fails at backend() resolution.
+        names = settled_backend_names()
+        if names is not None and self.kind not in names:
+            raise ValueError(
+                f"unknown softmax kind: {self.kind!r}; registered backends: "
+                f"{', '.join(names)}")
+
+    def backend(self) -> SoftmaxBackend:
+        return get_backend(self.kind, self.precision)
 
     def fn(self):
-        if self.kind == "fp":
-            return fp_softmax
-        if self.kind == "fp_lowp":
-            return fp_softmax_lowp
-        if self.kind == "clipped_fp":
-            return partial(clipped_fp_softmax, t_c=self.precision.T_C)
-        if self.kind == "int":
-            return partial(int_softmax, cfg=self.precision)
-        if self.kind == "int_ste":
-            return partial(int_softmax_ste, cfg=self.precision)
-        if self.kind == "int_pallas":
-            from repro.kernels.int_softmax.ops import int_softmax_pallas
+        """apply-callable, kept for call sites that only need the function."""
+        return self.backend().apply
 
-            return partial(int_softmax_pallas, cfg=self.precision)
-        raise AssertionError(self.kind)
+
+def spec_backend(spec: Optional[SoftmaxSpec]) -> SoftmaxBackend:
+    """Resolve a (possibly None) spec to its backend instance."""
+    return (spec or SoftmaxSpec()).backend()
 
 
 def get_softmax(spec: Optional[SoftmaxSpec]):
-    return (spec or SoftmaxSpec()).fn()
+    return spec_backend(spec).apply
 
 
 FP = SoftmaxSpec("fp")

@@ -76,7 +76,8 @@ class ShardingRules:
         parts = []
         for name in logical_axes:
             ax = self.mesh_axes(name)
-            if isinstance(ax, str):
+            was_str = isinstance(ax, str)
+            if was_str:
                 ax = (ax,)
             if ax is not None:
                 ax = tuple(a for a in ax
@@ -84,9 +85,11 @@ class ShardingRules:
                 used.update(ax)
             if not ax:
                 parts.append(None)
-            elif len(ax) == 1:
+            elif was_str and len(ax) == 1:
                 parts.append(ax[0])
             else:
+                # tuple-valued rules stay tuples even when filtering leaves
+                # one axis: PartitionSpec equality is form-sensitive
                 parts.append(tuple(ax))
         while parts and parts[-1] is None:
             parts.pop()
@@ -103,29 +106,51 @@ def logical_constraint(x, logical_axes: Sequence[Optional[str]],
 
     No-op when ``rules`` is None (single-device tests) or no mesh is
     resolvable. Accepts an explicit concrete mesh (preferred: works under any
-    context) or falls back to the ambient abstract mesh set by jax.set_mesh.
+    context) or falls back to the ambient mesh (jax.set_mesh on new JAX, the
+    ``with mesh:`` context on older releases).
     """
     if rules is None:
         return x
-    if mesh is not None:
+    if mesh is None:
+        mesh = get_abstract_mesh()
+        if mesh is None:
+            return x
+    if isinstance(mesh, Mesh):  # concrete mesh: NamedSharding works anywhere
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(mesh, rules.spec(logical_axes, mesh)))
-    amesh = get_abstract_mesh()
-    if amesh is None:
-        return x
-    return jax.lax.with_sharding_constraint(x, rules.spec(logical_axes, amesh))
+    # abstract mesh (jax >= 0.7 jax.set_mesh): bare PartitionSpec form
+    return jax.lax.with_sharding_constraint(x, rules.spec(logical_axes, mesh))
 
 
 def get_abstract_mesh():
-    """The mesh installed by ``jax.set_mesh``, if any."""
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or getattr(m, "empty", False):
-        return None
-    return m
+    """The ambient mesh, if any: ``jax.set_mesh``'s abstract mesh on new JAX,
+    the ``with mesh:`` thread-resource mesh on older releases."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        m = getter()
+        if m is None or getattr(m, "empty", False):
+            return None
+        return m
+    from jax.interpreters import pxla  # pre-0.7 fallback
+
+    m = pxla.thread_resources.env.physical_mesh
+    return None if m.empty else m
 
 
 def make_mesh(shape, axis_names):
-    """jax.make_mesh with Auto axis types (quiet under jax 0.8/0.9)."""
+    """jax.make_mesh, with Auto axis types where the installed JAX has them
+    (jax >= 0.7; quiet under 0.8/0.9) and the plain signature otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axis_names)
     return jax.make_mesh(
-        shape, axis_names,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+        shape, axis_names, axis_types=(axis_type.Auto,) * len(axis_names))
+
+
+def use_mesh(mesh: Mesh):
+    """Version-portable ambient-mesh context manager: ``jax.set_mesh`` where
+    available, else the Mesh object itself (a context manager pre-0.7)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh

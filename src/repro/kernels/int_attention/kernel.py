@@ -29,8 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.alg1 import int_softmax_block
 from repro.core.precision import PrecisionConfig
-from repro.kernels.int_softmax.kernel import _int_softmax_block
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, *, cfg: PrecisionConfig, scale: float,
@@ -50,7 +50,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, cfg: PrecisionConfig, scale: float,
         mask = qpos >= kpos
         if window:
             mask &= (qpos - kpos) < window
-    p = _int_softmax_block(scores, mask, cfg)
+    p = int_softmax_block(scores, mask, cfg)
     out = jax.lax.dot_general(
         p.astype(vt.dtype), vt, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)

@@ -9,6 +9,10 @@ one multiply by 2^-P_out on the way out is integer arithmetic:
   quantize -> Barrett range-reduce -> poly -> << (F-q) -> saturating tree sum
            -> restoring long division (P_out bits)
 
+The in-VMEM block body is ``repro.core.alg1.int_softmax_block`` — the single
+shared jnp implementation of Alg. 1 (pure jnp, so it traces inside
+``pl.pallas_call`` unchanged); this file only supplies tiling and BlockSpecs.
+
 Grid: (rows / ROW_BLK,). Each program owns full rows, so results are exact —
 no cross-block reductions. VMEM budget: ROW_BLK * COLS * 4B * ~4 live tiles;
 ROW_BLK=8 x 32k cols ~= 4 MB, comfortably inside the ~16 MB/core VMEM.
@@ -24,73 +28,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.alg1 import int_softmax_block
 from repro.core.precision import PrecisionConfig
-
-NEG_INF = -1e30
-
-
-def _int_softmax_block(x, mask, cfg: PrecisionConfig):
-    """The in-VMEM block computation: [R, C] f32 scores -> [R, C] f32 probs.
-    Pure jnp so the same body serves the kernel and the fused attention
-    kernel; mirrors core.int_softmax exactly (asserted by tests)."""
-    x = x.astype(jnp.float32)
-    if mask is not None:
-        x = jnp.where(mask, x, NEG_INF)
-    row_max = jnp.max(x, axis=-1, keepdims=True)
-    row_max = jnp.where(row_max <= NEG_INF, 0.0, row_max)
-    xs = jnp.clip(x - row_max, cfg.T_C, 0.0)
-    v = jnp.round(xs / jnp.float32(cfg.S)).astype(jnp.int32)
-    v = jnp.clip(v, -(2 ** (cfg.M - 1)), 0)
-
-    # integer exponential (Alg. 1 l.5-11 + I-BERT fixed-point shift)
-    neg = -v
-    q = (neg * jnp.int32(cfg.mu)) >> (2 * cfg.M)
-    r = v + q * jnp.int32(cfg.v_ln2)
-    need = r <= -jnp.int32(cfg.v_ln2)
-    q = jnp.where(need, q + 1, q)
-    r = jnp.where(need, r + jnp.int32(cfg.v_ln2), r)
-    r = jnp.maximum(r, -jnp.int32(2 ** (cfg.w_vcorr - 1)))
-    poly = (r + jnp.int32(cfg.v_b)) ** 2 + jnp.int32(cfg.v_c)
-    poly = jnp.minimum(poly, jnp.int32(min(2 ** cfg.w_poly - 1, 2 ** 31 - 1)))
-    sh = jnp.int32(cfg.exp_shift) - jnp.minimum(
-        q, 31 + jnp.int32(cfg.exp_shift))
-    va = jnp.where(sh >= 0, poly << jnp.maximum(sh, 0),
-                   poly >> jnp.minimum(-sh, 31))
-    va = jnp.minimum(va, jnp.int32(2 ** cfg.w_vapprox - 1))
-    if mask is not None:
-        va = jnp.where(mask, va, 0)
-
-    # saturating pairwise tree sum (the 2D-AP row-pair reduction)
-    sat = jnp.int32(cfg.sum_saturation)
-    cols = va.shape[-1]
-    size = 1 << (cols - 1).bit_length()
-    acc = va
-    if size != cols:
-        acc = jnp.pad(acc, ((0, 0), (0, size - cols)))
-    while acc.shape[-1] > 1:
-        acc = jnp.minimum(acc[..., 0::2] + acc[..., 1::2], sat)
-    total = jnp.maximum(jnp.minimum(acc[..., 0:1], sat), 1)
-
-    # restoring long division: P_out quotient bits (the AP's R column)
-    def div_step(_, carry):
-        rem, quo = carry
-        rem = rem << 1
-        ge = rem >= total
-        rem = jnp.where(ge, rem - total, rem)
-        quo = (quo << 1) | ge.astype(jnp.int32)
-        return rem, quo
-
-    _, quo = jax.lax.fori_loop(0, cfg.P_out, div_step,
-                               (va, jnp.zeros_like(va)))
-    return quo.astype(jnp.float32) * jnp.float32(2.0 ** (-cfg.P_out))
 
 
 def _kernel(x_ref, o_ref, *, cfg: PrecisionConfig):
-    o_ref[...] = _int_softmax_block(x_ref[...], None, cfg)
+    o_ref[...] = int_softmax_block(x_ref[...], None, cfg)
 
 
 def _kernel_masked(x_ref, m_ref, o_ref, *, cfg: PrecisionConfig):
-    o_ref[...] = _int_softmax_block(x_ref[...], m_ref[...] != 0, cfg)
+    o_ref[...] = int_softmax_block(x_ref[...], m_ref[...] != 0, cfg)
 
 
 def int_softmax_kernel(x, cfg: PrecisionConfig, mask=None, row_block: int = 8,

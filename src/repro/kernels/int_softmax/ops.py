@@ -16,7 +16,7 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("cfg", "row_block", "interpret"))
+@partial(jax.jit, static_argnames=("cfg", "axis", "row_block", "interpret"))
 def int_softmax_pallas(x, cfg: PrecisionConfig = PrecisionConfig(), mask=None,
                        axis: int = -1, row_block: int = 8,
                        interpret: bool = None):

@@ -22,6 +22,7 @@ import traceback
 import jax
 
 from repro.configs.registry import ASSIGNED, get_config
+from repro.distributed.sharding import use_mesh
 from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import SHAPES, applicable, build_cell, correction_layer_counts
@@ -29,7 +30,7 @@ from repro.launch.specs import SHAPES, applicable, build_cell, correction_layer_
 
 def _compile_cell(arch, shape, mesh, **kw):
     cell = build_cell(arch, shape, mesh, **kw)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                          donate_argnums=cell.donate_argnums)
         lowered = jitted.lower(*cell.args)
@@ -39,6 +40,8 @@ def _compile_cell(arch, shape, mesh, **kw):
 
 def _costs_of(compiled):
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax < 0.7 returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = rl.collective_bytes(hlo)
     coll_total = sum(v for k, v in coll.items() if not k.startswith("_"))

@@ -2,11 +2,15 @@
 
 A function (not a module-level constant) so importing this module never
 touches jax device state — the dry-run must set XLA_FLAGS before first init.
+Mesh construction goes through ``distributed.sharding.make_mesh``, which
+version-gates the ``AxisType`` kwarg (absent on jax < 0.7).
 """
 
 from __future__ import annotations
 
 import jax
+
+from repro.distributed.sharding import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,13 +19,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     over DCN, data is DP/FSDP over ICI, model is TP/EP over ICI."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever this host has (tests / examples): (n, 1) data x model."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))
+    return make_mesh((n, 1), ("data", "model"))

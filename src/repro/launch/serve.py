@@ -1,5 +1,7 @@
 """Serving launcher: restore (or briefly train) a model, then run batched
-generation through the engine with FP or SoftmAP integer softmax.
+generation through the engine with any registered softmax backend (FP
+baselines, SoftmAP integer paths, the Pallas kernel, or the functional AP
+simulator), reporting the per-request AP softmax cost for metered backends.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
         --softmax int --max-new 32
@@ -12,6 +14,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+from repro.backends import available_backends, get_backend
 from repro.checkpoint import checkpointer as ckpt
 from repro.configs.registry import get_config, smoke_config
 from repro.core.precision import PrecisionConfig
@@ -27,7 +30,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama2-7b")
     ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--softmax", default="int", choices=["fp", "int", "fp_lowp"])
+    ap.add_argument("--softmax", default="int",
+                    choices=sorted(available_backends()))
     ap.add_argument("--M", type=int, default=6)
     ap.add_argument("--N", type=int, default=16)
     ap.add_argument("--ckpt-dir", default=None,
@@ -41,12 +45,20 @@ def main():
                     choices=["greedy", "temperature"])
     args = ap.parse_args()
 
+    metered = get_backend(args.softmax).metered
     spec = SoftmaxSpec(args.softmax, PrecisionConfig(M=args.M, N=args.N)) \
-        if args.softmax == "int" else SoftmaxSpec(args.softmax)
+        if metered else SoftmaxSpec(args.softmax)
     cfg = (smoke_config(args.arch, softmax=spec) if args.smoke
            else get_config(args.arch, softmax=spec))
     mesh = make_host_mesh()
     model = Model(cfg, rules=ShardingRules(cfg.sharding_overrides), mesh=mesh)
+    # warm training keeps the requested spec when its backend differentiates
+    # (fp family, int, int_ste QAT); the non-differentiable substrates
+    # (int_pallas, ap_sim) are serving-only choices, so their warm-up trains
+    # against fp and the engine serves with the requested spec
+    train_model = model if spec.backend().differentiable else Model(
+        cfg.with_softmax(SoftmaxSpec("fp")),
+        rules=ShardingRules(cfg.sharding_overrides), mesh=mesh)
     corpus = SyntheticCorpus(cfg.vocab, seed=1234)
 
     if args.ckpt_dir:
@@ -55,15 +67,15 @@ def main():
         from repro.training.step import TrainState, init_state
         opt = AdamW(lr=constant_schedule(1e-3))
         state, step, _ = ckpt.restore(
-            args.ckpt_dir, init_state(model, opt, jax.random.PRNGKey(0)))
+            args.ckpt_dir, init_state(train_model, opt, jax.random.PRNGKey(0)))
         params = state.params
         print(f"restored step {step} from {args.ckpt_dir}")
     else:
         from repro.training.optimizer import AdamW, cosine_schedule
         from repro.training.step import init_state, make_train_step
         opt = AdamW(lr=cosine_schedule(1e-2, 20, args.warm_steps))
-        state = init_state(model, opt, jax.random.PRNGKey(0))
-        step_fn = jax.jit(make_train_step(model, opt))
+        state = init_state(train_model, opt, jax.random.PRNGKey(0))
+        step_fn = jax.jit(make_train_step(train_model, opt))
         for i in range(args.warm_steps):
             state, met = step_fn(state, {
                 k: jnp.asarray(v)
@@ -74,7 +86,7 @@ def main():
 
     eng = Engine(model, params, max_new=args.max_new, sampler=args.sampler)
     prompts = corpus.sample(args.batch, args.prompt_len, seed=777)[:, :args.prompt_len]
-    res = eng.generate(prompts)
+    res = eng.generate(prompts, report_cost=True)
     ok = sum(int(row[t + 1] in corpus.table[row[t]])
              for row in res.tokens
              for t in range(res.prompt_len - 1, res.tokens.shape[1] - 1))
@@ -83,6 +95,10 @@ def main():
     for row in res.tokens[:2]:
         p, g = row[:args.prompt_len].tolist(), row[args.prompt_len:].tolist()
         print(f"  prompt {p} -> {g}")
+    if res.cost is not None and res.cost.cycles:
+        print(f"softmax AP cost (batch of {args.batch}): {res.cost.describe()}")
+    elif res.cost is not None:
+        print("softmax AP cost: n/a (unmetered fp backend)")
 
 
 if __name__ == "__main__":

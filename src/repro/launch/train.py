@@ -23,7 +23,7 @@ from repro.core.softmax_variants import SoftmaxSpec
 from repro.data.sharding import shard_batch
 from repro.distributed.straggler import StragglerMonitor, mitigate
 from repro.data.synthetic import SyntheticCorpus, family_batch
-from repro.distributed.sharding import ShardingRules
+from repro.distributed.sharding import ShardingRules, use_mesh
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.model import Model
 from repro.training.optimizer import AdamW, cosine_schedule
@@ -77,7 +77,7 @@ def main():
 
     monitor = StragglerMonitor()
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         for i in range(start, args.steps):
             t_step = time.time()
             batch = family_batch(cfg, args.batch, args.seq, seed=i,

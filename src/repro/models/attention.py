@@ -12,7 +12,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.softmax_variants import get_softmax
+from repro.backends import telemetry
+from repro.core.softmax_variants import spec_backend
 from repro.models.layers import (
     Ctx, apply_mrope, apply_rope, dense_apply, dense_init,
 )
@@ -73,9 +74,12 @@ def attend(q, k, v, mask, cfg, ctx: Ctx, scale: Optional[float] = None):
     scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(
         jnp.dtype(cfg.scores_dtype)) * scale
     scores = ctx.shard(scores, ("batch", "kv_heads", None, None, None))
-    softmax_fn = get_softmax(cfg.softmax)
+    backend = spec_backend(cfg.softmax)
+    # one AP per attention head (KV*G of them); shapes are static at trace
+    # time, so metering rides along with jax.eval_shape cost passes for free
+    telemetry.record_softmax(backend, scores.shape, heads=kvh * group)
     m = None if mask is None else mask[:, None, None, :, :]
-    w = softmax_fn(scores, mask=m).astype(ctx.dtype)
+    w = backend.apply(scores, mask=m).astype(ctx.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
     return out.reshape(b, sq, h, v.shape[-1])  # v dim may differ (MLA)
 
@@ -98,7 +102,8 @@ def attend_chunked(q, k, v, q_pos, kv_pos, kind, cfg, ctx: Ctx,
         mask = _mask(pi, kv_pos, kind, cfg.window)
         return carry, attend(qi, k, v, mask, cfg, ctx, scale)
 
-    _, out = jax.lax.scan(body, None, (qc, pc))
+    with telemetry.repeat(n):  # scan body traces once, executes n times
+        _, out = jax.lax.scan(body, None, (qc, pc))
     return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, out.shape[-1])
 
 

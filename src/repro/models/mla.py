@@ -15,7 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.softmax_variants import get_softmax
+from repro.backends import telemetry
+from repro.core.softmax_variants import spec_backend
 from repro.models.attention import attend_chunked
 from repro.models.layers import Ctx, apply_rope, dense_apply, dense_init, norm_init, norm_apply
 
@@ -102,7 +103,9 @@ def mla_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
     l_max = c_kv.shape[1]
     valid = jnp.arange(l_max, dtype=jnp.int32)[None, :] <= cache_pos
     mask = jnp.broadcast_to(valid[:, None, None, :], scores.shape)
-    w = get_softmax(cfg.softmax)(scores, mask=mask).astype(ctx.dtype)
+    backend = spec_backend(cfg.softmax)
+    telemetry.record_softmax(backend, scores.shape, heads=h)
+    w = backend.apply(scores, mask=mask).astype(ctx.dtype)
     o_lat = jnp.einsum("bhql,blr->bqhr", w, ctx.cast(c_kv))
     wuv = ctx.cast(p["wuv"]["w"]).reshape(r, h, dv)
     out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wuv)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backends import telemetry
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import ShardingRules
 from repro.models import transformer as tfm
@@ -178,7 +179,8 @@ class Model:
                                        positions), 0.0
 
         body = tfm._remat(body, cfg.remat)
-        x, _ = jax.lax.scan(body, x, p["dec_stack"])
+        with telemetry.repeat(jax.tree.leaves(p["dec_stack"])[0].shape[0]):
+            x, _ = jax.lax.scan(body, x, p["dec_stack"])
         return self._head(p, x), 0.0
 
     def _encode(self, p, frames):
@@ -210,7 +212,8 @@ class Model:
                 return tfm.dec_block_prefill(layer_p, carry, enc, cfg, ctx,
                                              positions, cache_len)
 
-            x, caches = jax.lax.scan(body, x, p["dec_stack"])
+            with telemetry.repeat(jax.tree.leaves(p["dec_stack"])[0].shape[0]):
+                x, caches = jax.lax.scan(body, x, p["dec_stack"])
             return self._head(p, x[:, -1:]), caches
         x = self._embed(p, batch)
         positions = self._positions(batch, batch["tokens"].shape)
@@ -270,7 +273,8 @@ class Model:
                                              ctx, positions)
                 return y, nc
 
-            x, new_cache = jax.lax.scan(body, x, (p["dec_stack"], cache))
+            with telemetry.repeat(jax.tree.leaves(p["dec_stack"])[0].shape[0]):
+                x, new_cache = jax.lax.scan(body, x, (p["dec_stack"], cache))
             return self._head(p, x), new_cache
         x = self._embed(p, {"tokens": batch["token"], **{
             k: v for k, v in batch.items() if k != "token"}})

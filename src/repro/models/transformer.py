@@ -14,6 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.backends import telemetry
 from repro.models.attention import (
     attend_chunked, attn_apply, attn_decode, attn_decode_ring, attn_init,
     project_qkv,
@@ -130,14 +131,16 @@ def scan_apply(params, x, cfg, ctx: Ctx, positions, kind: str,
         return y, aux
 
     body = _remat(body, cfg.remat)
+    n_layers = jax.tree.leaves(params)[0].shape[0]
     if not cfg.scan_layers:
         aux_total = 0.0
-        for i in range(jax.tree.leaves(params)[0].shape[0]):
+        for i in range(n_layers):
             layer = jax.tree.map(lambda p: p[i], params)
             x, aux = body(x, layer)
             aux_total += aux
         return x, aux_total
-    x, auxs = jax.lax.scan(body, x, params)
+    with telemetry.repeat(n_layers):  # scan body traces once, runs n times
+        x, auxs = jax.lax.scan(body, x, params)
     return x, jnp.sum(auxs)
 
 
@@ -234,14 +237,16 @@ def scan_prefill(params, x, cfg, ctx: Ctx, positions, kind: str, cache_len: int)
         return y, cache
 
     # no remat: prefill is inference (no grads through it)
+    n_layers = jax.tree.leaves(params)[0].shape[0]
     if not cfg.scan_layers:
         outs = []
-        for i in range(jax.tree.leaves(params)[0].shape[0]):
+        for i in range(n_layers):
             layer = jax.tree.map(lambda p: p[i], params)
             x, c = body(x, layer)
             outs.append(c)
         return x, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
-    return jax.lax.scan(body, x, params)
+    with telemetry.repeat(n_layers):
+        return jax.lax.scan(body, x, params)
 
 
 # ------------------------------------------------------- encoder-decoder (Whisper)
@@ -309,8 +314,8 @@ def scan_decode(params, caches, x, cache_pos, cfg, ctx: Ctx, positions,
                                     positions, kind)
         return y, new_cache
 
+    n = jax.tree.leaves(params)[0].shape[0]
     if not cfg.scan_layers:
-        n = jax.tree.leaves(params)[0].shape[0]
         outs = []
         for i in range(n):
             layer = jax.tree.map(lambda p: p[i], params)
@@ -319,5 +324,6 @@ def scan_decode(params, caches, x, cache_pos, cfg, ctx: Ctx, positions,
             outs.append(nc)
         new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
         return x, new_caches
-    x, new_caches = jax.lax.scan(body, x, (params, caches))
+    with telemetry.repeat(n):
+        x, new_caches = jax.lax.scan(body, x, (params, caches))
     return x, new_caches

@@ -3,17 +3,30 @@
 The serve path the dry-run lowers (``serve_step``) is exactly the
 ``decode_step`` closure built here; the engine adds batching, sampling, and
 the prompt-alignment policy (left-padding so all sequences share a cache
-position — the uniform-position batching documented in DESIGN.md)."""
+position — the uniform-position batching documented in DESIGN.md).
+
+Cost telemetry: with ``report_cost=True``, ``generate`` also returns a
+per-call :class:`repro.backends.CostReport` covering the WHOLE batch — the AP
+cycles / latency / energy the paper's hardware would spend on its softmaxes
+(divide by the batch size for a per-sequence figure). The
+meter is a ``jax.eval_shape`` abstract trace of the prefill and one decode
+step (every softmax call site in ``models/attention.py`` records its static
+shape into the active telemetry accumulator), so it costs no device compute
+and never perturbs the jit caches; the decode-step report is scaled by the
+number of generated tokens.
+"""
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backends import CostReport, telemetry
 from repro.models.model import Model
 from repro.serving.sampler import make_sampler
 
@@ -23,6 +36,7 @@ class GenerationResult:
     tokens: np.ndarray          # [B, prompt + generated]
     prompt_len: int
     steps: int
+    cost: Optional[CostReport] = None   # softmax AP cost of the whole batch
 
 
 class Engine:
@@ -34,9 +48,48 @@ class Engine:
         self.sample = make_sampler(sampler, **sampler_kw)
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill, static_argnames=("cache_len",))
+        self._meter_cache: dict = {}  # (batch shapes, cache_len) -> CostReport
+
+    def _decode_inputs(self, nxt, b: int, p: int, t: int):
+        step_in = {"token": nxt}
+        if self.model.cfg.rope_type == "mrope":
+            step_in["positions"] = jnp.full((3, b, 1), p + t, jnp.int32)
+        return step_in
+
+    def meter_request(self, batch: dict, cache_len: int, cache) -> CostReport:
+        """Abstract-trace the request's softmax AP cost (no device compute).
+
+        ``cache`` is any decode-ready cache pytree of the right shapes (the
+        one prefill just returned); decode cost is per step at the full cache
+        length — the AP processes whole rows with its mask register, exactly
+        like the model's masked attention — times the generated tokens. The
+        report depends only on static shapes, so it is memoized on the batch's
+        input shapes + cache_len: repeated same-shape calls skip the trace.
+        """
+        b, p = batch["tokens"].shape
+        key = (tuple(sorted((k, tuple(v.shape)) for k, v in batch.items())),
+               cache_len)
+        if key in self._meter_cache:
+            return self._meter_cache[key]
+        with telemetry.collect() as acc:
+            jax.eval_shape(
+                functools.partial(self.model.prefill, cache_len=cache_len),
+                self.params, batch)
+        cost = acc.total()
+        decode_steps = self.max_new - 1
+        if decode_steps > 0:
+            step_in = self._decode_inputs(
+                jnp.zeros((b, 1), jnp.int32), b, p, 0)
+            with telemetry.collect() as acc:
+                jax.eval_shape(self.model.decode_step, self.params, cache,
+                               step_in, jnp.int32(p))
+            cost = cost + acc.total().scaled(decode_steps)
+        self._meter_cache[key] = cost
+        return cost
 
     def generate(self, prompts: np.ndarray, key=None,
-                 extra_inputs: Optional[dict] = None) -> GenerationResult:
+                 extra_inputs: Optional[dict] = None,
+                 report_cost: bool = False) -> GenerationResult:
         """prompts: [B, P] int32 (left-pad with a fill token upstream; the
         engine batches uniformly at cache position P)."""
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -44,22 +97,22 @@ class Engine:
         cache_len = p + self.max_new
         batch = {"tokens": jnp.asarray(prompts), **(extra_inputs or {})}
         logits, cache = self._prefill(self.params, batch, cache_len=cache_len)
+        cost = (self.meter_request(batch, cache_len, cache)
+                if report_cost else None)
         toks = [jnp.asarray(prompts)]
         key, sub = jax.random.split(key)
         nxt = self.sample(logits[:, -1], sub)[:, None]
         toks.append(nxt)
         for t in range(self.max_new - 1):
-            step_in = {"token": nxt}
-            if self.model.cfg.rope_type == "mrope":
-                pos = jnp.full((3, b, 1), p + t, jnp.int32)
-                step_in["positions"] = pos
+            step_in = self._decode_inputs(nxt, b, p, t)
             logits, cache = self._decode(self.params, cache, step_in,
                                          jnp.int32(p + t))
             key, sub = jax.random.split(key)
             nxt = self.sample(logits[:, -1], sub)[:, None]
             toks.append(nxt)
         out = np.asarray(jnp.concatenate(toks, axis=1))
-        return GenerationResult(out, prompt_len=p, steps=self.max_new)
+        return GenerationResult(out, prompt_len=p, steps=self.max_new,
+                                cost=cost)
 
 
 def make_serve_step(model: Model, kind: str):

@@ -4,7 +4,12 @@ JAX reference, Table-II cost accounting, and paper-anchor invariants."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (see requirements-dev.txt); "
+           "AP property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.ap import cost_model as cm
 from repro.ap.dataflow import ap_softmax_rows, ap_softmax_vector

@@ -1,0 +1,203 @@
+"""Softmax execution-backend layer: registry dispatch, cross-backend
+bit-exactness (the co-design contract: every integer substrate computes the
+same probability codes), CostReport algebra, and end-to-end AP cost telemetry
+through Engine.generate()."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.backends import (
+    CostReport, SoftmaxBackend, available_backends, get_backend,
+    register_backend, telemetry,
+)
+from repro.core.precision import BEST, PrecisionConfig
+from repro.core.softmax_variants import SoftmaxSpec, spec_backend
+
+INT_BACKENDS = ("int_jax", "int_pallas", "ap_sim")
+
+RNG = np.random.default_rng(7)
+
+
+# ------------------------------------------------------------------ registry
+
+
+def test_builtin_backends_registered():
+    names = available_backends()
+    for n in ("fp", "fp_lowp", "clipped_fp", "int", "int_jax", "int_ste",
+              "int_pallas", "ap_sim"):
+        assert n in names, n
+
+
+def test_unknown_backend_raises():
+    # spec first: validation must be eager even before any registry lookup
+    with pytest.raises(ValueError, match="unknown softmax kind"):
+        SoftmaxSpec("nope")
+    with pytest.raises(ValueError, match="unknown softmax backend"):
+        get_backend("nope")
+
+
+def test_unknown_kind_raises_in_fresh_process():
+    """Construction-time validation must not depend on import order: a typo'd
+    kind fails immediately even when nothing has touched the registry yet."""
+    import subprocess
+    import sys
+
+    code = ("from repro.core.softmax_variants import SoftmaxSpec\n"
+            "SoftmaxSpec('int_palas')\n")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True)
+    assert out.returncode != 0
+    assert "unknown softmax kind" in out.stderr
+
+
+def test_int_alias_shares_class_and_cache():
+    assert get_backend("int", BEST) is get_backend("int_jax", BEST)
+    # cfg=None normalizes to the class default before the cache
+    assert get_backend("int") is get_backend("int_jax", BEST)
+    assert get_backend("fp") is get_backend("fp", None)
+
+
+def test_decorator_registration_and_dispatch():
+    from repro.backends.registry import _FACTORIES
+
+    try:
+        @register_backend("test_only_identity")
+        class _Identity(SoftmaxBackend):
+            name = "test_only_identity"
+
+            def apply(self, scores, mask=None, axis=-1):
+                return scores
+
+        assert "test_only_identity" in available_backends()
+        be = get_backend("test_only_identity")
+        x = jnp.ones((2, 3))
+        assert be.apply(x) is x
+        assert be.meter((2, 3)) is None
+        # duplicate names are rejected
+        with pytest.raises(ValueError, match="already registered"):
+            register_backend("test_only_identity")(_Identity)
+        # a partially-colliding alias list must not mutate the registry
+        with pytest.raises(ValueError, match="already registered"):
+            register_backend("test_only_other", "int")(_Identity)
+        assert "test_only_other" not in available_backends()
+        # spec machinery resolves it like any built-in
+        assert SoftmaxSpec("test_only_identity").fn()(x) is x
+    finally:
+        _FACTORIES.pop("test_only_identity", None)  # keep the registry clean
+
+
+# -------------------------------------------- cross-backend bit-exactness
+
+
+@pytest.mark.parametrize("M,N,e", [(4, 12, 0), (6, 16, 0), (8, 16, 2)])
+def test_int_backends_bit_identical(M, N, e):
+    """int_jax / int_pallas (interpret) / ap_sim produce bit-identical
+    probability codes on shared random score batches."""
+    cfg = PrecisionConfig(M=M, N=N, v_corr_extra=e, T_C=-4.0 if M == 4 else -7.0)
+    x = jnp.asarray(RNG.normal(0, 2, (9, 193)), jnp.float32)
+    ref = np.asarray(get_backend("int_jax", cfg).apply(x))
+    for name in INT_BACKENDS[1:]:
+        got = np.asarray(get_backend(name, cfg).apply(x))
+        assert np.array_equal(got, ref), f"{name} diverged from int_jax"
+
+
+@pytest.mark.parametrize("name", INT_BACKENDS)
+def test_int_backends_bit_identical_masked(name):
+    """Masked rows and the all-masked edge case: identical codes everywhere,
+    all-masked rows emit exactly zero probability mass."""
+    cfg = BEST
+    x = jnp.asarray(RNG.normal(0, 2, (8, 130)), jnp.float32)
+    mask = jnp.asarray(RNG.random((8, 130)) > 0.3)
+    mask = mask.at[3].set(False)            # fully-masked row
+    ref = np.asarray(get_backend("int_jax", cfg).apply(x, mask=mask))
+    got = np.asarray(get_backend(name, cfg).apply(x, mask=mask))
+    assert np.array_equal(got, ref), name
+    assert (got[3] == 0.0).all(), "all-masked row must emit zero mass"
+    row_sums = got.sum(-1)
+    np.testing.assert_allclose(row_sums[np.arange(8) != 3], 1.0, atol=1e-3)
+
+
+def test_ap_sim_under_jit_and_axis():
+    x = jnp.asarray(RNG.normal(0, 1, (2, 33, 5)), jnp.float32)
+    be = get_backend("ap_sim", BEST)
+    ref = np.asarray(get_backend("int_jax", BEST).apply(x, axis=1))
+    got = np.asarray(jax.jit(lambda t: be.apply(t, axis=1))(x))
+    assert np.array_equal(got, ref)
+
+
+# ------------------------------------------------------------ cost metering
+
+
+def test_meter_fp_none_int_nonzero():
+    assert get_backend("fp").meter((4, 128)) is None
+    rep = get_backend("int_jax", BEST).meter((2, 8, 16, 128), heads=8)
+    assert rep.vectors == 2 * 8 * 16
+    assert rep.cycles > 0 and rep.energy_j > 0 and rep.latency_s > 0
+    # heads run in parallel: critical path covers ceil(vectors / heads)
+    seq = get_backend("int_jax", BEST).meter((2, 8, 16, 128), heads=1)
+    assert seq.cycles == rep.cycles * 8
+    assert seq.energy_j == rep.energy_j  # energy sums over all APs either way
+
+
+def test_cost_report_algebra():
+    a = CostReport("x", vectors=2, cycles=10, latency_s=1.0, energy_j=3.0)
+    b = CostReport("x", vectors=1, cycles=5, latency_s=0.5, energy_j=1.0)
+    s = a + b
+    assert (s.vectors, s.cycles, s.latency_s, s.energy_j) == (3, 15, 1.5, 4.0)
+    assert s.backend == "x"
+    k = a.scaled(3)
+    assert (k.vectors, k.cycles) == (6, 30)
+    assert a.edp == 3.0
+    assert (a + CostReport("y", cycles=1)).backend == "mixed"
+    assert (CostReport() + a).backend == "x"
+
+
+def test_telemetry_repeat_and_collect():
+    be = get_backend("int_jax", BEST)
+    telemetry.record_softmax(be, (4, 64))  # no collector: must be a no-op
+    with telemetry.collect() as acc:
+        telemetry.record_softmax(be, (4, 64))
+        with telemetry.repeat(3):
+            telemetry.record_softmax(be, (4, 64))
+    total = acc.total()
+    one = be.meter((4, 64))
+    assert total.vectors == one.vectors * 4
+    assert total.cycles == one.cycles * 4
+
+
+# --------------------------------------------- engine-level cost telemetry
+
+
+def _engine(kind: str, max_new: int = 4):
+    from repro.configs.registry import smoke_config
+    from repro.models import build_model
+    from repro.serving.engine import Engine
+
+    cfg = smoke_config("olmo-1b", softmax=SoftmaxSpec(kind))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    return cfg, Engine(model, params, max_new=max_new)
+
+
+def test_generate_reports_ap_cost_for_int_backend():
+    cfg, eng = _engine("int")
+    prompts = np.ones((2, 8), np.int32)
+    res = eng.generate(prompts, report_cost=True)
+    cost = res.cost
+    assert cost is not None and cost.backend == "int_jax"
+    assert cost.cycles > 0 and cost.energy_j > 0
+    # exact accounting: prefill rows + (max_new - 1) decode steps, per layer
+    b, p, cache = 2, 8, 8 + eng.max_new
+    expect = (b * cfg.n_heads * p + (eng.max_new - 1) * b * cfg.n_heads) \
+        * cfg.n_layers
+    assert cost.vectors == expect, (cost.vectors, expect)
+    # metering must not run when not requested
+    assert eng.generate(prompts).cost is None
+
+
+def test_generate_zero_cost_for_fp_backend():
+    _, eng = _engine("fp", max_new=2)
+    res = eng.generate(np.ones((1, 4), np.int32), report_cost=True)
+    assert res.cost is not None and res.cost.cycles == 0

@@ -14,7 +14,7 @@ import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.roofline import collective_bytes, mfu_like, roofline_terms
-from repro.distributed.sharding import make_mesh
+from repro.distributed.sharding import make_mesh, use_mesh
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -27,7 +27,7 @@ def test_collective_parser_on_real_hlo():
         mesh = make_mesh((n,), ("model",))
     x = jax.ShapeDtypeStruct((n * 64, 128), jnp.float32)
     sh = NamedSharding(mesh, P("model", None))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         f = jax.jit(lambda a: jnp.sum(a ** 2), in_shardings=sh)
         comp = f.lower(x).compile()
     coll = collective_bytes(comp.as_text())

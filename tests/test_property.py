@@ -2,7 +2,13 @@
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (see requirements-dev.txt); "
+           "property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import BEST, PrecisionConfig, int_softmax, saturating_sum
 from repro.core.int_softmax import fixedpoint_div, int_exp_codes
