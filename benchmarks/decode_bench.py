@@ -1,0 +1,184 @@
+"""Decode throughput: the fused lax.scan generation loop vs the eager
+per-token dispatch loop, per softmax backend and per model family.
+
+Writes ``BENCH_decode.json`` — the recorded perf baseline the ROADMAP's
+latency story builds on (prefill and decode tokens/sec, plus the fused/eager
+speedup). Related hardware-softmax work (ConSmax, SOLE) reports end-to-end
+inference latency; this benchmark is the repo's equivalent measurement.
+
+    PYTHONPATH=src:. python benchmarks/decode_bench.py --smoke
+    PYTHONPATH=src:. python benchmarks/decode_bench.py --families dense,ssm \
+        --backends fp,int --out BENCH_decode.json
+
+Smoke mode (CI) runs one dense arch on the fp backend with a tiny config;
+the full matrix covers dense / mla / ssm / hybrid families and the metered
+integer backends, including ``ap_sim`` (whose vectorized row batching is the
+reason it can sit inside the decode loop at all).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.configs.registry import smoke_config
+from repro.core.precision import PrecisionConfig
+from repro.core.softmax_variants import SoftmaxSpec
+from repro.backends import get_backend
+from repro.models import build_model
+from repro.serving.engine import Engine
+
+# family -> representative smoke arch
+FAMILY_ARCHS = {
+    "dense": "olmo-1b",
+    "mla": "minicpm3-4b",
+    "ssm": "mamba2-780m",
+    "hybrid": "hymba-1.5b",
+}
+
+
+def _spec(backend: str) -> SoftmaxSpec:
+    if get_backend(backend).metered:
+        return SoftmaxSpec(backend, PrecisionConfig(M=6, N=16))
+    return SoftmaxSpec(backend)
+
+
+def _median_s(fn, iters: int) -> float:
+    """Median wall seconds per call (common.time_fn reports microseconds;
+    warmup handled by the caller — both paths are compiled by the parity
+    check before any timing)."""
+    return time_fn(fn, iters=iters, warmup=0) / 1e6
+
+
+def bench_one(family: str, backend: str, batch: int, prompt_len: int,
+              max_new: int, iters: int) -> dict:
+    arch = FAMILY_ARCHS[family]
+    cfg = smoke_config(arch, softmax=_spec(backend))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    eng = Engine(model, params, max_new=max_new)
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len),
+                           0, cfg.vocab), np.int32)
+
+    # warm both paths (compile) and check greedy parity while we're at it
+    fused = eng.generate(prompts, mode="fused")
+    eager = eng.generate(prompts, mode="eager")
+    greedy_match = bool(np.array_equal(fused.tokens, eager.tokens))
+
+    # prefill alone
+    import jax.numpy as jnp
+    cache_len = prompt_len + max_new
+
+    def run_prefill():
+        logits, cache = eng._prefill(eng.params,
+                                     {"tokens": jnp.asarray(prompts)},
+                                     cache_len=cache_len)
+        jax.block_until_ready(logits)
+
+    run_prefill()
+    t_prefill = _median_s(run_prefill, iters)
+
+    t_fused = _median_s(lambda: eng.generate(prompts, mode="fused"), iters)
+    t_eager = _median_s(lambda: eng.generate(prompts, mode="eager"), iters)
+
+    gen_tokens = batch * max_new
+    # generate() = prefill + decode; isolate decode by subtracting the
+    # measured prefill time (floored: timing noise can make tiny cells negative)
+    eps = 1e-9
+    fused_decode_s = max(t_fused - t_prefill, eps)
+    eager_decode_s = max(t_eager - t_prefill, eps)
+    return {
+        "arch": arch,
+        "family": family,
+        "backend": backend,
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "max_new": max_new,
+        "greedy_match": greedy_match,
+        "prefill_tps": batch * prompt_len / t_prefill,
+        "fused_generate_s": t_fused,
+        "eager_generate_s": t_eager,
+        "fused_decode_tps": gen_tokens / fused_decode_s,
+        "eager_decode_tps": gen_tokens / eager_decode_s,
+        "fused_speedup": eager_decode_s / fused_decode_s,
+    }
+
+
+def run(smoke: bool = True, families=None, backends=None, batch: int = 2,
+        prompt_len: int = 8, max_new: int = 32, iters: int = 3) -> dict:
+    if smoke:
+        families = families or ["dense"]
+        backends = backends or ["fp"]
+    else:
+        families = families or list(FAMILY_ARCHS)
+        backends = backends or ["fp", "int"]
+    results = []
+    for family in families:
+        for backend in backends:
+            r = bench_one(family, backend, batch, prompt_len, max_new, iters)
+            # progress to stderr: run.py reserves stdout for CSV rows
+            print(f"{family:7s} {backend:7s} prefill={r['prefill_tps']:8.0f} "
+                  f"tok/s  eager={r['eager_decode_tps']:8.0f} tok/s  "
+                  f"fused={r['fused_decode_tps']:8.0f} tok/s  "
+                  f"speedup={r['fused_speedup']:.1f}x  "
+                  f"greedy_match={r['greedy_match']}", file=sys.stderr)
+            results.append(r)
+    return {
+        "bench": "decode",
+        "smoke": smoke,
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "config": {"batch": batch, "prompt_len": prompt_len,
+                   "max_new": max_new, "iters": iters},
+        "results": results,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: dense family, fp backend")
+    ap.add_argument("--families", default=None,
+                    help=f"comma list from {sorted(FAMILY_ARCHS)}")
+    ap.add_argument("--backends", default=None,
+                    help="comma list of softmax backends (fp, int, ap_sim, ...)")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_decode.json")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="exit nonzero if any fused/eager decode speedup "
+                         "falls below this (CI gate)")
+    args = ap.parse_args()
+
+    report = run(smoke=args.smoke,
+                 families=args.families.split(",") if args.families else None,
+                 backends=args.backends.split(",") if args.backends else None,
+                 batch=args.batch, prompt_len=args.prompt_len,
+                 max_new=args.max_new, iters=args.iters)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+
+    bad = [r for r in report["results"] if not r["greedy_match"]]
+    if bad:
+        raise SystemExit(f"greedy fused/eager mismatch: "
+                         f"{[(r['family'], r['backend']) for r in bad]}")
+    if args.min_speedup > 0:
+        slow = [r for r in report["results"]
+                if r["fused_speedup"] < args.min_speedup]
+        if slow:
+            raise SystemExit(
+                f"fused speedup below {args.min_speedup}x: "
+                f"{[(r['family'], round(r['fused_speedup'], 2)) for r in slow]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,14 +11,25 @@ def main() -> None:
                     help="substring filter on benchmark module name")
     args = ap.parse_args()
 
-    from benchmarks import ap_comparison, kernel_bench, precision_sweep, roofline_table
+    from benchmarks import (
+        ap_comparison, decode_bench, kernel_bench, precision_sweep,
+        roofline_table,
+    )
     from benchmarks.common import emit
+
+    def decode_rows():
+        report = decode_bench.run(smoke=True)
+        return [(f"decode_{r['family']}_{r['backend']}_fused",
+                 1e6 * r['max_new'] * r['batch'] / r['fused_decode_tps'],
+                 f"speedup={r['fused_speedup']:.1f}x")
+                for r in report["results"]]
 
     suites = [
         ("precision_sweep", precision_sweep.run),     # Tables III/IV
         ("ap_comparison", ap_comparison.run),         # Figs 1,6,7,8; Tables V,VI
         ("kernel_bench", kernel_bench.run),           # Pallas kernels vs oracle
         ("roofline_table", roofline_table.run),       # EXPERIMENTS.md §Roofline
+        ("decode_bench", decode_rows),                # BENCH_decode.json source
     ]
     for name, fn in suites:
         if args.only and args.only not in name:

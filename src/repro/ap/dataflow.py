@@ -3,11 +3,17 @@
 Runs on the functional 2D-AP simulator and is asserted **bit-identical** to
 the JAX reference (core.int_softmax.int_softmax_from_codes) in tests — the
 software/hardware halves of the co-design compute the same integers.
+
+The program is written batched: every step is one vectorized numpy pass over
+a ``[R, L]`` field (R rows × L words), so the ``ap_sim`` serving backend pays
+one pure_callback executing all batch×heads×layers rows at vector speed
+instead of a Python loop per row. ``ap_softmax_vector`` is the R=1 view of
+the same program.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -15,29 +21,33 @@ from repro.ap.functional_sim import APSim
 from repro.core.precision import PrecisionConfig
 
 
-def ap_softmax_vector(v_codes: np.ndarray, cfg: PrecisionConfig,
-                      mask: Optional[np.ndarray] = None,
-                      incam_division: bool = False):
-    """One softmax vector (v_codes: int codes at scale S, any sign) through the
-    13-step Fig.-5 program. Returns (prob_codes, APSim with cycle log)."""
-    L = len(v_codes)
+def ap_softmax_batch(v_rows: np.ndarray, cfg: PrecisionConfig,
+                     mask: Optional[np.ndarray] = None,
+                     incam_division: bool = False) -> Tuple[np.ndarray, APSim]:
+    """[R, L] codes (scale S, any sign) through the 13-step Fig.-5 program in
+    one vectorized pass. Returns ([R, L] probability codes, APSim whose
+    cycle log prices ONE row's program — see functional_sim docstring)."""
+    v = np.asarray(v_rows, np.int64)
+    R, L = v.shape
     w = cfg.table1_widths()
     from repro.ap.cost_model import softmax_cycle_breakdown
     br = softmax_cycle_breakdown(cfg, L, incam_division)
-    ap = APSim(L)
+    ap = APSim(L, n_rows=R)
     for name, width in [("A", w["v"]), ("B", w["v"]), ("NEG", 2 * cfg.M),
                         ("Q", 2 * cfg.M), ("QL", 2 * cfg.M),
                         ("R", w["result"]), ("P", w["poly"]),
                         ("VA", w["v_approx"]), ("OUT", w["result"])]:
         ap.alloc(name, width)
 
-    v = np.asarray(v_codes, np.int64)
     if mask is not None:
+        mask = np.asarray(mask, bool)
         v = np.where(mask, v, -(1 << (cfg.M - 1)))
 
-    # steps 1-2: write v and max(v) into A/B, word-parallel subtract
+    # steps 1-2: write v and per-row max(v) into A/B, word-parallel subtract
     ap.load("A", v)
-    ap.load("B", np.full(L, int(v.max()) if L else 0))
+    row_max = (v.max(axis=-1, keepdims=True) if L
+               else np.zeros((R, 1), np.int64))
+    ap.load("B", np.broadcast_to(row_max, (R, L)))
     ap.sub("A", "B", "s1_2_max_sub", cycles=br["s1_2_max_sub"])
     ap.fields["A"] = np.maximum(ap.fields["A"], -(1 << (cfg.M - 1)))  # M-bit floor
 
@@ -74,26 +84,35 @@ def ap_softmax_vector(v_codes: np.ndarray, cfg: PrecisionConfig,
     if mask is not None:
         ap.where_mask("VA", mask, 0, "mask_register")
 
-    # step 11: saturating row-pair reduction
+    # step 11: saturating row-pair reduction (one total per row)
     total = ap.reduce_saturating("VA", cfg.sum_saturation, "s11_reduction",
                                  cycles=br["s11_reduction"])
-    total = max(total, 1)
+    total = np.maximum(total, 1)
 
-    # step 12: fixed-point division into the R column
+    # step 12: fixed-point division into the R column (per-row denominator)
     ap.divide_by_scalar("OUT", "VA", total, cfg.P_out, "s12_division",
                         incam=incam_division, cycles=br["s12_division"])
     ap._charge("s13_writeback", 2 * cfg.M)
     return ap.read("OUT"), ap
 
 
+def ap_softmax_vector(v_codes: np.ndarray, cfg: PrecisionConfig,
+                      mask: Optional[np.ndarray] = None,
+                      incam_division: bool = False):
+    """One softmax vector (v_codes: int codes at scale S, any sign) through
+    the 13-step Fig.-5 program. Returns (prob_codes, APSim with cycle log)."""
+    m = None if mask is None else np.asarray(mask, bool)[None]
+    out, ap = ap_softmax_batch(np.asarray(v_codes, np.int64)[None], cfg,
+                               mask=m, incam_division=incam_division)
+    return out[0], ap
+
+
 def ap_softmax_rows(v_rows: np.ndarray, cfg: PrecisionConfig,
                     mask: Optional[np.ndarray] = None):
-    """[n, L] codes -> [n, L] probability codes (+total cycles). Rows map to
-    sequential AP passes; used by validation tests."""
-    out = np.zeros_like(v_rows, dtype=np.int64)
-    cycles = 0
-    for i in range(v_rows.shape[0]):
-        m = mask[i] if mask is not None else None
-        out[i], ap = ap_softmax_vector(v_rows[i], cfg, mask=m)
-        cycles += ap.cycles
-    return out, cycles
+    """[n, L] codes -> [n, L] probability codes (+total cycles) in ONE
+    vectorized AP pass — no Python per-row loop. Cycles price the sequential
+    single-AP schedule (rows run back-to-back on one AP): per-row program
+    cycles × n, identical to running each row separately."""
+    v = np.asarray(v_rows, np.int64)
+    out, ap = ap_softmax_batch(v, cfg, mask=mask)
+    return out, ap.cycles * v.shape[0]

@@ -1,13 +1,17 @@
 """``ap_sim`` backend: the functional 2D-AP simulator as an execution target.
 
 Routes softmax rows through the Fig.-5 dataflow program
-(``ap.dataflow.ap_softmax_vector`` on ``ap.functional_sim.APSim``) via
+(``ap.dataflow.ap_softmax_rows`` on ``ap.functional_sim.APSim``) via
 ``jax.pure_callback``, so the bit-exact hardware simulation can sit inside a
 jit-traced model forward pass — small models really *serve* through the AP
-simulator instead of it being a standalone script. The float boundary is the
-same as every integer backend: ``quantize_stable_scores`` on the way in, one
-multiply by 2^-P_out on the way out; the codes in between are produced by the
-simulated hardware.
+simulator instead of it being a standalone script. The dataflow program is
+batched: all ``batch*heads*layers`` rows of a callback execute as one
+vectorized numpy pass over a ``[R, L]`` field, so the callback cost scales
+with the vector length, not the row count — what makes ``ap_sim`` serving
+usable inside the fused decode scan. The float boundary is the same as every
+integer backend: ``quantize_stable_scores`` on the way in, one multiply by
+2^-P_out on the way out; the codes in between are produced by the simulated
+hardware.
 
 Cost metering stays analytic (the shared Table-II meter): the dataflow program
 charges exactly ``cost_model.softmax_cycle_breakdown`` per vector, so the

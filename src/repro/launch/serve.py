@@ -3,13 +3,19 @@ generation through the engine with any registered softmax backend (FP
 baselines, SoftmAP integer paths, the Pallas kernel, or the functional AP
 simulator), reporting the per-request AP softmax cost for metered backends.
 
+Generation runs as ONE fused device dispatch after prefill (the lax.scan
+decode loop with in-scan sampling and a donated cache — see
+serving/engine.py); ``--eager`` falls back to the per-token dispatch loop for
+comparison.
+
     PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
-        --softmax int --max-new 32
+        --softmax int --max-new 32 --sampler top_p --top-p 0.9
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
@@ -41,8 +47,20 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=24)
+    from repro.serving.sampler import available_samplers
     ap.add_argument("--sampler", default="greedy",
-                    choices=["greedy", "temperature"])
+                    choices=available_samplers())
+    ap.add_argument("--temp", type=float, default=1.0,
+                    help="temperature for temperature/top_p samplers")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k cutoff for the temperature sampler")
+    ap.add_argument("--top-p", type=float, default=0.9,
+                    help="nucleus mass for the top_p sampler")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop-token id: finished sequences emit it for the "
+                         "remaining steps (EOS early-masking)")
+    ap.add_argument("--eager", action="store_true",
+                    help="pre-fusion per-token dispatch loop (baseline)")
     args = ap.parse_args()
 
     metered = get_backend(args.softmax).metered
@@ -84,9 +102,22 @@ def main():
         print(f"warm-trained {args.warm_steps} steps, "
               f"loss={float(met['loss']):.3f}")
 
-    eng = Engine(model, params, max_new=args.max_new, sampler=args.sampler)
+    sampler_kw = {}
+    if args.sampler == "temperature":
+        sampler_kw = {"temp": args.temp, "top_k": args.top_k}
+    elif args.sampler in ("top_p", "nucleus"):
+        sampler_kw = {"p": args.top_p, "temp": args.temp}
+    eng = Engine(model, params, max_new=args.max_new, sampler=args.sampler,
+                 eos_id=args.eos_id, **sampler_kw)
     prompts = corpus.sample(args.batch, args.prompt_len, seed=777)[:, :args.prompt_len]
-    res = eng.generate(prompts, report_cost=True)
+    mode = "eager" if args.eager else "fused"
+    res = eng.generate(prompts, report_cost=True, mode=mode)  # compile + run
+    t0 = time.perf_counter()
+    res = eng.generate(prompts, report_cost=True, mode=mode)
+    dt = time.perf_counter() - t0
+    tps = args.batch * args.max_new / dt
+    print(f"{mode} generation: {args.batch}x{args.max_new} tokens "
+          f"in {dt * 1e3:.1f} ms ({tps:.0f} tok/s)")
     ok = sum(int(row[t + 1] in corpus.table[row[t]])
              for row in res.tokens
              for t in range(res.prompt_len - 1, res.tokens.shape[1] - 1))

@@ -24,15 +24,20 @@ from repro.serving.engine import make_serve_step
 @dataclasses.dataclass(frozen=True)
 class ShapeSpec:
     name: str
-    kind: str        # train | prefill | decode
+    kind: str        # train | prefill | decode | generate
     seq: int
     batch: int
+    max_new: int = 0  # generate cells: scan length (seq includes these slots)
 
 
 SHAPES = {
     "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
     "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
     "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    # the whole fused generation loop as ONE lowered computation: a lax.scan
+    # of max_new decode steps with in-scan sampling and a donated cache
+    "generate_32k": ShapeSpec("generate_32k", "generate", 32768, 128,
+                              max_new=64),
     "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
 }
 
@@ -197,18 +202,35 @@ def build_cell(arch: str, shape_name: str, mesh, remat: str = "full",
                     (params_sh, _batch_shardings(batch, mesh, rules)),
                     (), meta)
 
-    # decode
-    fn = make_serve_step(model, "decode")
+    # decode / generate share the cache plumbing (and donate it: argnum 1)
     enc_len = shape.seq if cfg.family == "encdec" else 0
     cache = cache_struct(cfg, shape.batch, shape.seq, enc_len)
     c_axes = cache_axes(cfg, shape.batch, shape.seq, enc_len)
     cache_sh = jax.tree.map(
         lambda axes, s: sharding_for(s.shape, axes, mesh, rules),
         c_axes, cache, is_leaf=_is_axes)
-    token = _sds((shape.batch, 1), jnp.int32)
-    token_sh = sharding_for(token.shape, ("batch", None), mesh, rules)
     pos_scalar = _sds((), jnp.int32)
     pos_sh = NamedSharding(mesh, rules.spec((), mesh))
+
+    if shape.kind == "generate":
+        # whole-generation fused scan: (params, cache, prefill_logits, key,
+        # base_pos) -> (tokens, cache, done); positions (mrope included) are
+        # built inside the traced step body, so no per-step inputs exist
+        fn = make_serve_step(model, "generate", max_new=shape.max_new)
+        logits = _sds((shape.batch, 1, cfg.vocab),
+                      jnp.dtype(cfg.logits_dtype))
+        logits_sh = sharding_for(logits.shape, ("batch", None, "vocab"),
+                                 mesh, rules)
+        key = _sds((2,), jnp.uint32)
+        key_sh = NamedSharding(mesh, rules.spec((), mesh))
+        meta = {**meta, "max_new": shape.max_new}
+        return Cell(fn, (params_struct, cache, logits, key, pos_scalar),
+                    (params_sh, cache_sh, logits_sh, key_sh, pos_sh),
+                    (1,), meta)
+
+    fn = make_serve_step(model, "decode")
+    token = _sds((shape.batch, 1), jnp.int32)
+    token_sh = sharding_for(token.shape, ("batch", None), mesh, rules)
     args = [params_struct, cache, token, pos_scalar]
     shardings = [params_sh, cache_sh, token_sh, pos_sh]
     if cfg.rope_type == "mrope":

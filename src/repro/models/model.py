@@ -260,7 +260,14 @@ class Model:
 
     def decode_step(self, p, cache, batch, cache_pos):
         """batch: {"token": [B,1]} (+ "positions" [3,B,1] for mrope).
-        cache_pos: scalar int32 — current filled length."""
+        cache_pos: scalar int32 — current filled length.
+
+        Scan-compatibility contract (every cache family): the returned cache
+        is structurally identical to the input — same pytree, shapes, and
+        dtypes — so the fused generation loop can carry it through
+        ``jax.lax.scan`` (serving/engine.make_generate_fn) and the jit can
+        donate it for in-place updates. ``cache_pos`` may be a traced scalar
+        (the scan's ``base_pos + t``)."""
         cfg, ctx = self.cfg, self.ctx
         if cfg.family == "encdec":
             x = self._dec_embed(p, batch["token"], cache_pos)

@@ -306,7 +306,12 @@ def dec_block_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
 
 def scan_decode(params, caches, x, cache_pos, cfg, ctx: Ctx, positions,
                 kind: str):
-    """Scan a stacked segment in decode mode, threading per-layer caches."""
+    """Scan a stacked segment in decode mode, threading per-layer caches.
+
+    Per-layer caches come back with the shapes/dtypes they arrived with
+    (``block_decode`` writes via dynamic_update_slice and casts new entries
+    to the cache dtype) — the layer-stacking half of the scan-compatibility
+    contract documented on ``Model.decode_step``."""
 
     def body(carry, xs):
         layer_p, cache = xs

@@ -1,26 +1,44 @@
-"""Batched serving engine: prefill + jit'd decode loop over the KV cache.
+"""Batched serving engine: prefill + a SINGLE fused decode dispatch.
+
+Generation is two device calls: one jitted prefill, then one jitted
+``jax.lax.scan`` over all ``max_new`` decode steps (``make_generate_fn``).
+The scan carries ``(kv_cache, prng_key, last_token, done_flags)``; sampling
+runs inside the traced step body (samplers are pure jit-safe functions,
+selected statically), and the cache is donated (``donate_argnums``) so each
+step's ``dynamic_update_slice`` writes in place instead of copying the
+multi-MB cache per token. The pre-fusion eager loop (one dispatch + one host
+sampling round-trip per token) is kept as ``mode="eager"`` — it is the golden
+reference for bit-exactness tests and the baseline ``benchmarks/decode_bench``
+measures the fusion speedup against.
+
+EOS early-masking: with ``eos_id`` set, per-sequence done-flags ride in the
+scan carry; finished rows emit ``pad_id`` (default: ``eos_id``) for the
+remaining steps. The scan still runs ``max_new`` iterations (static shape),
+but finished rows stop changing.
 
 The serve path the dry-run lowers (``serve_step``) is exactly the
-``decode_step`` closure built here; the engine adds batching, sampling, and
-the prompt-alignment policy (left-padding so all sequences share a cache
-position — the uniform-position batching documented in DESIGN.md).
+``decode_step`` / whole-generation closure built here; the engine adds
+batching, sampling, and the prompt-alignment policy (left-padding so all
+sequences share a cache position — the uniform-position batching documented
+in DESIGN.md).
 
 Cost telemetry: with ``report_cost=True``, ``generate`` also returns a
 per-call :class:`repro.backends.CostReport` covering the WHOLE batch — the AP
 cycles / latency / energy the paper's hardware would spend on its softmaxes
-(divide by the batch size for a per-sequence figure). The
-meter is a ``jax.eval_shape`` abstract trace of the prefill and one decode
-step (every softmax call site in ``models/attention.py`` records its static
-shape into the active telemetry accumulator), so it costs no device compute
-and never perturbs the jit caches; the decode-step report is scaled by the
-number of generated tokens.
+(divide by the batch size for a per-sequence figure). The meter is a
+``jax.eval_shape`` abstract trace of the prefill and ONE decode-scan body
+(every softmax call site in ``models/attention.py`` records its static shape
+into the active telemetry accumulator), scaled by the number of generated
+tokens — matching the fused execution, where the scan body traces once and
+runs ``max_new - 1`` times. It costs no device compute and never perturbs the
+jit caches.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, List, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,34 +55,109 @@ class GenerationResult:
     prompt_len: int
     steps: int
     cost: Optional[CostReport] = None   # softmax AP cost of the whole batch
+    done: Optional[np.ndarray] = None   # [B] bool, only when eos_id is set
+
+
+def _step_inputs(model: Model, nxt, b: int, pos):
+    """Decode-step input dict for one traced position (scalar, may be traced)."""
+    step_in = {"token": nxt}
+    if model.cfg.rope_type == "mrope":
+        step_in["positions"] = jnp.full((3, b, 1), pos, jnp.int32)
+    return step_in
+
+
+def make_generate_fn(model: Model, sample_fn: Callable, max_new: int,
+                     eos_id: Optional[int] = None,
+                     pad_id: Optional[int] = None) -> Callable:
+    """Build the whole-generation function: (params, cache, prefill_logits,
+    key, base_pos) -> (tokens [B, max_new], cache, done [B]).
+
+    One ``lax.scan`` over ``max_new - 1`` decode steps; the body traces once.
+    Carry layout: ``(cache, key, last_token [B,1], done [B])``. ``base_pos``
+    is a traced int32 scalar (the shared prompt length). Jit with
+    ``donate_argnums=(1,)`` so the cache updates in place.
+    """
+    pad = eos_id if pad_id is None else pad_id
+
+    def mask_done(tok, done):
+        if eos_id is None:
+            return tok, done
+        tok = jnp.where(done, jnp.int32(pad), tok)
+        return tok, done | (tok == eos_id)
+
+    def generate_fn(params, cache, logits, key, base_pos):
+        b = logits.shape[0]
+        done = jnp.zeros((b,), bool)
+        key, sub = jax.random.split(key)
+        tok = sample_fn(logits[:, -1], sub)
+        tok, done = mask_done(tok, done)
+        if max_new <= 1:
+            return tok[:, None], cache, done
+
+        # Align the prefill-built cache to the decode-step output structure
+        # (dtypes must be identical for a type-stable scan carry; shapes
+        # already match or lax.scan errors loudly).
+        out_struct = jax.eval_shape(
+            model.decode_step, params, cache,
+            _step_inputs(model, tok[:, None], b, base_pos), base_pos)
+        cache = jax.tree.map(lambda c, s: c.astype(s.dtype), cache,
+                             out_struct[1])
+
+        def step(carry, t):
+            cache, key, nxt, done = carry
+            pos = base_pos + t
+            logits, cache = model.decode_step(
+                params, cache, _step_inputs(model, nxt, b, pos), pos)
+            key, sub = jax.random.split(key)
+            tok = sample_fn(logits[:, -1], sub)
+            tok, done = mask_done(tok, done)
+            return (cache, key, tok[:, None], done), tok
+
+        with telemetry.repeat(max_new - 1):  # body traces once, runs n times
+            (cache, _, _, done), rest = jax.lax.scan(
+                step, (cache, key, tok[:, None], done),
+                jnp.arange(max_new - 1, dtype=jnp.int32))
+        toks = jnp.concatenate([tok[:, None], rest.T], axis=1)
+        return toks, cache, done
+
+    return generate_fn
 
 
 class Engine:
     def __init__(self, model: Model, params, max_new: int = 64,
-                 sampler: str = "greedy", **sampler_kw):
+                 sampler: str = "greedy", eos_id: Optional[int] = None,
+                 pad_id: Optional[int] = None, **sampler_kw):
         self.model = model
         self.params = params
         self.max_new = max_new
+        self.eos_id = eos_id
+        self.pad_id = eos_id if pad_id is None else pad_id
         self.sample = make_sampler(sampler, **sampler_kw)
-        self._decode = jax.jit(model.decode_step)
+        # donate the cache (arg 1): decode updates it in place; params (arg 0)
+        # are reused across calls and must NOT be donated. Prefill donates
+        # nothing: params are reused, the int32 token batch feeds a gather XLA
+        # cannot alias, and callers may reuse their extra_inputs arrays
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         self._prefill = jax.jit(model.prefill, static_argnames=("cache_len",))
+        self._fused = jax.jit(
+            make_generate_fn(model, self.sample, max_new, eos_id, pad_id),
+            donate_argnums=(1,))
         self._meter_cache: dict = {}  # (batch shapes, cache_len) -> CostReport
 
     def _decode_inputs(self, nxt, b: int, p: int, t: int):
-        step_in = {"token": nxt}
-        if self.model.cfg.rope_type == "mrope":
-            step_in["positions"] = jnp.full((3, b, 1), p + t, jnp.int32)
-        return step_in
+        return _step_inputs(self.model, nxt, b, p + t)
 
     def meter_request(self, batch: dict, cache_len: int, cache) -> CostReport:
         """Abstract-trace the request's softmax AP cost (no device compute).
 
         ``cache`` is any decode-ready cache pytree of the right shapes (the
-        one prefill just returned); decode cost is per step at the full cache
-        length — the AP processes whole rows with its mask register, exactly
-        like the model's masked attention — times the generated tokens. The
-        report depends only on static shapes, so it is memoized on the batch's
-        input shapes + cache_len: repeated same-shape calls skip the trace.
+        one prefill just returned); decode cost is one scan-body trace at the
+        full cache length — the AP processes whole rows with its mask
+        register, exactly like the model's masked attention — times the
+        generated tokens, mirroring the fused scan's trace-once/run-n
+        execution. The report depends only on static shapes, so it is memoized
+        on the batch's input shapes + cache_len: repeated same-shape calls
+        skip the trace.
         """
         b, p = batch["tokens"].shape
         key = (tuple(sorted((k, tuple(v.shape)) for k, v in batch.items())),
@@ -89,9 +182,14 @@ class Engine:
 
     def generate(self, prompts: np.ndarray, key=None,
                  extra_inputs: Optional[dict] = None,
-                 report_cost: bool = False) -> GenerationResult:
+                 report_cost: bool = False,
+                 mode: str = "fused") -> GenerationResult:
         """prompts: [B, P] int32 (left-pad with a fill token upstream; the
-        engine batches uniformly at cache position P)."""
+        engine batches uniformly at cache position P). mode: "fused" (one
+        dispatch after prefill) or "eager" (the pre-fusion per-token loop —
+        golden reference / benchmark baseline)."""
+        if mode not in ("fused", "eager"):
+            raise ValueError(f"mode must be 'fused' or 'eager', got {mode!r}")
         key = key if key is not None else jax.random.PRNGKey(0)
         b, p = prompts.shape
         cache_len = p + self.max_new
@@ -99,25 +197,47 @@ class Engine:
         logits, cache = self._prefill(self.params, batch, cache_len=cache_len)
         cost = (self.meter_request(batch, cache_len, cache)
                 if report_cost else None)
-        toks = [jnp.asarray(prompts)]
+        if mode == "fused":
+            gen, cache, done = self._fused(self.params, cache, logits, key,
+                                           jnp.int32(p))
+            gen, done = np.asarray(gen), np.asarray(done)
+        else:
+            gen, done = self._generate_eager(cache, logits, key, b, p)
+        out = np.concatenate([prompts.astype(np.int32), gen], axis=1)
+        return GenerationResult(out, prompt_len=p, steps=self.max_new,
+                                cost=cost,
+                                done=done if self.eos_id is not None else None)
+
+    def _generate_eager(self, cache, logits, key, b: int, p: int):
+        """Pre-fusion loop: one device dispatch + one host sampling
+        round-trip per generated token."""
+        done = jnp.zeros((b,), bool)
         key, sub = jax.random.split(key)
-        nxt = self.sample(logits[:, -1], sub)[:, None]
-        toks.append(nxt)
+        nxt = self.sample(logits[:, -1], sub)
+        if self.eos_id is not None:
+            done = done | (nxt == self.eos_id)
+        toks = [nxt[:, None]]
         for t in range(self.max_new - 1):
-            step_in = self._decode_inputs(nxt, b, p, t)
+            step_in = self._decode_inputs(nxt[:, None], b, p, t)
             logits, cache = self._decode(self.params, cache, step_in,
                                          jnp.int32(p + t))
             key, sub = jax.random.split(key)
-            nxt = self.sample(logits[:, -1], sub)[:, None]
-            toks.append(nxt)
-        out = np.asarray(jnp.concatenate(toks, axis=1))
-        return GenerationResult(out, prompt_len=p, steps=self.max_new,
-                                cost=cost)
+            tok = self.sample(logits[:, -1], sub)
+            if self.eos_id is not None:
+                tok = jnp.where(done, jnp.int32(self.pad_id), tok)
+                done = done | (tok == self.eos_id)
+            nxt = tok
+            toks.append(nxt[:, None])
+        return (np.asarray(jnp.concatenate(toks, axis=1)),
+                np.asarray(done))
 
 
-def make_serve_step(model: Model, kind: str):
-    """The function the dry-run lowers for decode cells: one token for the
-    whole batch against a fixed-size cache."""
+def make_serve_step(model: Model, kind: str, max_new: int = 64,
+                    sampler: str = "greedy", eos_id: Optional[int] = None):
+    """The function the dry-run lowers. ``decode``: one token for the whole
+    batch against a fixed-size cache. ``generate``: the whole-generation
+    fused scan (prefill logits in, all ``max_new`` tokens out) — lower it
+    with ``donate_argnums=(1,)`` to keep the cache in place."""
     if kind == "decode":
         def serve_step(params, cache, token, cache_pos, positions=None):
             batch = {"token": token}
@@ -125,6 +245,8 @@ def make_serve_step(model: Model, kind: str):
                 batch["positions"] = positions
             return model.decode_step(params, cache, batch, cache_pos)
         return serve_step
+    if kind == "generate":
+        return make_generate_fn(model, make_sampler(sampler), max_new, eos_id)
     if kind == "prefill":
         def prefill_step(params, batch, cache_len):
             return model.prefill(params, batch, cache_len=cache_len)

@@ -1,9 +1,20 @@
-"""Token samplers (pure functions of logits + key)."""
+"""Token samplers: pure, jit-safe functions of (logits, key).
+
+Every sampler here is traceable — no data-dependent Python control flow —
+so the fused generation scan (``serving/engine.make_generate_fn``) can call
+them inside its traced step body. ``make_sampler`` selects the sampler
+*statically* (a Python-level closure, fixed before tracing); only logits and
+the PRNG key flow through the trace.
+"""
 
 from __future__ import annotations
 
+from typing import Callable
+
 import jax
 import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative mask value (finite: avoids nan in softmax)
 
 
 def greedy(logits, key=None):
@@ -13,14 +24,55 @@ def greedy(logits, key=None):
 def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
     logits = logits.astype(jnp.float32) / max(temp, 1e-6)
     if top_k:
-        kth = jnp.sort(logits, axis=-1)[..., -top_k:-top_k + 1]
-        logits = jnp.where(logits < kth, -1e30, logits)
+        k = min(top_k, logits.shape[-1])
+        kth = jnp.sort(logits, axis=-1)[..., -k][..., None]
+        logits = jnp.where(logits < kth, NEG_INF, logits)
     return jax.random.categorical(key, logits).astype(jnp.int32)
 
 
-def make_sampler(kind: str = "greedy", **kw):
-    if kind == "greedy":
-        return lambda logits, key: greedy(logits)
-    if kind == "temperature":
-        return lambda logits, key: temperature(logits, key, **kw)
-    raise ValueError(kind)
+def top_p(logits, key, p: float = 0.9, temp: float = 1.0):
+    """Nucleus sampling: keep exactly the smallest prefix of the
+    probability-sorted vocab whose mass reaches ``p``, renormalize, sample.
+
+    Jit-safe formulation: argsort descending, keep every position whose
+    *exclusive* cumulative probability is still below ``p`` (the top-1 token
+    always has exclusive mass 0, so at least one token survives — including
+    the single-token-mass case), then scatter the sorted keep-mask back
+    through the inverse permutation. The scatter preserves exact
+    smallest-prefix semantics even when many logits tie at the nucleus
+    boundary (a value cutoff would admit every tied token); ties are broken
+    by sort order. ``p >= 1.0`` keeps every token with nonzero probability.
+    """
+    logits = logits.astype(jnp.float32) / max(temp, 1e-6)
+    order = jnp.argsort(logits, axis=-1)[..., ::-1]               # descending
+    sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum_exclusive = jnp.cumsum(probs, axis=-1) - probs
+    keep_sorted = cum_exclusive < p
+    inv = jnp.argsort(order, axis=-1)
+    keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+    masked = jnp.where(keep, logits, NEG_INF)
+    return jax.random.categorical(key, masked).astype(jnp.int32)
+
+
+_SAMPLERS = {
+    "greedy": lambda kw: (lambda logits, key: greedy(logits)),
+    "temperature": lambda kw: (lambda logits, key: temperature(logits, key, **kw)),
+    "top_p": lambda kw: (lambda logits, key: top_p(logits, key, **kw)),
+}
+_SAMPLERS["nucleus"] = _SAMPLERS["top_p"]
+
+
+def available_samplers():
+    return sorted(_SAMPLERS)
+
+
+def make_sampler(kind="greedy", **kw) -> Callable:
+    """kind: registry name, or a callable ``(logits, key) -> int32 tokens``
+    (must be jit-safe — it runs inside the fused generation scan)."""
+    if callable(kind):
+        return kind
+    if kind not in _SAMPLERS:
+        raise ValueError(f"unknown sampler {kind!r}; "
+                         f"available: {available_samplers()}")
+    return _SAMPLERS[kind](kw)

@@ -76,6 +76,35 @@ def test_dataflow_bit_exact_vs_jax(M, N, e):
     assert np.array_equal(got, ref), "AP dataflow diverged from Algorithm 1"
 
 
+def test_dataflow_batched_single_pass():
+    """A 1024-row batch runs as ONE vectorized pass (no Python per-row loop:
+    the per-vector entry point is stubbed out to prove it is never called),
+    stays bit-exact vs Algorithm 1, and prices the sequential single-AP
+    schedule: per-row program cycles x rows."""
+    from repro.ap import dataflow
+    cfg = PrecisionConfig(M=6, N=16)
+    rng = np.random.default_rng(42)
+    x = rng.normal(0, 2, (1024, 128)).astype(np.float32)
+    mask = rng.random((1024, 128)) > 0.2
+    v = np.asarray(quantize_stable_scores(jnp.asarray(x), cfg,
+                                          mask=jnp.asarray(mask)))
+    _, ap_single = ap_softmax_vector(v[0], cfg, mask=mask[0])
+
+    orig = dataflow.ap_softmax_vector
+    def boom(*a, **k):
+        raise AssertionError("ap_softmax_rows fell back to a per-row loop")
+    dataflow.ap_softmax_vector = boom
+    try:
+        got, cycles = ap_softmax_rows(v, cfg, mask=mask)
+    finally:
+        dataflow.ap_softmax_vector = orig
+
+    ref = np.asarray(int_softmax_from_codes(
+        jnp.asarray(v), cfg, mask=jnp.asarray(mask), assume_stable=True))
+    assert np.array_equal(got, ref)
+    assert cycles == 1024 * ap_single.cycles
+
+
 def test_dataflow_cycles_match_breakdown():
     cfg = PrecisionConfig(M=6, N=16)
     v = np.asarray(quantize_stable_scores(

@@ -1,0 +1,152 @@
+"""Fused single-dispatch generation: bit-exact parity with the pre-fusion
+eager loop (the golden reference) across cache families, EOS early-masking,
+the one-dispatch/one-trace contract, and in-place cache donation."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.models import build_model
+from repro.serving.engine import Engine
+
+# one representative arch per decode-cache family
+FAMILY_ARCHS = ["olmo-1b", "minicpm3-4b", "mamba2-780m", "hymba-1.5b"]
+
+
+def _setup(arch, seed=0):
+    cfg = smoke_config(arch)
+    m = build_model(cfg)
+    params, _ = m.init_split(jax.random.PRNGKey(0))
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed), (2, 5), 0, cfg.vocab),
+        np.int32)
+    return cfg, m, params, prompts
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_greedy_bit_identical_eager_vs_fused(arch):
+    """The scan fusion must not change a single token: golden greedy tokens
+    from the eager per-step loop == the fused single-dispatch output."""
+    cfg, m, params, prompts = _setup(arch)
+    golden = Engine(m, params, max_new=6).generate(prompts, mode="eager")
+    fused = Engine(m, params, max_new=6).generate(prompts, mode="fused")
+    assert np.array_equal(golden.tokens, fused.tokens), (
+        golden.tokens, fused.tokens)
+    assert fused.tokens.shape == (2, 5 + 6)
+
+
+def test_stochastic_sampler_bit_identical_eager_vs_fused():
+    """Key-splitting order matches the eager loop, so even stochastic
+    sampling is bit-identical under fusion (same PRNG stream)."""
+    cfg, m, params, prompts = _setup("olmo-1b")
+    key = jax.random.PRNGKey(7)
+    kw = dict(max_new=6, sampler="temperature", temp=1.3, top_k=8)
+    golden = Engine(m, params, **kw).generate(prompts, key=key, mode="eager")
+    fused = Engine(m, params, **kw).generate(prompts, key=key, mode="fused")
+    assert np.array_equal(golden.tokens, fused.tokens)
+
+
+def test_eos_early_stop_masks_finished_rows():
+    cfg, m, params, prompts = _setup("olmo-1b")
+    base = Engine(m, params, max_new=8).generate(prompts, mode="fused")
+    # pick the token row 0 greedily emits at step 2 as the stop token
+    eos = int(base.tokens[0, 5 + 2])
+    eng = Engine(m, params, max_new=8, eos_id=eos)
+    res = eng.generate(prompts, mode="fused")
+    golden = Engine(m, params, max_new=8, eos_id=eos).generate(
+        prompts, mode="eager")
+    assert np.array_equal(res.tokens, golden.tokens)
+    assert res.done is not None and bool(res.done[0])
+    gen0 = res.tokens[0, 5:]
+    first = int(np.argmax(gen0 == eos))
+    # every step after (and including) the first EOS emits the pad (== eos)
+    assert (gen0[first:] == eos).all(), gen0
+    # rows that never hit EOS are untouched relative to the no-eos run
+    for b in range(res.tokens.shape[0]):
+        if not res.done[b]:
+            assert np.array_equal(res.tokens[b], base.tokens[b])
+
+
+def test_single_dispatch_single_trace():
+    """One device dispatch after prefill; the scan body traces decode_step
+    once (plus one abstract eval_shape for carry alignment), and a second
+    same-shape call hits the jit cache with zero new traces."""
+    cfg, m, params, prompts = _setup("olmo-1b")
+    traces = {"n": 0}
+    orig_decode_step = m.decode_step
+
+    def counting_decode_step(*a, **k):
+        traces["n"] += 1
+        return orig_decode_step(*a, **k)
+
+    m.decode_step = counting_decode_step
+    eng = Engine(m, params, max_new=8)
+
+    dispatches = {"fused": 0, "eager": 0}
+    fused_fn, decode_fn = eng._fused, eng._decode
+
+    def counting_fused(*a, **k):
+        dispatches["fused"] += 1
+        return fused_fn(*a, **k)
+
+    def counting_decode(*a, **k):
+        dispatches["eager"] += 1
+        return decode_fn(*a, **k)
+
+    eng._fused, eng._decode = counting_fused, counting_decode
+    eng.generate(prompts, mode="fused")
+    assert dispatches == {"fused": 1, "eager": 0}
+    # trace-once: eval_shape alignment + the single scan-body trace; if the
+    # scan retraced per token this would be ~max_new
+    assert traces["n"] <= 2, traces["n"]
+    after_first = traces["n"]
+    eng.generate(prompts, mode="fused")
+    assert dispatches == {"fused": 2, "eager": 0}
+    assert traces["n"] == after_first, "same-shape call must not retrace"
+
+
+def test_decode_cache_donated_not_copied():
+    """donate_argnums aliases the KV cache: the decode output reuses the
+    input buffer (no per-step multi-MB copy) for both the eager jit and the
+    whole fused scan."""
+    cfg, m, params, prompts = _setup("olmo-1b")
+    eng = Engine(m, params, max_new=8)
+    b, p = prompts.shape
+    cache_len = p + eng.max_new
+
+    logits, cache = eng._prefill(eng.params, {"tokens": jnp.asarray(prompts)},
+                                 cache_len=cache_len)
+    ptr = cache["k"].unsafe_buffer_pointer()
+    _, cache2 = eng._decode(eng.params, cache,
+                            {"token": jnp.zeros((b, 1), jnp.int32)},
+                            jnp.int32(p))
+    assert cache2["k"].unsafe_buffer_pointer() == ptr
+    assert cache["k"].is_deleted()
+
+    logits, cache = eng._prefill(eng.params, {"tokens": jnp.asarray(prompts)},
+                                 cache_len=cache_len)
+    ptr = cache["k"].unsafe_buffer_pointer()
+    _, cache3, _ = eng._fused(eng.params, cache, logits,
+                              jax.random.PRNGKey(0), jnp.int32(p))
+    assert cache3["k"].unsafe_buffer_pointer() == ptr
+    assert cache["k"].is_deleted()
+
+
+def test_generate_cell_lowers_with_donated_cache():
+    """The dry-run 'generate' cell: the whole-generation scan lowers as one
+    computation with the cache donated (specs.py plumbing)."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.specs import build_cell
+    from repro.distributed.sharding import use_mesh
+
+    mesh = make_host_mesh()
+    cell = build_cell("olmo-1b", "generate_32k", mesh, n_layers_override=1)
+    assert cell.donate_argnums == (1,)
+    assert cell.meta["max_new"] == 64
+    with use_mesh(mesh):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args)
+    assert "dynamic_update_slice" in lowered.as_text()

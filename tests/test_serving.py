@@ -9,7 +9,7 @@ from repro.core.softmax_variants import SoftmaxSpec
 from repro.data.synthetic import SyntheticCorpus
 from repro.models import build_model
 from repro.serving.engine import Engine
-from repro.serving.sampler import greedy, temperature
+from repro.serving.sampler import greedy, make_sampler, temperature, top_p
 
 
 def _trained_model(steps=80):
@@ -52,6 +52,65 @@ def test_samplers():
     assert (np.asarray(t) == 1).mean() > 0.95
     tk = temperature(jnp.repeat(logits, 64, 0), k, temp=10.0, top_k=2)
     assert set(np.unique(np.asarray(tk))) <= {1, 2}
+    # top_k=1 collapses to argmax; top_k >= vocab is a no-op (clamped)
+    t1 = temperature(jnp.repeat(logits, 16, 0), k, temp=10.0, top_k=1)
+    assert (np.asarray(t1) == 1).all()
+    tall = temperature(jnp.repeat(logits, 16, 0), k, temp=0.01, top_k=99)
+    assert (np.asarray(tall) == 1).mean() > 0.9
+
+
+def test_top_p_nucleus_cutoff():
+    """Small p keeps only the nucleus: with a peaked distribution, sampling
+    collapses to the top token."""
+    logits = jnp.repeat(jnp.asarray([[0.0, 3.0, 1.0, -1.0]]), 256, 0)
+    k = jax.random.PRNGKey(1)
+    out = np.asarray(top_p(logits, k, p=0.5))
+    assert (out == 1).all(), np.unique(out)
+    # larger p admits the runner-up (mass ~0.83+0.11) but never the tail
+    out = np.asarray(top_p(logits, k, p=0.9))
+    assert set(np.unique(out)) <= {1, 2}
+
+
+def test_top_p_full_mass_keeps_whole_vocab():
+    """p=1.0 degenerates to plain categorical sampling — every token with
+    nonzero probability stays reachable."""
+    logits = jnp.zeros((512, 4))
+    out = np.asarray(top_p(logits, jax.random.PRNGKey(2), p=1.0))
+    assert set(np.unique(out)) == {0, 1, 2, 3}
+
+
+def test_top_p_exact_prefix_on_ties():
+    """Logits tying at the nucleus boundary must not inflate the kept set:
+    uniform 4-token logits with p=0.5 keep exactly the 2-token prefix (a
+    value cutoff would keep all four)."""
+    logits = jnp.zeros((512, 4))
+    out = np.asarray(top_p(logits, jax.random.PRNGKey(5), p=0.5))
+    assert len(np.unique(out)) == 2, np.unique(out)
+
+
+def test_top_p_single_token_mass():
+    """One token holding ~all the probability mass: the exclusive-cumsum keep
+    rule always retains the top-1 token, so sampling is well-defined."""
+    logits = jnp.repeat(jnp.asarray([[0.0, 50.0, 0.0]]), 64, 0)
+    out = np.asarray(top_p(logits, jax.random.PRNGKey(3), p=0.9))
+    assert (out == 1).all()
+
+
+def test_top_p_masked_vocab():
+    """Pre-masked logits (-inf'd vocab entries) never leak into samples."""
+    logits = jnp.repeat(jnp.asarray([[1.0, -1e30, 0.5, -1e30]]), 256, 0)
+    out = np.asarray(top_p(logits, jax.random.PRNGKey(4), p=1.0))
+    assert set(np.unique(out)) <= {0, 2}
+
+
+def test_make_sampler_registry_and_callable():
+    import pytest
+    assert make_sampler("top_p", p=0.9) is not None
+    assert make_sampler("nucleus") is not None
+    custom = lambda logits, key: greedy(logits)
+    assert make_sampler(custom) is custom
+    with pytest.raises(ValueError):
+        make_sampler("beam")
 
 
 def test_int8_kv_cache_decode_close_to_full_precision():
