@@ -13,7 +13,7 @@ def main() -> None:
 
     from benchmarks import (
         ap_comparison, decode_bench, kernel_bench, precision_sweep,
-        roofline_table,
+        roofline_table, serve_bench,
     )
     from benchmarks.common import emit
 
@@ -24,12 +24,24 @@ def main() -> None:
                  f"speedup={r['fused_speedup']:.1f}x")
                 for r in report["results"]]
 
+    def serve_rows():
+        report = serve_bench.bench("olmo-1b", n_requests=16, slots=4,
+                                   seed=0, iters=1)
+        res = report["results"]
+        return [(f"serve_{policy}",
+                 1e6 * res[policy]["wall_s"],
+                 f"tps={res[policy]['tokens_per_s']:.0f} "
+                 f"p99={res[policy]['latency_p99_s'] * 1e3:.1f}ms")
+                for policy in ("gang", "continuous")] + [
+                ("serve_speedup", 0.0, f"{res['speedup_tps']:.2f}x")]
+
     suites = [
         ("precision_sweep", precision_sweep.run),     # Tables III/IV
         ("ap_comparison", ap_comparison.run),         # Figs 1,6,7,8; Tables V,VI
         ("kernel_bench", kernel_bench.run),           # Pallas kernels vs oracle
         ("roofline_table", roofline_table.run),       # EXPERIMENTS.md §Roofline
         ("decode_bench", decode_rows),                # BENCH_decode.json source
+        ("serve_bench", serve_rows),                  # BENCH_serve.json source
     ]
     for name, fn in suites:
         if args.only and args.only not in name:

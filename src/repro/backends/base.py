@@ -48,6 +48,13 @@ class CostReport:
             self, vectors=self.vectors * k, cycles=self.cycles * k,
             latency_s=self.latency_s * k, energy_j=self.energy_j * k)
 
+    def scaled_f(self, k: float) -> "CostReport":
+        """Fractional scaling, for attributing a batch-wide report across the
+        requests that shared it (continuous-batching serving): ``vectors`` /
+        ``cycles`` become floats in the result. Shares of a report composed
+        back with ``+`` reproduce the original up to float rounding."""
+        return self.scaled(k)
+
     def __add__(self, other: "CostReport") -> "CostReport":
         if not isinstance(other, CostReport):
             return NotImplemented

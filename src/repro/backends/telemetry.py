@@ -103,3 +103,44 @@ def record_softmax(backend: SoftmaxBackend, shape: Sequence[int],
     if not _accumulators():
         return
     record(backend.meter(tuple(int(d) for d in shape), axis=axis, heads=heads))
+
+
+class SlotCostAttributor:
+    """Per-request attribution of batch-wide serving cost.
+
+    The continuous-batching decode step is metered ONCE for the whole slot
+    batch (its cost depends only on static shapes); each executed step then
+    charges that report evenly to the requests active in it via
+    :meth:`record_step`. Request-local costs (its own prefill trace) go in
+    through :meth:`record_request`. The invariant the scheduler's property
+    tests pin: the per-request reports sum to the batch meter —
+    ``sum(attr.report_for(r) for r in rids) == batch_total`` up to float
+    rounding, because every step's report is split with exact fractions
+    ``1/len(active)``.
+    """
+
+    def __init__(self):
+        self._by_request: dict = {}
+        self._batch_total = ZERO_COST
+
+    def record_step(self, step_report: CostReport, active_requests) -> None:
+        """Charge one executed decode step to the requests that rode in it."""
+        active = list(active_requests)
+        if not active:
+            return
+        self._batch_total = self._batch_total + step_report
+        share = step_report.scaled_f(1.0 / len(active))
+        for rid in active:
+            self._by_request[rid] = self._by_request.get(rid, ZERO_COST) + share
+
+    def record_request(self, rid, report: CostReport) -> None:
+        """Charge a request-local phase (e.g. its prefill) to one request."""
+        self._batch_total = self._batch_total + report
+        self._by_request[rid] = self._by_request.get(rid, ZERO_COST) + report
+
+    def report_for(self, rid) -> CostReport:
+        return self._by_request.get(rid, ZERO_COST)
+
+    def total(self) -> CostReport:
+        """The batch meter: everything recorded, before attribution."""
+        return self._batch_total

@@ -6,10 +6,14 @@ simulator), reporting the per-request AP softmax cost for metered backends.
 Generation runs as ONE fused device dispatch after prefill (the lax.scan
 decode loop with in-scan sampling and a donated cache — see
 serving/engine.py); ``--eager`` falls back to the per-token dispatch loop for
-comparison.
+comparison. ``--continuous`` switches to the continuous-batching scheduler:
+a trace of staggered mixed-length requests served through slot-based KV
+caching (``Engine.serve``), with per-request latency and attributed AP cost.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
         --softmax int --max-new 32 --sampler top_p --top-p 0.9
+    PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
+        --softmax int --continuous --requests 16 --slots 4
 """
 
 from __future__ import annotations
@@ -61,6 +65,16 @@ def main():
                          "remaining steps (EOS early-masking)")
     ap.add_argument("--eager", action="store_true",
                     help="pre-fusion per-token dispatch loop (baseline)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching trace serving (Engine.serve)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="--continuous: trace length")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="--continuous: decode slots")
+    ap.add_argument("--policy", default="continuous",
+                    choices=["continuous", "gang"],
+                    help="--continuous: admission policy (gang = static "
+                         "batching on the same executor)")
     args = ap.parse_args()
 
     metered = get_backend(args.softmax).metered
@@ -109,6 +123,33 @@ def main():
         sampler_kw = {"p": args.top_p, "temp": args.temp}
     eng = Engine(model, params, max_new=args.max_new, sampler=args.sampler,
                  eos_id=args.eos_id, **sampler_kw)
+    if args.continuous:
+        from repro.serving.scheduler import random_trace
+        reqs = random_trace(args.requests, cfg.vocab, seed=777,
+                            prompt_lens=(4, args.prompt_len,
+                                         2 * args.prompt_len),
+                            max_new_range=(max(args.max_new // 4, 1),
+                                           args.max_new))
+        eng.serve(reqs, slots=args.slots, policy=args.policy)  # compile
+        rep = eng.serve(reqs, slots=args.slots, policy=args.policy,
+                        report_cost=True)
+        import numpy as np
+        gen = sum(r.max_new for r in reqs)
+        lat = [r.latency_s for r in rep.results]
+        print(f"{args.policy} serving: {len(reqs)} requests / {args.slots} "
+              f"slots, {gen} tokens in {rep.steps} decode steps, "
+              f"{rep.wall_s * 1e3:.1f} ms ({gen / rep.wall_s:.0f} tok/s)")
+        print(f"request latency p50={np.percentile(lat, 50) * 1e3:.1f} ms "
+              f"p99={np.percentile(lat, 99) * 1e3:.1f} ms")
+        for r in rep.results[:3]:
+            cost = (f"  cost: {r.cost.describe()}"
+                    if r.cost is not None and r.cost.cycles else "")
+            print(f"  rid={r.rid} P={r.prompt_len} "
+                  f"new={len(r.tokens) - r.prompt_len} "
+                  f"lat={r.latency_s * 1e3:.1f} ms{cost}")
+        if rep.cost is not None and rep.cost.cycles:
+            print(f"batch softmax AP cost: {rep.cost.describe()}")
+        return
     prompts = corpus.sample(args.batch, args.prompt_len, seed=777)[:, :args.prompt_len]
     mode = "eager" if args.eager else "fused"
     res = eng.generate(prompts, report_cost=True, mode=mode)  # compile + run

@@ -132,36 +132,67 @@ def kv_dequantize(codes, scale, dtype):
     return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
+def cache_write(buf, new, cache_pos, axis: int = 1):
+    """Write ``new`` (one entry per batch row) into ``buf`` at ``cache_pos``.
+
+    ``cache_pos`` scalar: one ``dynamic_update_slice`` shared by the whole
+    batch (the static-batch fast path, unchanged lowering). ``cache_pos``
+    per-row ``[B]``: a one-hot where-write so every slot lands at its own
+    position — the continuous-batching path (serving/scheduler.py). A row
+    whose position is out of range (the scheduler parks free slots at
+    ``cache_len``) writes nothing. Both paths store identical values, so
+    downstream attention is bit-identical across them."""
+    if jnp.ndim(cache_pos) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, new.astype(buf.dtype), cache_pos, axis)
+    assert axis == 1, "per-row writes index the [B, L, ...] layout"
+    l_max = buf.shape[1]
+    hit = jnp.arange(l_max, dtype=jnp.int32)[None, :] == cache_pos[:, None]
+    hit = hit.reshape(hit.shape + (1,) * (buf.ndim - 2))
+    return jnp.where(hit, new.astype(buf.dtype), buf)
+
+
+def valid_upto(l_max: int, cache_pos, window: int = 0):
+    """[B?, l_max] validity mask: positions <= cache_pos (and, when ``window``
+    is set, within the trailing window). Supports scalar or per-row [B]
+    ``cache_pos``; the scalar result broadcasts over the batch."""
+    kv_pos = jnp.arange(l_max, dtype=jnp.int32)[None, :]
+    pos = cache_pos if jnp.ndim(cache_pos) == 0 else cache_pos[:, None]
+    valid = kv_pos <= pos
+    if window:
+        valid &= kv_pos > pos - window
+    return valid
+
+
 def attn_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
                 kind: str = "causal"):
     """Single-token decode. cache: {"k","v"} [B, L, KV, D] (kv_seq-sharded:
     split-KV / flash-decoding style), optionally int8-quantized with
     per-(position, head) scales ({"k_scale","v_scale"} present).
-    cache_pos: scalar int32 current length."""
+    cache_pos: int32 current length — scalar (uniform batch) or [B]
+    (per-slot positions, continuous batching)."""
     b, s, _ = x.shape  # s == 1
     q, k_new, v_new = project_qkv(p, x, cfg, ctx, positions)
     quant = "k_scale" in cache
     if quant:
         kq, ks = kv_quantize(k_new)
         vq, vs = kv_quantize(v_new)
-        k_codes = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, cache_pos, axis=1)
-        v_codes = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, cache_pos, axis=1)
-        k_sc = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, cache_pos, axis=1)
-        v_sc = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, cache_pos, axis=1)
+        k_codes = cache_write(cache["k"], kq, cache_pos)
+        v_codes = cache_write(cache["v"], vq, cache_pos)
+        k_sc = cache_write(cache["k_scale"], ks, cache_pos)
+        v_sc = cache_write(cache["v_scale"], vs, cache_pos)
         k = kv_dequantize(k_codes, k_sc, ctx.dtype)
         v = kv_dequantize(v_codes, v_sc, ctx.dtype)
         new_cache = {"k": k_codes, "v": v_codes, "k_scale": k_sc, "v_scale": v_sc}
     else:
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), cache_pos, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), cache_pos, axis=1)
+        k = cache_write(cache["k"], k_new, cache_pos)
+        v = cache_write(cache["v"], v_new, cache_pos)
         new_cache = {"k": k, "v": v}
     k = ctx.shard(k, ("batch", "kv_seq", None, None))
     v = ctx.shard(v, ("batch", "kv_seq", None, None))
     l_max = k.shape[1]
-    kv_pos = jnp.arange(l_max, dtype=jnp.int32)[None, :]
-    valid = kv_pos <= cache_pos
-    if kind == "window":
-        valid &= kv_pos > cache_pos - cfg.window
+    valid = valid_upto(l_max, cache_pos,
+                       cfg.window if kind == "window" else 0)
     mask = jnp.broadcast_to(valid[:, None, :], (b, 1, l_max))
     out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
     y = dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
@@ -171,20 +202,33 @@ def attn_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
 def attn_decode_ring(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
                      window: int):
     """Ring-buffer decode for sliding-window layers (and full layers when the
-    ring capacity >= max_seq): cache {"k","v":[B,W,KV,D], "pos":[W]}; the write
-    slot is cache_pos % W and validity is derived from stored absolute
-    positions. RoPE is applied at write time (absolute), so relative geometry
-    is preserved across wraps."""
+    ring capacity >= max_seq): cache {"k","v":[B,W,KV,D], "pos":[B,W]}; the
+    write slot is cache_pos % W and validity is derived from stored absolute
+    positions (per batch row — rows at different positions, as under the
+    continuous-batching scheduler, wrap independently). RoPE is applied at
+    write time (absolute), so relative geometry is preserved across wraps."""
     b, s, _ = x.shape  # s == 1
     q, k_new, v_new = project_qkv(p, x, cfg, ctx, positions)
     w_cap = cache["k"].shape[1]
     slot = jax.lax.rem(cache_pos, w_cap)
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
-    pos_buf = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos"], cache_pos[None].astype(cache["pos"].dtype), slot, axis=0)
-    valid = (pos_buf >= 0) & (pos_buf <= cache_pos) & (pos_buf > cache_pos - window)
-    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, w_cap))
+    if jnp.ndim(cache_pos) == 0:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+        pos_buf = jax.lax.dynamic_update_slice(
+            cache["pos"],
+            jnp.full((b, 1), cache_pos, cache["pos"].dtype), (0, slot))
+        pos_col = cache_pos
+    else:
+        k = cache_write(cache["k"], k_new, slot)
+        v = cache_write(cache["v"], v_new, slot)
+        hit = jnp.arange(w_cap, dtype=jnp.int32)[None, :] == slot[:, None]
+        pos_buf = jnp.where(hit, cache_pos[:, None].astype(cache["pos"].dtype),
+                            cache["pos"])
+        pos_col = cache_pos[:, None]
+    valid = (pos_buf >= 0) & (pos_buf <= pos_col) & (pos_buf > pos_col - window)
+    mask = jnp.broadcast_to(valid[:, None, :], (b, 1, w_cap))
     out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
     y = dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
     return y, {"k": k, "v": v, "pos": pos_buf}

@@ -39,7 +39,10 @@ def _attn_cache(make, L, b, c, cfg):
 
 def _ring_cache(make, L, b, w, cfg):
     d = _attn_cache(make, L, b, w, cfg)
-    d["pos"] = make((L, w), jnp.int32)
+    # absolute positions per batch row: rows decode at independent positions
+    # under the continuous-batching scheduler, so each row's ring wraps on
+    # its own clock
+    d["pos"] = make((L, b, w), jnp.int32)
     return d
 
 
@@ -106,8 +109,7 @@ def cache_axes(cfg, batch: int, cache_len: int, enc_len: int = 0):
             return ("stacked", "batch", "kv_seq", None)
         if rank == 4:   # conv cache [L,B,k-1,Cd]
             return ("stacked", "batch", None, "heads")
-        if rank == 2:   # ring pos [L, W]
-            return ("stacked", None)
+        # rank 3: ring pos [L, B, W] — falls through to the generic rule
         return ("stacked", "batch") + (None,) * (rank - 2)
 
     struct = cache_struct(cfg, batch, cache_len, enc_len)

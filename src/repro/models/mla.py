@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.backends import telemetry
 from repro.core.softmax_variants import spec_backend
-from repro.models.attention import attend_chunked
+from repro.models.attention import attend_chunked, cache_write, valid_upto
 from repro.models.layers import Ctx, apply_rope, dense_apply, dense_init, norm_init, norm_apply
 
 
@@ -87,10 +87,8 @@ def mla_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
     r = cfg.kv_lora_rank
     q_nope, q_rope = _queries(p, x, cfg, ctx, positions)
     c_new, kr_new = _latents(p, x, cfg, ctx, positions)
-    c_kv = jax.lax.dynamic_update_slice_in_dim(
-        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), cache_pos, axis=1)
-    k_rope = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], kr_new[:, :, 0].astype(cache["k_rope"].dtype), cache_pos, axis=1)
+    c_kv = cache_write(cache["c_kv"], c_new, cache_pos)
+    k_rope = cache_write(cache["k_rope"], kr_new[:, :, 0], cache_pos)
     c_kv = ctx.shard(c_kv, ("batch", "kv_seq", None))
     k_rope = ctx.shard(k_rope, ("batch", "kv_seq", None))
     # absorb W_uk into q: q_lat [B,1,H,r]
@@ -101,7 +99,7 @@ def mla_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
     scores = scores.astype(jnp.float32) * ((dn + dr) ** -0.5)
     scores = ctx.shard(scores, ("batch", "heads", None, "kv_seq"))
     l_max = c_kv.shape[1]
-    valid = jnp.arange(l_max, dtype=jnp.int32)[None, :] <= cache_pos
+    valid = valid_upto(l_max, cache_pos)
     mask = jnp.broadcast_to(valid[:, None, None, :], scores.shape)
     backend = spec_backend(cfg.softmax)
     telemetry.record_softmax(backend, scores.shape, heads=h)

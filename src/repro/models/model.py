@@ -260,16 +260,23 @@ class Model:
 
     def decode_step(self, p, cache, batch, cache_pos):
         """batch: {"token": [B,1]} (+ "positions" [3,B,1] for mrope).
-        cache_pos: scalar int32 — current filled length.
+        cache_pos: int32 current filled length — a scalar (uniform batch, the
+        static path) or a [B] vector (per-row positions: each serving slot
+        decodes at its own offset under the continuous-batching scheduler).
 
         Scan-compatibility contract (every cache family): the returned cache
         is structurally identical to the input — same pytree, shapes, and
         dtypes — so the fused generation loop can carry it through
         ``jax.lax.scan`` (serving/engine.make_generate_fn) and the jit can
         donate it for in-place updates. ``cache_pos`` may be a traced scalar
-        (the scan's ``base_pos + t``)."""
+        (the scan's ``base_pos + t``) or traced vector (the serve step's
+        slot positions). The encdec family is scalar-only (its positional
+        embedding lookup and cross cache are not slot-addressed)."""
         cfg, ctx = self.cfg, self.ctx
         if cfg.family == "encdec":
+            if jnp.ndim(cache_pos) != 0:
+                raise NotImplementedError(
+                    "encdec decode takes a scalar cache_pos")
             x = self._dec_embed(p, batch["token"], cache_pos)
             positions = cache_pos + jnp.zeros(
                 (batch["token"].shape[0], 1), jnp.int32)
@@ -288,8 +295,11 @@ class Model:
         if cfg.rope_type == "mrope":
             positions = batch["positions"]
         else:
-            positions = cache_pos + jnp.zeros(
-                (batch["token"].shape[0], 1), jnp.int32)
+            b = batch["token"].shape[0]
+            cp = jnp.asarray(cache_pos, jnp.int32)
+            positions = (jnp.broadcast_to(cp[:, None], (b, 1))
+                         if cp.ndim == 1
+                         else cp + jnp.zeros((b, 1), jnp.int32))
         x, new_cache = self._stack_decode(p["stack"], cache, x, positions,
                                           cache_pos)
         return self._head(p, x), new_cache

@@ -168,12 +168,12 @@ def attn_prefill(p, x, cfg, ctx: Ctx, positions, kind: str, cache_len: int):
         w_cap = min(cfg.window, cache_len)
         ring_k = jnp.zeros((b, w_cap) + k.shape[2:], k.dtype)
         ring_v = jnp.zeros_like(ring_k)
-        pos_buf = jnp.full((w_cap,), -1, jnp.int32)
+        pos_buf = jnp.full((b, w_cap), -1, jnp.int32)
         lo = max(0, s - w_cap)
         slots = np.arange(lo, s) % w_cap
         ring_k = ring_k.at[:, slots].set(k[:, lo:s])
         ring_v = ring_v.at[:, slots].set(v[:, lo:s])
-        pos_buf = pos_buf.at[slots].set(jnp.arange(lo, s, dtype=jnp.int32))
+        pos_buf = pos_buf.at[:, slots].set(jnp.arange(lo, s, dtype=jnp.int32))
         cache = {"k": ring_k, "v": ring_v, "pos": pos_buf}
     else:
         if getattr(cfg, "kv_quant", False):

@@ -32,21 +32,34 @@ into the active telemetry accumulator), scaled by the number of generated
 tokens — matching the fused execution, where the scan body traces once and
 runs ``max_new - 1`` times. It costs no device compute and never perturbs the
 jit caches.
+
+Continuous batching: ``Engine.serve(trace)`` replaces the lockstep batch
+with request-level scheduling — a FIFO queue feeding a fixed set of decode
+slots (``serving/scheduler.py``), ONE compiled slot-batched decode step
+(``make_serve_step_fn``: per-slot positions, per-slot PRNG streams, per-slot
+EOS masking), and mid-flight slot refill via a donated stripe insert. Every
+served request's output is bit-identical to generating it alone with
+``mode="eager"``; per-request AP cost shares are attributed through
+``telemetry.SlotCostAttributor`` and sum to the batch meter. See the
+scheduler section of ARCHITECTURE.md for the dataflow.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional
+import time
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.backends import CostReport, telemetry
+from repro.models import kv_cache
 from repro.models.model import Model
 from repro.serving.sampler import make_sampler
+from repro.serving.scheduler import Request, SlotScheduler
 
 
 @dataclasses.dataclass
@@ -56,6 +69,35 @@ class GenerationResult:
     steps: int
     cost: Optional[CostReport] = None   # softmax AP cost of the whole batch
     done: Optional[np.ndarray] = None   # [B] bool, only when eos_id is set
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """One served request: prompt + exactly ``max_new`` generated tokens
+    (pad-filled past an early EOS — bit-identical to the per-request eager
+    row), plus scheduling and cost attribution metadata."""
+    rid: int
+    tokens: np.ndarray          # [prompt_len + max_new]
+    prompt_len: int
+    done: bool                  # EOS hit (False when eos_id unset)
+    admitted_at: float          # serve-clock step time of admission
+    finished_at: float          # serve-clock step time of completion
+    latency_s: float            # wall seconds, queue entry -> completion
+    cost: Optional[CostReport] = None   # this request's attributed share
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Result of one ``Engine.serve`` run over a trace."""
+    results: List[RequestResult]        # ordered by rid
+    steps: int                          # decode steps executed
+    wall_s: float
+    slots: int
+    cache_len: int
+    cost: Optional[CostReport] = None   # batch meter (prefills + all steps)
+
+    def by_rid(self) -> Dict[int, RequestResult]:
+        return {r.rid: r for r in self.results}
 
 
 def _step_inputs(model: Model, nxt, b: int, pos):
@@ -123,6 +165,39 @@ def make_generate_fn(model: Model, sample_fn: Callable, max_new: int,
     return generate_fn
 
 
+def make_serve_step_fn(model: Model, sample_fn: Callable,
+                       eos_id: Optional[int] = None,
+                       pad_id: Optional[int] = None) -> Callable:
+    """Build the continuous-batching decode step: (params, cache, tok [S,1],
+    pos [S], keys [S,2], done [S]) -> (cache, tok [S], keys, done).
+
+    ONE jitted function drives the whole serve loop — slots at arbitrary
+    positions decode together (``decode_step`` takes the per-slot position
+    vector), each slot samples from its own PRNG stream (vmapped key split +
+    sample, so every lane reproduces the per-request eager stream bit-for-
+    bit), and EOS masking runs per slot. Jit with ``donate_argnums=(1,)``.
+    Free slots ride along as dead lanes: their positions are parked at
+    ``cache_len`` (no cache write lands) and their outputs are ignored.
+    """
+    pad = eos_id if pad_id is None else pad_id
+
+    def serve_step(params, cache, tok, pos, keys, done):
+        logits, cache = model.decode_step(params, cache, {"token": tok}, pos)
+
+        def one(row_logits, key):
+            key, sub = jax.random.split(key)
+            t = sample_fn(row_logits[None, :], sub)[0]
+            return t, key
+
+        toks, keys = jax.vmap(one)(logits[:, -1], keys)
+        if eos_id is not None:
+            toks = jnp.where(done, jnp.int32(pad), toks)
+            done = done | (toks == eos_id)
+        return cache, toks, keys, done
+
+    return serve_step
+
+
 class Engine:
     def __init__(self, model: Model, params, max_new: int = 64,
                  sampler: str = "greedy", eos_id: Optional[int] = None,
@@ -142,12 +217,25 @@ class Engine:
         self._fused = jax.jit(
             make_generate_fn(model, self.sample, max_new, eos_id, pad_id),
             donate_argnums=(1,))
+        # continuous-batching executor: the serve step jit is shared across
+        # every serve() call with the same (slots, cache_len); the slot insert
+        # writes a freshly prefilled [1, cache_len] cache into slot s of the
+        # donated [slots, cache_len] buffers (batch axis 1 on every leaf)
+        self._serve_step = jax.jit(
+            make_serve_step_fn(model, self.sample, eos_id, pad_id),
+            donate_argnums=(1,))
+        self._insert_slot = jax.jit(
+            lambda cache, slot_cache, slot: jax.tree.map(
+                lambda c, s: jax.lax.dynamic_update_slice_in_dim(
+                    c, s.astype(c.dtype), slot, axis=1), cache, slot_cache),
+            donate_argnums=(0,))
         self._meter_cache: dict = {}  # (batch shapes, cache_len) -> CostReport
 
     def _decode_inputs(self, nxt, b: int, p: int, t: int):
         return _step_inputs(self.model, nxt, b, p + t)
 
-    def meter_request(self, batch: dict, cache_len: int, cache) -> CostReport:
+    def meter_request(self, batch: dict, cache_len: int, cache,
+                      max_new: Optional[int] = None) -> CostReport:
         """Abstract-trace the request's softmax AP cost (no device compute).
 
         ``cache`` is any decode-ready cache pytree of the right shapes (the
@@ -160,8 +248,9 @@ class Engine:
         skip the trace.
         """
         b, p = batch["tokens"].shape
+        n_new = self.max_new if max_new is None else max_new
         key = (tuple(sorted((k, tuple(v.shape)) for k, v in batch.items())),
-               cache_len)
+               cache_len, n_new)
         if key in self._meter_cache:
             return self._meter_cache[key]
         with telemetry.collect() as acc:
@@ -169,7 +258,7 @@ class Engine:
                 functools.partial(self.model.prefill, cache_len=cache_len),
                 self.params, batch)
         cost = acc.total()
-        decode_steps = self.max_new - 1
+        decode_steps = n_new - 1
         if decode_steps > 0:
             step_in = self._decode_inputs(
                 jnp.zeros((b, 1), jnp.int32), b, p, 0)
@@ -183,41 +272,57 @@ class Engine:
     def generate(self, prompts: np.ndarray, key=None,
                  extra_inputs: Optional[dict] = None,
                  report_cost: bool = False,
-                 mode: str = "fused") -> GenerationResult:
+                 mode: str = "fused",
+                 max_new: Optional[int] = None,
+                 cache_len: Optional[int] = None) -> GenerationResult:
         """prompts: [B, P] int32 (left-pad with a fill token upstream; the
         engine batches uniformly at cache position P). mode: "fused" (one
         dispatch after prefill) or "eager" (the pre-fusion per-token loop —
-        golden reference / benchmark baseline)."""
+        golden reference / benchmark baseline).
+
+        ``max_new`` overrides the engine default for THIS call — eager mode
+        only (the fused scan is compiled for the engine's ``max_new``).
+        ``cache_len`` pins the decode cache length (default: P + max_new);
+        the serve parity harness uses it so the per-request eager reference
+        runs against cache buffers shaped exactly like the serving slots."""
         if mode not in ("fused", "eager"):
             raise ValueError(f"mode must be 'fused' or 'eager', got {mode!r}")
+        n_new = self.max_new if max_new is None else max_new
+        if n_new != self.max_new and mode != "eager":
+            raise ValueError("per-call max_new override is eager-only")
         key = key if key is not None else jax.random.PRNGKey(0)
         b, p = prompts.shape
-        cache_len = p + self.max_new
+        cache_len = p + n_new if cache_len is None else cache_len
+        if cache_len < p + n_new:
+            raise ValueError(f"cache_len {cache_len} < prompt {p} + "
+                             f"max_new {n_new}")
         batch = {"tokens": jnp.asarray(prompts), **(extra_inputs or {})}
         logits, cache = self._prefill(self.params, batch, cache_len=cache_len)
-        cost = (self.meter_request(batch, cache_len, cache)
+        cost = (self.meter_request(batch, cache_len, cache, n_new)
                 if report_cost else None)
         if mode == "fused":
             gen, cache, done = self._fused(self.params, cache, logits, key,
                                            jnp.int32(p))
             gen, done = np.asarray(gen), np.asarray(done)
         else:
-            gen, done = self._generate_eager(cache, logits, key, b, p)
+            gen, done = self._generate_eager(cache, logits, key, b, p, n_new)
         out = np.concatenate([prompts.astype(np.int32), gen], axis=1)
-        return GenerationResult(out, prompt_len=p, steps=self.max_new,
+        return GenerationResult(out, prompt_len=p, steps=n_new,
                                 cost=cost,
                                 done=done if self.eos_id is not None else None)
 
-    def _generate_eager(self, cache, logits, key, b: int, p: int):
+    def _generate_eager(self, cache, logits, key, b: int, p: int,
+                        max_new: Optional[int] = None):
         """Pre-fusion loop: one device dispatch + one host sampling
         round-trip per generated token."""
+        max_new = self.max_new if max_new is None else max_new
         done = jnp.zeros((b,), bool)
         key, sub = jax.random.split(key)
         nxt = self.sample(logits[:, -1], sub)
         if self.eos_id is not None:
             done = done | (nxt == self.eos_id)
         toks = [nxt[:, None]]
-        for t in range(self.max_new - 1):
+        for t in range(max_new - 1):
             step_in = self._decode_inputs(nxt[:, None], b, p, t)
             logits, cache = self._decode(self.params, cache, step_in,
                                          jnp.int32(p + t))
@@ -230,6 +335,150 @@ class Engine:
             toks.append(nxt[:, None])
         return (np.asarray(jnp.concatenate(toks, axis=1)),
                 np.asarray(done))
+
+    # ------------------------------------------------- continuous batching
+
+    def _meter_prefill(self, p_len: int, cache_len: int) -> CostReport:
+        key = ("prefill", p_len, cache_len)
+        if key not in self._meter_cache:
+            with telemetry.collect() as acc:
+                jax.eval_shape(
+                    functools.partial(self.model.prefill, cache_len=cache_len),
+                    self.params, {"tokens": jnp.zeros((1, p_len), jnp.int32)})
+            self._meter_cache[key] = acc.total()
+        return self._meter_cache[key]
+
+    def _meter_serve_step(self, slots: int, cache_len: int) -> CostReport:
+        """Softmax AP cost of ONE slot-batched decode step (static shapes —
+        one abstract trace, memoized)."""
+        key = ("serve_step", slots, cache_len)
+        if key not in self._meter_cache:
+            struct = kv_cache.cache_struct(self.model.cfg, slots, cache_len)
+            with telemetry.collect() as acc:
+                jax.eval_shape(self.model.decode_step, self.params, struct,
+                               {"token": jnp.zeros((slots, 1), jnp.int32)},
+                               jnp.zeros((slots,), jnp.int32))
+            self._meter_cache[key] = acc.total()
+        return self._meter_cache[key]
+
+    def serve(self, requests: Sequence[Request], slots: int = 4,
+              cache_len: Optional[int] = None, policy: str = "continuous",
+              report_cost: bool = False) -> ServeReport:
+        """Continuous-batching serving over a trace of timed arrivals.
+
+        Runs ONE compiled decode step (``make_serve_step_fn``) in a host
+        loop; between steps the scheduler admits arrived requests into free
+        slots — a batch-1 prefill of the new prompt is written into the
+        slot's ``[slots, cache_len]`` cache stripe (``_insert_slot``, cache
+        donated) without touching the compiled step. Each request's output
+        is bit-identical to generating it alone with ``mode="eager"`` and
+        ``key=PRNGKey(request.seed)`` at the same ``cache_len``.
+
+        ``policy="gang"`` admits only whole batches (static batching on the
+        same executor — the serve_bench baseline). With ``report_cost``,
+        ``ServeReport.cost`` is the batch AP meter and each request carries
+        its attributed share (prefill + an even split of every decode step
+        it was active in); the shares sum to the batch meter.
+        """
+        cfg = self.model.cfg
+        if cfg.family == "encdec" or cfg.rope_type == "mrope":
+            raise NotImplementedError(
+                "serve() supports the decoder-only lm families "
+                "(dense/moe/mla/ssm/hybrid) with scalar-position rope")
+        reqs = list(requests)
+        if not reqs:
+            return ServeReport([], 0, 0.0, slots, cache_len or 0, None)
+        need = max(r.prompt_len + r.max_new for r in reqs)
+        C = need if cache_len is None else cache_len
+        if cfg.family == "hybrid":
+            # prefill builds window-capacity rings; the slot buffers must match
+            C = max(C, cfg.window)
+        sched = SlotScheduler(reqs, slots, C, policy=policy)
+        attr = telemetry.SlotCostAttributor() if report_cost else None
+        step_cost = self._meter_serve_step(slots, C) if report_cost else None
+
+        cache = kv_cache.cache_zeros(cfg, slots, C)
+        tok = np.zeros((slots, 1), np.int32)
+        pos = np.full((slots,), C, np.int32)      # parked: no write lands
+        keys = np.zeros((slots, 2), np.uint32)
+        done = np.ones((slots,), bool)
+
+        wall0 = time.perf_counter()
+        queued_wall: Dict[int, float] = {}
+        results: Dict[int, RequestResult] = {}
+        t, steps = 0.0, 0
+
+        def finish(slot: int) -> None:
+            st = sched.release(slot)
+            r = st.request
+            gen = list(st.generated)
+            if len(gen) < r.max_new:   # EOS early-exit: pad like eager rows
+                gen += [int(self.pad_id)] * (r.max_new - len(gen))
+            toks = np.concatenate([np.asarray(r.prompt, np.int32),
+                                   np.asarray(gen, np.int32)])
+            pos[slot] = C
+            results[r.rid] = RequestResult(
+                rid=r.rid, tokens=toks, prompt_len=r.prompt_len,
+                done=st.done, admitted_at=st.admitted_at, finished_at=t,
+                latency_s=time.perf_counter() - queued_wall.get(r.rid, wall0),
+                cost=attr.report_for(r.rid) if attr else None)
+
+        while sched.unfinished:
+            sched.advance(t)
+            for r in sched.queue:
+                queued_wall.setdefault(r.rid, time.perf_counter())
+            for slot, req in sched.admit(t):
+                logits, slot_cache = self._prefill(
+                    self.params, {"tokens": jnp.asarray(req.prompt[None])},
+                    cache_len=C)
+                cache = self._insert_slot(cache, slot_cache, jnp.int32(slot))
+                k = jax.random.PRNGKey(req.seed)
+                k, sub = jax.random.split(k)
+                first = int(self.sample(logits[:, -1], sub)[0])
+                done0 = self.eos_id is not None and first == self.eos_id
+                sched.install(slot, first, done0)
+                tok[slot, 0] = first
+                pos[slot] = req.prompt_len
+                keys[slot] = np.asarray(k, np.uint32)
+                done[slot] = done0
+                if attr is not None:
+                    attr.record_request(
+                        req.rid, self._meter_prefill(req.prompt_len, C))
+                if sched.slot_done(slot):
+                    finish(slot)
+            active = sched.active_slots()
+            if active:
+                cache, toks_d, keys_d, done_d = self._serve_step(
+                    self.params, cache, jnp.asarray(tok), jnp.asarray(pos),
+                    jnp.asarray(keys), jnp.asarray(done))
+                toks_np = np.asarray(toks_d)
+                keys = np.array(keys_d)      # copy: host arrays stay writable
+                done_np = np.array(done_d)
+                steps += 1
+                if attr is not None:
+                    attr.record_step(step_cost, sched.active_requests())
+                for slot in active:
+                    st = sched.slots[slot]
+                    st.generated.append(int(toks_np[slot]))
+                    if self.eos_id is not None:
+                        st.done = bool(done_np[slot])
+                        done[slot] = done_np[slot]
+                    tok[slot, 0] = int(toks_np[slot])
+                    pos[slot] += 1
+                    if sched.slot_done(slot):
+                        finish(slot)
+                t += 1.0
+            else:
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break   # defensive: nothing active, queued, or pending
+                t = max(t + 1.0, float(nxt))
+
+        ordered = [results[r.rid] for r in sorted(reqs, key=lambda q: q.rid)]
+        return ServeReport(
+            results=ordered, steps=steps,
+            wall_s=time.perf_counter() - wall0, slots=slots, cache_len=C,
+            cost=attr.total() if attr else None)
 
 
 def make_serve_step(model: Model, kind: str, max_new: int = 64,

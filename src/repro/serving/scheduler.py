@@ -1,0 +1,209 @@
+"""Continuous-batching request scheduler: queue, slot allocator, admission.
+
+The serving engine executes a FIXED number of decode slots — one compiled
+decode step over ``[slots]`` rows against ``[slots, cache_len]`` cache
+buffers — while requests arrive, finish, and are replaced at arbitrary
+times. This module owns everything about that process that is *not* device
+compute:
+
+  * the arrival stream (``Request.arrival`` in decode-step time units),
+  * the FIFO admission queue,
+  * the slot allocator (a finished request frees its slot; the next queued
+    request is prefetched into it mid-flight),
+  * per-slot bookkeeping (request id, position, tokens generated, done).
+
+The scheduler is pure Python over plain data — no jax — so its invariants
+(no slot double-assignment, FIFO fairness, every admitted request completes)
+are directly checkable by the hypothesis property suite
+(``tests/test_scheduler_properties.py``) without touching a model.
+
+Admission policies:
+
+  ``continuous``  admit the queue head whenever ANY slot is free — the
+                  continuous-batching mode; mixed-length traffic wastes no
+                  slot-steps.
+  ``gang``        admit only when ALL slots are free, draining whole batches
+                  — static batching reimplemented as a degenerate trace of
+                  the same executor (the serve_bench baseline; with uniform
+                  arrivals and lengths it degenerates to ``Engine.generate``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request in a serving trace.
+
+    ``arrival`` is in decode-step time units (the serve loop's clock): the
+    request becomes visible to the scheduler at the first step whose time
+    ``t >= arrival``. ``seed`` names the request's private PRNG stream —
+    per-request eager generation with ``key=PRNGKey(seed)`` is the parity
+    reference for its output.
+    """
+
+    rid: int
+    prompt: np.ndarray            # [P] int32
+    max_new: int
+    arrival: float = 0.0
+    seed: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.prompt).shape[-1])
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Bookkeeping for one occupied slot."""
+
+    request: Request
+    pos: int                      # next cache write position
+    generated: List[int]          # tokens emitted so far (incl. first)
+    done: bool = False            # EOS hit (emissions are pad from now on)
+    admitted_at: float = 0.0
+
+
+class SlotScheduler:
+    """FIFO queue + slot allocator over a fixed slot count.
+
+    Driven by the engine loop as::
+
+        sched.advance(t)                       # surface arrivals
+        for slot, req in sched.admit(t): ...   # prefill + install
+        ... run one decode step ...
+        sched.release(slot)                    # on completion
+
+    and by the property tests with a fake clock and no engine at all.
+    """
+
+    def __init__(self, requests: Sequence[Request], n_slots: int,
+                 cache_len: int, policy: str = "continuous"):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        if policy not in ("continuous", "gang"):
+            raise ValueError(f"unknown admission policy {policy!r}")
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.policy = policy
+        for r in requests:
+            if r.max_new < 1:
+                raise ValueError(f"request {r.rid}: max_new must be >= 1")
+            if r.prompt_len + r.max_new > cache_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt_len {r.prompt_len} + max_new "
+                    f"{r.max_new} exceeds cache_len {cache_len}")
+        ids = [r.rid for r in requests]
+        if len(set(ids)) != len(ids):
+            raise ValueError("duplicate request ids in trace")
+        # stable sort: ties on arrival keep submission order (FIFO)
+        self._pending = deque(sorted(requests, key=lambda r: r.arrival))
+        self.queue: deque = deque()
+        self.slots: List[Optional[SlotState]] = [None] * n_slots
+        self._free: deque = deque(range(n_slots))
+        self.admitted_order: List[int] = []   # rids, in admission order
+        self.finished: Dict[int, SlotState] = {}
+
+    # ------------------------------------------------------------- time flow
+
+    def advance(self, t: float) -> None:
+        """Move requests whose arrival time has come into the FIFO queue."""
+        while self._pending and self._pending[0].arrival <= t:
+            self.queue.append(self._pending.popleft())
+
+    def next_arrival(self) -> Optional[float]:
+        return self._pending[0].arrival if self._pending else None
+
+    # ------------------------------------------------------------- admission
+
+    def admit(self, t: float = 0.0) -> Iterator[Tuple[int, Request]]:
+        """Yield (slot, request) admissions under the active policy. The
+        caller must install each admission (prefill + first token) and set
+        the slot state via :meth:`install` before the next decode step.
+
+        The caller MAY release a slot mid-iteration (a request whose budget
+        is spent at admission, e.g. ``max_new == 1`` or first-token EOS).
+        Under ``continuous`` the freed slot is immediately reusable; under
+        ``gang`` the round is capped at ``n_slots`` admissions, so a
+        mid-round release never lets a fresh request join the still-running
+        batch — static batching stays static."""
+        budget = None
+        if self.policy == "gang":
+            if any(s is not None for s in self.slots):
+                return
+            budget = self.n_slots
+        while self._free and self.queue and budget != 0:
+            if budget is not None:
+                budget -= 1
+            slot = self._free.popleft()
+            req = self.queue.popleft()
+            assert self.slots[slot] is None, "slot double-assignment"
+            # reserve: installed by the caller, but mark occupied NOW so a
+            # nested admit cannot hand the slot out twice
+            self.slots[slot] = SlotState(request=req, pos=req.prompt_len,
+                                         generated=[], admitted_at=t)
+            self.admitted_order.append(req.rid)
+            yield slot, req
+
+    def install(self, slot: int, first_token: int, done: bool) -> None:
+        """Record the admission-time first token (sampled from the prefill
+        logits) for the reserved slot."""
+        st = self.slots[slot]
+        assert st is not None and not st.generated
+        st.generated.append(int(first_token))
+        st.done = bool(done)
+
+    # ------------------------------------------------------------ slot state
+
+    def release(self, slot: int) -> SlotState:
+        st = self.slots[slot]
+        assert st is not None, f"release of free slot {slot}"
+        self.slots[slot] = None
+        self._free.append(slot)
+        self.finished[st.request.rid] = st
+        return st
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def active_requests(self) -> List[int]:
+        return [s.request.rid for s in self.slots if s is not None]
+
+    @property
+    def unfinished(self) -> bool:
+        return bool(self._pending or self.queue
+                    or any(s is not None for s in self.slots))
+
+    def slot_done(self, slot: int) -> bool:
+        """A slot is complete when its request's token budget is spent or its
+        EOS flag is set (remaining emissions would all be pad)."""
+        st = self.slots[slot]
+        return st is not None and (
+            len(st.generated) >= st.request.max_new or st.done)
+
+
+def random_trace(n_requests: int, vocab: int, *, seed: int = 0,
+                 prompt_lens: Sequence[int] = (4, 8, 16, 32),
+                 max_new_range: Tuple[int, int] = (8, 64),
+                 arrival_spacing: float = 2.0) -> List[Request]:
+    """A reproducible mixed-length trace: staggered arrivals, prompt lengths
+    drawn from ``prompt_lens`` (a small set, so serving compiles a bounded
+    number of prefill shapes), per-request ``max_new`` uniform over
+    ``max_new_range``. Used by the acceptance test and serve_bench."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n_requests):
+        p = int(rng.choice(list(prompt_lens)))
+        reqs.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, vocab, size=(p,), dtype=np.int32),
+            max_new=int(rng.integers(max_new_range[0], max_new_range[1] + 1)),
+            arrival=float(rng.integers(0, int(arrival_spacing * n_requests) + 1)),
+            seed=1000 + rid))
+    return reqs

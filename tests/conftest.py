@@ -6,3 +6,20 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running (subprocess dry-run)")
+    _register_hypothesis_profiles()
+
+def _register_hypothesis_profiles():
+    # deterministic hypothesis runs by default: fixed derivation seed, no
+    # deadline (CI machines jitter), examples printed as reproducible blobs.
+    # The scheduler-fuzz CI job opts into a bigger randomized budget with
+    # HYPOTHESIS_PROFILE=ci-fuzz; its falsifying examples land in the
+    # .hypothesis example database (uploaded as a CI artifact).
+    try:
+        from hypothesis import settings
+    except ImportError:     # hypothesis is a soft dep (requirements-dev.txt)
+        return
+    settings.register_profile("repro", deadline=None, derandomize=True,
+                              print_blob=True)
+    settings.register_profile("ci-fuzz", deadline=None, derandomize=False,
+                              max_examples=200, print_blob=True)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "repro"))

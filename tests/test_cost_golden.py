@@ -1,0 +1,90 @@
+"""Golden pins for the Table-II AP cost model (``ap/cost_model.py``).
+
+Paper figures (latency/energy/EDP ratios, the serve cost telemetry, the
+roofline tables) all flow from these constants and formulas. Every value
+below is a frozen literal — a refactor that shifts any of them changes
+published numbers and must update this file *consciously*.
+"""
+
+import pytest
+
+from repro.ap import cost_model as cm
+from repro.backends import get_backend
+from repro.core.precision import BEST, PrecisionConfig
+
+
+def test_table2_elementary_op_cycles():
+    """Table II formulas at the paper's bit-widths M = 4 / 6 / 8."""
+    assert {m: cm.cycles_add(m) for m in (4, 6, 8)} == {4: 45, 6: 67, 8: 89}
+    assert {m: cm.cycles_mult(m) for m in (4, 6, 8)} == \
+        {4: 144, 6: 312, 8: 544}
+    # reduction grows with log2(L/2): +8 cycles per doubling stage
+    assert cm.cycles_reduction(6, 64) == 101
+    assert cm.cycles_reduction(6, 1024) == 133
+    assert cm.cycles_reduction(6, 2048) - cm.cycles_reduction(6, 1024) == 8
+
+
+def test_hardware_constants_pinned():
+    """16 nm calibration anchors (Table VI) and the Fig.-4 column budget."""
+    assert cm.E_CELL_FJ == 0.85
+    assert cm.CELL_AREA_UM2 == 0.121
+    assert cm.FREQ_HZ == 1.0e9
+    assert cm.row_bits_for(BEST) == 81
+    assert BEST == PrecisionConfig(M=6, N=16)
+
+
+def test_softmax_cycle_breakdown_golden():
+    """The full Fig.-5 step schedule for the paper's BEST point (M=6, N=16)
+    at seq_len 64 — every per-step cycle count frozen."""
+    assert cm.softmax_cycle_breakdown(BEST, 64) == {
+        "s1_2_max_sub": 67,
+        "s3_barrett_mul": 312,
+        "s4_shift_2M": 1,
+        "s5_mul_vln2": 144,
+        "s6_sub_corr": 69,
+        "s7_add_vb": 67,
+        "s8_square": 312,
+        "s9_add_vc": 133,
+        "s10_varshift_q": 143,
+        "s11_reduction": 321,
+        "s12_division": 312,
+        "s13_writeback": 12,
+    }
+    assert sum(cm.softmax_cycle_breakdown(BEST, 64).values()) == 1893
+    assert sum(cm.softmax_cycle_breakdown(
+        PrecisionConfig(M=8, N=16), 1024).values()) == 2777
+    # in-CAM restoring division variant: P_out quotient bits over the
+    # sum-accumulator width
+    assert cm.cycles_division_incam(
+        BEST.P_out, BEST.table1_widths()["sum"]) == 5424
+
+
+def test_softmax_vector_cost_golden():
+    cycles, latency, energy, design = cm.softmax_vector_cost(BEST, 64)
+    assert cycles == 1893
+    assert latency == pytest.approx(1.893e-06)
+    assert energy == pytest.approx(4.1706576e-09)
+    assert (design.rows, design.row_bits) == (32, 81)
+
+
+def test_sequential_rows_times_cycles_schedule():
+    """The PR-2 execution schedule: vectors mapped to one head-AP run
+    SEQUENTIALLY (latency multiplies by vectors-per-AP), distinct head-APs
+    run in parallel (energy sums over every vector, latency does not)."""
+    out = cm.attention_softmax_cost(BEST, seq_len=64, batch=2, n_heads=4,
+                                    n_rows=1)
+    assert out["cycles_per_vector"] == 1893
+    # batch * n_rows = 2 vectors per AP, sequential: 2 x 1.893us
+    assert out["latency_s"] == pytest.approx(3.786e-06)
+    # energy over all heads x vectors: 4 * 2 * e_v
+    assert out["energy_j"] == pytest.approx(3.33652608e-08)
+    assert out["area_mm2"] == pytest.approx(0.001254528)
+    assert out["word_ops"] == 4 * 2 * 64 * 13
+
+    # the backend meter exposes the same schedule to the serving telemetry:
+    # 8 vectors over 4 head-APs -> 2 sequential rounds on the critical path
+    rep = get_backend("int", BEST).meter((2, 4, 1, 64), heads=4)
+    assert rep.vectors == 8
+    assert rep.cycles == 2 * 1893
+    assert rep.latency_s == pytest.approx(2 * 1.893e-06)
+    assert rep.energy_j == pytest.approx(8 * 4.1706576e-09)

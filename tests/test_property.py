@@ -14,6 +14,9 @@ from repro.core import BEST, PrecisionConfig, int_softmax, saturating_sum
 from repro.core.int_softmax import fixedpoint_div, int_exp_codes
 from repro.core.quantization import affine_dequantize, affine_qparams, affine_quantize
 
+# determinism (fixed derivation seed, no deadline) comes from the "repro"
+# hypothesis profile registered in conftest.py; per-test settings only cap
+# the example budget
 SETTINGS = dict(max_examples=25, deadline=None)
 
 

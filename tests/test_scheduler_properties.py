@@ -1,0 +1,194 @@
+"""Hypothesis property tests for the continuous-batching scheduler.
+
+The scheduler is pure Python over plain data, so the serving invariants are
+checked here against random arrival/length traces WITHOUT any model or jax
+in the loop — the same bookkeeping the engine drives, driven by a fake
+executor that completes slots on the schedule the trace implies:
+
+  * a slot is never double-assigned (occupied until released),
+  * admission is FIFO-fair: requests enter service in (arrival, submission)
+    order,
+  * every submitted request is admitted and completes,
+  * per-request cost attribution sums to the batch CostReport.
+
+The CI ``scheduler-fuzz`` job runs this file under the randomized
+``ci-fuzz`` hypothesis profile (see conftest.py) with a bigger example
+budget; falsifying examples persist in the ``.hypothesis`` database, which
+the job uploads as an artifact.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (see requirements-dev.txt); "
+           "property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.backends.base import ZERO_COST, CostReport  # noqa: E402
+from repro.backends.telemetry import SlotCostAttributor  # noqa: E402
+from repro.serving.scheduler import Request, SlotScheduler  # noqa: E402
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+CACHE_LEN = 64
+
+
+@st.composite
+def traces(draw, max_requests=12):
+    n = draw(st.integers(1, max_requests))
+    reqs = []
+    for rid in range(n):
+        p = draw(st.integers(1, 8))
+        reqs.append(Request(
+            rid=rid,
+            prompt=np.zeros((p,), np.int32),
+            max_new=draw(st.integers(1, CACHE_LEN - p)),
+            arrival=float(draw(st.integers(0, 3 * n))),
+            seed=rid))
+    return reqs
+
+
+def drive(reqs, n_slots, policy="continuous", step_cost=None):
+    """Run the scheduler loop with a fake executor: every active slot emits
+    one token per step (token value irrelevant here), EOS never fires.
+    Returns (scheduler, attributor, steps_executed)."""
+    sched = SlotScheduler(reqs, n_slots, CACHE_LEN, policy=policy)
+    attr = SlotCostAttributor()
+    steps = 0
+    guard = 0
+    while sched.unfinished:
+        guard += 1
+        assert guard < 10_000, "scheduler loop did not terminate"
+        sched.advance(float(steps))
+        for slot, req in sched.admit():
+            sched.install(slot, first_token=0, done=False)
+            if step_cost is not None:
+                attr.record_request(req.rid, step_cost.scaled(2))  # "prefill"
+            if sched.slot_done(slot):
+                sched.release(slot)
+        active = sched.active_slots()
+        if active:
+            if step_cost is not None:
+                attr.record_step(step_cost, sched.active_requests())
+            for slot in active:
+                sched.slots[slot].generated.append(0)
+                if sched.slot_done(slot):
+                    sched.release(slot)
+        steps += 1
+    return sched, attr, steps
+
+
+@given(traces(), st.integers(1, 4), st.sampled_from(["continuous", "gang"]))
+@settings(**SETTINGS)
+def test_no_slot_double_assignment_and_all_complete(reqs, n_slots, policy):
+    sched, _, _ = drive(reqs, n_slots, policy)
+    assert sorted(sched.finished) == sorted(r.rid for r in reqs)
+    # every request generated exactly its budget
+    for r in reqs:
+        assert len(sched.finished[r.rid].generated) == r.max_new
+    # all slots free at the end; free list holds each slot exactly once
+    assert all(s is None for s in sched.slots)
+    assert sorted(sched._free) == list(range(n_slots))
+
+
+@given(traces(), st.integers(1, 4))
+@settings(**SETTINGS)
+def test_fifo_admission_fairness(reqs, n_slots):
+    sched, _, _ = drive(reqs, n_slots, "continuous")
+    # service order == (arrival, submission) order: stable sort of the trace
+    expected = [r.rid for r in sorted(reqs, key=lambda r: r.arrival)]
+    assert sched.admitted_order == expected
+
+
+@given(traces(), st.integers(1, 4))
+@settings(**SETTINGS)
+def test_cost_attribution_sums_to_batch_meter(reqs, n_slots):
+    unit = CostReport(backend="int_jax", vectors=48, cycles=1893 * 48,
+                      latency_s=1.893e-06 * 48, energy_j=4.17e-09 * 48)
+    sched, attr, _ = drive(reqs, n_slots, step_cost=unit)
+    total = attr.total()
+    summed = ZERO_COST
+    for r in reqs:
+        summed = summed + attr.report_for(r.rid)
+    assert math.isclose(summed.cycles, total.cycles, rel_tol=1e-9)
+    assert math.isclose(summed.energy_j, total.energy_j, rel_tol=1e-9)
+    assert math.isclose(summed.latency_s, total.latency_s, rel_tol=1e-9)
+    assert math.isclose(summed.vectors, total.vectors, rel_tol=1e-9)
+
+
+@given(traces(max_requests=8), st.integers(1, 3))
+@settings(**SETTINGS)
+def test_gang_policy_never_mixes_batches(reqs, n_slots):
+    """Static batching as a degenerate trace: a request admitted while any
+    other is still running must have entered in the same admission round —
+    even when a slot frees MID-round (max_new == 1 released inside the
+    admit loop, as Engine.serve does), the freed slot must not be handed to
+    a fresh request joining the running batch."""
+    sched = SlotScheduler(reqs, n_slots, CACHE_LEN, policy="gang")
+    rounds = []
+    round_of = {}
+    steps = 0
+    guard = 0
+    while sched.unfinished:
+        guard += 1
+        assert guard < 10_000
+        sched.advance(float(steps))
+        batch = []
+        for slot, req in sched.admit():
+            sched.install(slot, 0, False)
+            batch.append(req.rid)
+            if sched.slot_done(slot):    # mid-round release, like serve()
+                sched.release(slot)
+        if batch:
+            # gang admission only happens when every slot was free
+            round_of.update({rid: len(rounds) for rid in batch})
+            rounds.append(batch)
+        # every request in flight belongs to ONE admission round
+        active_rounds = {round_of[rid] for rid in sched.active_requests()}
+        assert len(active_rounds) <= 1, (rounds, sched.active_requests())
+        for slot in sched.active_slots():
+            sched.slots[slot].generated.append(0)
+            if sched.slot_done(slot):
+                sched.release(slot)
+        steps += 1
+    assert sorted(r for b in rounds for r in b) == [r.rid for r in reqs]
+    assert all(len(b) <= n_slots for b in rounds)
+
+
+def test_gang_mid_round_release_does_not_admit_into_running_batch():
+    """Regression: slots=2, A(max_new=1) released inside the admission
+    round, B long, C queued — C must NOT be admitted into B's batch."""
+    reqs = [Request(0, np.zeros(2, np.int32), max_new=1),
+            Request(1, np.zeros(2, np.int32), max_new=5),
+            Request(2, np.zeros(2, np.int32), max_new=5)]
+    sched = SlotScheduler(reqs, 2, CACHE_LEN, policy="gang")
+    sched.advance(0.0)
+    first_round = []
+    for slot, req in sched.admit():
+        sched.install(slot, 0, False)
+        first_round.append(req.rid)
+        if sched.slot_done(slot):
+            sched.release(slot)
+    assert first_round == [0, 1]
+    assert sched.active_requests() == [1]
+    # B still running: the next admission round must be empty
+    assert list(sched.admit()) == []
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        SlotScheduler([Request(0, np.zeros(4, np.int32), CACHE_LEN)], 2,
+                      CACHE_LEN)  # prompt + max_new > cache_len
+    with pytest.raises(ValueError):
+        SlotScheduler([Request(0, np.zeros(4, np.int32), 0)], 2, CACHE_LEN)
+    with pytest.raises(ValueError):
+        SlotScheduler([Request(0, np.zeros(4, np.int32), 1),
+                       Request(0, np.zeros(4, np.int32), 1)], 2, CACHE_LEN)
+    with pytest.raises(ValueError):
+        SlotScheduler([], 0, CACHE_LEN)
+    with pytest.raises(ValueError):
+        SlotScheduler([], 2, CACHE_LEN, policy="lifo")
