@@ -5,12 +5,15 @@ baseline; constants in repro/ap/gpu_model.py)."""
 
 from __future__ import annotations
 
-from benchmarks.common import Row
 from repro.ap.pipeline import (
-    BATCHES, SEQ_LENS, compare_point, energy_per_cell_cycle_pj,
-    energy_per_op_pj, fig1_softmax_fraction, summarize,
+    SEQ_LENS,
+    compare_point,
+    energy_per_cell_cycle_pj,
+    energy_per_op_pj,
+    fig1_softmax_fraction,
+    summarize,
 )
-from repro.core.precision import BEST, PrecisionConfig
+from repro.core.precision import BEST
 
 
 def fig6_energy() -> list:
@@ -65,7 +68,7 @@ def table6_energy_per_op() -> list:
     rows.append(("table6.energy_per_word_op_pJ", 0.0, f"{e_elem:.3e}"))
     rows.append(("table6.energy_per_cell_cycle_pJ", 0.0,
                  f"{energy_per_cell_cycle_pj():.2e}"
-                 f"(paper:5.88e-3;consmax:0.2;softermax:0.7)"))
+                 "(paper:5.88e-3;consmax:0.2;softermax:0.7)"))
     return rows
 
 

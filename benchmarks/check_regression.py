@@ -1,0 +1,120 @@
+"""Serve-bench regression gate: fresh BENCH_serve.json vs the committed one.
+
+CI runs ``serve_bench.py`` into a fresh file and compares it against the
+baseline committed at the repo root, failing on a >``--max-regression``
+(default 20%) drop. Metrics fall into two classes, gated differently so the
+job is meaningful on shared CI runners:
+
+  * **deterministic** metrics (prefill-token reduction — pure token
+    accounting, no clock): any relative drop beyond the threshold fails;
+  * **throughput-derived** metrics (tokens/sec, speedup ratios — wall-clock
+    on a noisy 2-core shared runner, against a baseline usually recorded on
+    different hardware): always reported; a drop beyond the threshold fails
+    only when the metric ALSO falls below its explicit floor (1.0 for the
+    speedup ratios — i.e. the scheduling/sharing win actually vanished,
+    which is the regression this gate exists to catch). Absolute tokens/sec
+    have no meaningful cross-machine floor and are informational unless
+    ``--gate-absolute`` is passed (useful once the committed baseline comes
+    from the same runner fleet).
+
+Improvements never fail. Metrics present in only one file are reported and
+skipped (a new baseline section gates only once it is committed).
+
+    python benchmarks/check_regression.py --baseline BENCH_serve.json \
+        --fresh BENCH_serve.fresh.json --max-regression 0.20
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metric name -> (kind, floor). Kinds: "det" (deterministic), "ratio"
+# (dimensionless speedup with an explicit floor), "abs" (machine-dependent
+# absolute throughput).
+METRICS = {
+    "gang.tokens_per_s": ("abs", None),
+    "continuous.tokens_per_s": ("abs", None),
+    "continuous_vs_static.speedup": ("ratio", 1.0),
+    "prefix_share.private.tokens_per_s": ("abs", None),
+    "prefix_share.shared.tokens_per_s": ("abs", None),
+    "prefix_share.speedup": ("ratio", 1.0),
+    "prefix_share.prefill_reduction": ("det", None),
+}
+
+
+def _metrics(report: dict) -> dict:
+    """Flatten the gated metrics (higher is better for every one of them)."""
+    out = {}
+    r = report.get("results", {})
+    for policy in ("gang", "continuous"):
+        if policy in r:
+            out[f"{policy}.tokens_per_s"] = r[policy]["tokens_per_s"]
+    if "speedup_tps" in r:
+        out["continuous_vs_static.speedup"] = r["speedup_tps"]
+    ps = report.get("prefix_share", {}).get("results", {})
+    for mode in ("private", "shared"):
+        if mode in ps:
+            out[f"prefix_share.{mode}.tokens_per_s"] = ps[mode]["tokens_per_s"]
+    if "speedup_tps" in ps:
+        out["prefix_share.speedup"] = ps["speedup_tps"]
+    if "prefill_reduction" in ps:
+        out["prefix_share.prefill_reduction"] = ps["prefill_reduction"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_serve.json")
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--max-regression", type=float, default=0.20,
+                    help="relative drop that counts as a regression")
+    ap.add_argument("--gate-absolute", action="store_true",
+                    help="also fail on absolute tokens/sec drops (only "
+                         "meaningful when the committed baseline comes from "
+                         "the same runner class)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = _metrics(json.load(f))
+    with open(args.fresh) as f:
+        fresh = _metrics(json.load(f))
+
+    failures = []
+    for name in sorted(base):
+        if name not in fresh:
+            print(f"SKIP {name}: missing from fresh run", file=sys.stderr)
+            continue
+        b, fr = base[name], fresh[name]
+        kind, floor = METRICS.get(name, ("det", None))
+        if b <= 0:
+            continue
+        change = fr / b - 1.0
+        dropped = fr < (1.0 - args.max_regression) * b
+        if kind == "det":
+            failed = dropped
+        elif kind == "ratio":
+            # a noisy wall-clock ratio: fail only when the drop is beyond
+            # tolerance AND the win itself is gone (below its floor)
+            failed = dropped and fr < floor
+        else:   # "abs"
+            failed = dropped and args.gate_absolute
+        status = "REGRESSION" if failed else ("drop" if dropped else "ok")
+        if failed:
+            failures.append(name)
+        print(f"{status:10s} {name:40s} {b:10.3f} -> {fr:10.3f} "
+              f"({change:+.1%})")
+    for name in sorted(set(fresh) - set(base)):
+        print(f"NEW        {name:40s} {'':10s} -> {fresh[name]:10.3f}")
+
+    if failures:
+        raise SystemExit(
+            f"serve bench regressed beyond {args.max_regression:.0%} on: "
+            + ", ".join(failures))
+    print(f"serve bench within gates ({len(base)} metrics, "
+          f"{args.max_regression:.0%} tolerance)")
+
+
+if __name__ == "__main__":
+    main()

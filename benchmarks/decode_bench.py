@@ -169,7 +169,7 @@ def main():
 
     bad = [r for r in report["results"] if not r["greedy_match"]]
     if bad:
-        raise SystemExit(f"greedy fused/eager mismatch: "
+        raise SystemExit("greedy fused/eager mismatch: "
                          f"{[(r['family'], r['backend']) for r in bad]}")
     if args.min_speedup > 0:
         slow = [r for r in report["results"]

@@ -10,8 +10,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Row, time_fn
-from repro.core import BEST, fp_softmax, int_softmax
+from benchmarks.common import time_fn
+from repro.core import BEST, fp_softmax
 from repro.kernels.int_attention.ops import int_attention_pallas
 from repro.kernels.int_attention.ref import int_attention_ref
 from repro.kernels.int_softmax.ops import int_softmax_pallas

@@ -19,7 +19,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import Row, time_fn
+from benchmarks.common import time_fn
 from repro.core import PrecisionConfig, fp_softmax, int_softmax
 
 SEQ = 2048

@@ -51,7 +51,7 @@ def markdown(mesh: str = "single") -> str:
     for c in load(mesh):
         if "skipped" in c:
             lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
-                         f"skipped | — | — |")
+                         "skipped | — | — |")
             continue
         r = c["roofline"]
         u = c.get("useful_flops_ratio")

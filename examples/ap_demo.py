@@ -7,10 +7,9 @@ and the energy/latency/EDP story (Figs. 6-8 in miniature).
 import numpy as np
 import jax.numpy as jnp
 
-from repro.ap.cost_model import softmax_cycle_breakdown
 from repro.ap.dataflow import ap_softmax_vector
 from repro.ap.isa import CAM, lut_add
-from repro.ap.pipeline import compare_point, summarize
+from repro.ap.pipeline import summarize
 from repro.core.precision import BEST
 from repro.core.quantization import quantize_stable_scores
 

@@ -6,7 +6,7 @@
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import BEST, PrecisionConfig, fp_softmax, int_softmax
+from repro.core import BEST, fp_softmax, int_softmax
 from repro.ap.dataflow import ap_softmax_rows
 from repro.ap.pipeline import compare_point
 from repro.core.quantization import quantize_stable_scores

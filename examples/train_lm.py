@@ -10,16 +10,14 @@ local scale).
 """
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig
-from repro.core.precision import BEST, PrecisionConfig
+from repro.core.precision import PrecisionConfig
 from repro.core.softmax_variants import SoftmaxSpec
 from repro.data.synthetic import SyntheticCorpus
 from repro.models import build_model

@@ -73,7 +73,8 @@ class APSim:
         self.fields[dst] = self.fields[dst] + const
 
     def mul_const(self, dst: str, const: int, step: str, cycles: int = None) -> None:
-        self._charge(step, cm.cycles_const_mult(self.widths[dst], const) if cycles is None else cycles)
+        self._charge(step, cm.cycles_const_mult(self.widths[dst], const)
+                     if cycles is None else cycles)
         self.fields[dst] = self.fields[dst] * const
 
     def square(self, dst: str, src: str, step: str, cycles: int = None) -> None:
@@ -87,7 +88,8 @@ class APSim:
     def shift_var(self, dst: str, amounts: str, q_max: int, step: str,
                   left_bias: int = 0, cycles: int = None) -> None:
         """dst <- dst << (left_bias - q) per word (arithmetic both ways)."""
-        self._charge(step, cm.cycles_varshift(self.widths[dst], q_max) if cycles is None else cycles)
+        self._charge(step, cm.cycles_varshift(self.widths[dst], q_max)
+                     if cycles is None else cycles)
         q = self.fields[amounts]
         sh = left_bias - q
         v = self.fields[dst]
@@ -110,7 +112,8 @@ class APSim:
         """2D-AP row-pair tree reduction with a saturating accumulator —
         the hardware realization of core.int_softmax.saturating_sum.
         Returns one total per row: ``[n_rows]`` int64."""
-        self._charge(step, cm.cycles_reduction(self.widths[src], self.n_words) if cycles is None else cycles)
+        self._charge(step, cm.cycles_reduction(self.widths[src], self.n_words)
+                     if cycles is None else cycles)
         v = self.fields[src].copy()
         length = v.shape[-1]
         n = 1 if length == 0 else 1 << (length - 1).bit_length()

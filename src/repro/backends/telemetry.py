@@ -122,6 +122,8 @@ class SlotCostAttributor:
     def __init__(self):
         self._by_request: dict = {}
         self._batch_total = ZERO_COST
+        self._savings: dict = {}
+        self._shared_tokens: dict = {}
 
     def record_step(self, step_report: CostReport, active_requests) -> None:
         """Charge one executed decode step to the requests that rode in it."""
@@ -137,6 +139,35 @@ class SlotCostAttributor:
         """Charge a request-local phase (e.g. its prefill) to one request."""
         self._batch_total = self._batch_total + report
         self._by_request[rid] = self._by_request.get(rid, ZERO_COST) + report
+
+    def record_shared_prefill(self, rid, executed: CostReport,
+                              saved: CostReport, shared_tokens: int) -> None:
+        """Charge a prefix-shared admission for the tail prefill it actually
+        executed, and track the amortized prefix cost separately.
+
+        ``executed`` is the metered tail-only prefill; ``saved`` is what the
+        shared prefix would have cost to prefill standalone (the work the
+        block reuse skipped). Only ``executed`` enters the batch meter —
+        nobody ran the saved trace — so the conservation invariant
+        (per-request shares sum to the batch total) is untouched; the
+        savings are reported on the side via :meth:`savings_for`."""
+        self.record_request(rid, executed)
+        self._savings[rid] = self._savings.get(rid, ZERO_COST) + saved
+        self._shared_tokens[rid] = (self._shared_tokens.get(rid, 0)
+                                    + int(shared_tokens))
+
+    def savings_for(self, rid) -> CostReport:
+        """AP cost the request avoided by reusing shared prefix blocks."""
+        return self._savings.get(rid, ZERO_COST)
+
+    def total_savings(self) -> CostReport:
+        total = ZERO_COST
+        for r in self._savings.values():
+            total = total + r
+        return total
+
+    def shared_tokens_for(self, rid) -> int:
+        return self._shared_tokens.get(rid, 0)
 
     def report_for(self, rid) -> CostReport:
         return self._by_request.get(rid, ZERO_COST)

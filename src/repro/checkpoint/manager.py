@@ -9,7 +9,6 @@ restart-from-preemption a one-liner in the launcher.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional, Tuple
 
 from repro.checkpoint import checkpointer as ckpt

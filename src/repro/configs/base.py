@@ -9,7 +9,6 @@ this package instantiate it with the exact published dimensions.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 from repro.core.softmax_variants import SoftmaxSpec
@@ -161,7 +160,6 @@ class ModelConfig:
         """Activated params per token (differs from total only for MoE)."""
         if self.family != "moe":
             return self.param_count()
-        d = self.d_model
         dense_like = dataclasses.replace(
             self, family="dense", n_experts=0,
             d_ff=self.d_ff_expert * (self.moe_top_k + self.n_shared_experts))

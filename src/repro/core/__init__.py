@@ -10,7 +10,9 @@ from repro.core.int_softmax import (
     int_softmax_ste,
     saturating_sum,
 )
-from repro.core.precision import BEST, LN2, POLY_A, POLY_B, POLY_C, PrecisionConfig, paper_sweep_grid
+from repro.core.precision import (
+    BEST, LN2, POLY_A, POLY_B, POLY_C, PrecisionConfig, paper_sweep_grid,
+)
 from repro.core.quantization import (
     dequantize_probs,
     quantize_raw_scores,

@@ -71,7 +71,7 @@ class PrecisionConfig:
             if math.floor(LN2 / self.S) < 1:
                 raise ValueError(
                     f"scale S={self.S:.4f} >= ln2: range reduction degenerates; "
-                    f"use a larger M or smaller |T_C|"
+                    "use a larger M or smaller |T_C|"
                 )
         if self.P_out > 30:
             raise ValueError(f"P_out={self.P_out} exceeds int32 headroom")

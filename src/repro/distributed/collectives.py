@@ -4,7 +4,6 @@ SPMD-inserted collectives; these are for explicitly scheduled sections)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def psum_tree(tree, axis_name):

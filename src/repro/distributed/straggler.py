@@ -73,12 +73,12 @@ class StragglerMonitor:
                 3, "remesh",
                 f"{self._slow_streak} consecutive steps >= "
                 f"{self.sustain_factor:.1f}x median — chronic straggler; "
-                f"checkpoint and re-mesh without the slow host", slowdown)
+                "checkpoint and re-mesh without the slow host", slowdown)
         if self._slow_streak >= self.sustain_steps:
             return Recommendation(
                 2, "checkpoint",
                 f"{self._slow_streak} consecutive slow steps — take a "
-                f"checkpoint now in case this becomes a failure", slowdown)
+                "checkpoint now in case this becomes a failure", slowdown)
         if slowdown >= self.spike_factor:
             return Recommendation(
                 1, "log", f"step {slowdown:.1f}x median (transient spike)",

@@ -5,7 +5,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.precision import PrecisionConfig
 from repro.kernels.int_attention.kernel import int_attention_kernel

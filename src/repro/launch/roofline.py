@@ -15,7 +15,6 @@ reduce-scatter / all-to-all / collective-permute.
 
 from __future__ import annotations
 
-import math
 import re
 from typing import Dict
 

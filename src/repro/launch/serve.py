@@ -75,7 +75,21 @@ def main():
                     choices=["continuous", "gang"],
                     help="--continuous: admission policy (gang = static "
                          "batching on the same executor)")
+    ap.add_argument("--paged", action="store_true",
+                    help="--continuous: paged KV cache (block pool + "
+                         "per-slot block tables)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="--paged: tokens per KV block")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="--paged: reuse resident prompt blocks across "
+                         "requests with a common prefix (tail-only prefill)")
     args = ap.parse_args()
+    if (args.paged or args.prefix_share) and not args.continuous:
+        ap.error("--paged/--prefix-share require --continuous "
+                 "(they configure Engine.serve)")
+    if args.prefix_share and not args.paged:
+        ap.error("--prefix-share requires --paged (sharing points block "
+                 "tables at resident pool blocks)")
 
     metered = get_backend(args.softmax).metered
     spec = SoftmaxSpec(args.softmax, PrecisionConfig(M=args.M, N=args.N)) \
@@ -96,7 +110,7 @@ def main():
     if args.ckpt_dir:
         template, _ = model.init_split(jax.random.PRNGKey(0))
         from repro.training.optimizer import AdamW, constant_schedule
-        from repro.training.step import TrainState, init_state
+        from repro.training.step import init_state
         opt = AdamW(lr=constant_schedule(1e-3))
         state, step, _ = ckpt.restore(
             args.ckpt_dir, init_state(train_model, opt, jax.random.PRNGKey(0)))
@@ -130,15 +144,22 @@ def main():
                                          2 * args.prompt_len),
                             max_new_range=(max(args.max_new // 4, 1),
                                            args.max_new))
-        eng.serve(reqs, slots=args.slots, policy=args.policy)  # compile
-        rep = eng.serve(reqs, slots=args.slots, policy=args.policy,
-                        report_cost=True)
+        serve_kw = dict(slots=args.slots, policy=args.policy,
+                        paged=args.paged, block_size=args.block_size,
+                        prefix_share=args.prefix_share)
+        eng.serve(reqs, **serve_kw)  # compile
+        rep = eng.serve(reqs, report_cost=True, **serve_kw)
         import numpy as np
         gen = sum(r.max_new for r in reqs)
         lat = [r.latency_s for r in rep.results]
+        paged_note = (f", paged bs={rep.block_size} "
+                      f"(prefill {rep.prefill_tokens} tok, "
+                      f"shared {rep.shared_prefill_tokens})"
+                      if rep.paged else "")
         print(f"{args.policy} serving: {len(reqs)} requests / {args.slots} "
               f"slots, {gen} tokens in {rep.steps} decode steps, "
-              f"{rep.wall_s * 1e3:.1f} ms ({gen / rep.wall_s:.0f} tok/s)")
+              f"{rep.wall_s * 1e3:.1f} ms ({gen / rep.wall_s:.0f} tok/s)"
+              f"{paged_note}")
         print(f"request latency p50={np.percentile(lat, 50) * 1e3:.1f} ms "
               f"p99={np.percentile(lat, 99) * 1e3:.1f} ms")
         for r in rep.results[:3]:
@@ -163,7 +184,7 @@ def main():
              for row in res.tokens
              for t in range(res.prompt_len - 1, res.tokens.shape[1] - 1))
     print(f"softmax={cfg.softmax.kind}: {ok}/{args.batch * args.max_new} "
-          f"generated transitions follow the corpus chain")
+          "generated transitions follow the corpus chain")
     for row in res.tokens[:2]:
         p, g = row[:args.prompt_len].tolist(), row[args.prompt_len:].tolist()
         print(f"  prompt {p} -> {g}")

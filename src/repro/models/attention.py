@@ -164,13 +164,101 @@ def valid_upto(l_max: int, cache_pos, window: int = 0):
     return valid
 
 
+def paged_gather(pool, table):
+    """Materialize a contiguous per-row view of a paged pool.
+
+    ``pool`` [NB, BS, ...] (physical blocks), ``table`` [B, n_logical]
+    (physical block id per logical block; the sentinel ``NB`` marks
+    unallocated entries) -> [B, n_logical * BS, ...]. Sentinel/stale entries
+    gather arbitrary resident data — every downstream consumer masks by
+    position validity, exactly like the zero padding of the contiguous
+    cache, so the values never reach an output."""
+    nb, bs = pool.shape[:2]
+    pages = jnp.take(pool, jnp.clip(table, 0, nb - 1), axis=0)
+    b, n = table.shape
+    return pages.reshape((b, n * bs) + pool.shape[2:])
+
+
+def paged_write(pool, table, new, cache_pos):
+    """Write one entry per batch row into the pool at ``cache_pos`` through
+    the block table. ``new`` [B, ...]; ``cache_pos`` scalar or [B]. Rows
+    whose position is out of range (parked slots at cache_len) or whose
+    table entry is the NB sentinel scatter out of bounds and are dropped."""
+    nb, bs = pool.shape[:2]
+    b, n_log = table.shape
+    pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
+    lb, off = pos // bs, pos % bs
+    pb = jnp.take_along_axis(table, jnp.clip(lb, 0, n_log - 1)[:, None], 1)[:, 0]
+    pb = jnp.where(lb >= n_log, nb, pb)
+    return pool.at[pb, off].set(new.astype(pool.dtype), mode="drop")
+
+
+def _attn_decode_paged(p, x, cache, cache_pos, cfg, ctx: Ctx, positions, kind):
+    """Paged single-token decode: scatter the new K/V through the block
+    table, gather the whole logical cache back for attention. The gathered
+    [B, C, KV, D] holds exactly the values the contiguous path holds at
+    every valid position, so scores — and outputs — are bit-identical."""
+    b, s, _ = x.shape  # s == 1
+    q, k_new, v_new = project_qkv(p, x, cfg, ctx, positions)
+    table = cache["table"]
+    if "k_scale" in cache:
+        kq, ks = kv_quantize(k_new)
+        vq, vs = kv_quantize(v_new)
+        kp = paged_write(cache["k"], table, kq[:, 0], cache_pos)
+        vp = paged_write(cache["v"], table, vq[:, 0], cache_pos)
+        ksp = paged_write(cache["k_scale"], table, ks[:, 0], cache_pos)
+        vsp = paged_write(cache["v_scale"], table, vs[:, 0], cache_pos)
+        k = kv_dequantize(paged_gather(kp, table), paged_gather(ksp, table),
+                          ctx.dtype)
+        v = kv_dequantize(paged_gather(vp, table), paged_gather(vsp, table),
+                          ctx.dtype)
+        new_cache = {"k": kp, "v": vp, "k_scale": ksp, "v_scale": vsp,
+                     "table": table}
+    else:
+        kp = paged_write(cache["k"], table, k_new[:, 0], cache_pos)
+        vp = paged_write(cache["v"], table, v_new[:, 0], cache_pos)
+        k, v = paged_gather(kp, table), paged_gather(vp, table)
+        new_cache = {"k": kp, "v": vp, "table": table}
+    l_max = k.shape[1]
+    valid = valid_upto(l_max, cache_pos,
+                       cfg.window if kind == "window" else 0)
+    mask = jnp.broadcast_to(valid[:, None, :], (b, 1, l_max))
+    out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
+    y = dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+    return y, new_cache
+
+
+def attn_prefill_tail(p, x, prefix_k, prefix_v, cfg, ctx: Ctx, positions,
+                      prefix_len: int):
+    """Prefill the unshared prompt tail against a shared-prefix cache.
+
+    ``x`` embeds tokens[prefix_len:]; ``prefix_k``/``prefix_v`` [B, s, KV, D]
+    are the prefix K/V gathered from shared pool blocks (the exact bf16
+    values a full prefill would have computed and cached for those
+    positions, so the tail's attention rows — and its own K/V — match the
+    full prefill bit for bit). Returns (y, {"k","v"} tail cache [B, T, ...])."""
+    b, t, _ = x.shape
+    q, k_t, v_t = project_qkv(p, x, cfg, ctx, positions)
+    k = jnp.concatenate([ctx.cast(prefix_k), k_t], axis=1)
+    v = jnp.concatenate([ctx.cast(prefix_v), v_t], axis=1)
+    pos = positions[0] if cfg.rope_type == "mrope" else positions
+    kv_pos = jnp.arange(prefix_len + t, dtype=jnp.int32)[None, :]
+    out = attend_chunked(q, k, v, pos, kv_pos, "causal", cfg, ctx)
+    y = dense_apply(p["wo"], out.reshape(b, t, -1), ctx)
+    return y, {"k": k_t, "v": v_t}
+
+
 def attn_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
                 kind: str = "causal"):
     """Single-token decode. cache: {"k","v"} [B, L, KV, D] (kv_seq-sharded:
     split-KV / flash-decoding style), optionally int8-quantized with
-    per-(position, head) scales ({"k_scale","v_scale"} present).
+    per-(position, head) scales ({"k_scale","v_scale"} present), or the
+    paged layout ({"table" present}: pool [NB, BS, KV, D] + block table).
     cache_pos: int32 current length — scalar (uniform batch) or [B]
     (per-slot positions, continuous batching)."""
+    if "table" in cache:
+        return _attn_decode_paged(p, x, cache, cache_pos, cfg, ctx, positions,
+                                  kind)
     b, s, _ = x.shape  # s == 1
     q, k_new, v_new = project_qkv(p, x, cfg, ctx, positions)
     quant = "k_scale" in cache

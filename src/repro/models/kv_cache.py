@@ -95,6 +95,144 @@ def cache_zeros(cfg, batch: int, cache_len: int, enc_len: int = 0):
     return _build(cfg, batch, cache_len, enc_len, mk)
 
 
+# ------------------------------------------------------------- paged layouts
+#
+# The paged cache replaces each per-slot contiguous attention buffer
+# [L, B, C, ...] with a global pool of fixed-size KV blocks
+# [L, num_blocks, block_size, ...] plus a per-slot block table
+# [L, B, C // block_size] mapping logical block index -> physical block id.
+# The table rides INSIDE the cache pytree (one identical copy per stacked
+# layer, int32 — a few KB) so the decode path keeps the exact
+# ``decode_step(params, cache, batch, pos)`` signature and the scan-carry /
+# donation contract of the contiguous path. ``num_blocks`` is the INVALID
+# table sentinel: gathers clip it, scatters drop it (out-of-bounds-high).
+#
+# Position-free state (SSM conv/ssd state) and the window-bounded hybrid
+# rings stay slot-resident: there is nothing to page (O(1) / O(window) per
+# slot) and nothing shareable (the SSM state is a whole-prefix summary, not
+# positional storage). The hybrid family pages its full-attention segments,
+# where the O(context) memory actually lives.
+
+
+def _paged_attn_cache(make, L, nb, bs, slots, n_logical, cfg):
+    if getattr(cfg, "kv_quant", False):
+        d = {"k": make((L, nb, bs, cfg.n_kv_heads, cfg.d_head), jnp.int8),
+             "v": make((L, nb, bs, cfg.n_kv_heads, cfg.d_head), jnp.int8),
+             "k_scale": make((L, nb, bs, cfg.n_kv_heads), jnp.float32),
+             "v_scale": make((L, nb, bs, cfg.n_kv_heads), jnp.float32)}
+    else:
+        d = {"k": make((L, nb, bs, cfg.n_kv_heads, cfg.d_head), KV_DTYPE),
+             "v": make((L, nb, bs, cfg.n_kv_heads, cfg.d_head), KV_DTYPE)}
+    d["table"] = make((L, slots, n_logical), jnp.int32, fill=nb)
+    return d
+
+
+def _build_paged(cfg, slots: int, cache_len: int, block_size: int,
+                 num_blocks: int, make):
+    if cache_len % block_size != 0:
+        raise ValueError(f"cache_len {cache_len} not a multiple of "
+                         f"block_size {block_size}")
+    L, nb, bs = cfg.n_layers, num_blocks, block_size
+    n_log = cache_len // block_size
+    if cfg.family == "encdec":
+        raise NotImplementedError("paged caches cover the decoder-only "
+                                  "serving families")
+    if cfg.family == "ssm":
+        return _ssm_cache(make, L, slots, cfg)
+    if cfg.family == "hybrid":
+        wa, wb = hybrid_segments(cfg)
+        w = min(cfg.window, cache_len)
+        seg = lambda n, full: {
+            "attn": (_paged_attn_cache(make, n, nb, bs, slots, n_log, cfg)
+                     if full else _ring_cache(make, n, slots, w, cfg)),
+            "ssm": _ssm_cache(make, n, slots, cfg)}
+        return {"full": seg(3, True), "win_a": seg(wa, False),
+                "win_b": seg(wb, False)}
+    if cfg.attention == "mla":
+        return {"c_kv": make((L, nb, bs, cfg.kv_lora_rank), KV_DTYPE),
+                "k_rope": make((L, nb, bs, cfg.qk_rope_dim), KV_DTYPE),
+                "table": make((L, slots, n_log), jnp.int32, fill=nb)}
+    return _paged_attn_cache(make, L, nb, bs, slots, n_log, cfg)
+
+
+def paged_cache_struct(cfg, slots: int, cache_len: int, block_size: int,
+                       num_blocks: int):
+    def mk(shape, dtype, fill=0):
+        return _sds(shape, dtype)
+    return _build_paged(cfg, slots, cache_len, block_size, num_blocks, mk)
+
+
+def paged_cache_zeros(cfg, slots: int, cache_len: int, block_size: int,
+                      num_blocks: int):
+    def mk(shape, dtype, fill=0):
+        if fill:
+            return jnp.full(shape, fill, dtype)
+        if dtype == jnp.int32:  # ring position buffers start at -1 (empty)
+            return jnp.full(shape, -1, dtype)
+        return jnp.zeros(shape, dtype)
+    return _build_paged(cfg, slots, cache_len, block_size, num_blocks, mk)
+
+
+def paged_scatter(cache, values, slot, table_row, pb, offs, t0: int, t1: int):
+    """Install one request's prefilled cache entries into a paged cache.
+
+    Pool leaves receive ``values`` positions ``[t0, t1)`` (seq axis 2 of the
+    [L, 1, S, ...] prefill output) scattered to physical coordinates
+    ``(pb[i], offs[i])``; the slot's block-table row is set to ``table_row``;
+    slot-resident leaves (SSM state/conv, hybrid rings) are stripe-inserted
+    at batch axis 1 — the paged counterpart of the engine's dense
+    ``_insert_slot``. Pure traced function; the engine jits it with
+    ``t0``/``t1`` static and the cache donated."""
+    def walk(c, v):
+        if isinstance(c, dict) and "table" in c:
+            out = {}
+            for k, leaf in c.items():
+                if k == "table":
+                    out[k] = leaf.at[:, slot, :].set(table_row)
+                else:
+                    vals = v[k][:, 0, t0:t1]
+                    out[k] = leaf.at[:, pb, offs].set(vals.astype(leaf.dtype))
+            return out
+        if isinstance(c, dict):
+            return {k: walk(leaf, v[k]) for k, leaf in c.items()}
+        return jax.lax.dynamic_update_slice_in_dim(
+            c, v.astype(c.dtype), slot, axis=1)
+    return walk(cache, values)
+
+
+def paged_copy_block(cache, src, dst):
+    """Copy pool block ``src`` -> ``dst`` on every pool leaf (the device half
+    of the allocator's copy-on-write handshake). Tables and slot-resident
+    leaves pass through."""
+    def walk(c):
+        if isinstance(c, dict) and "table" in c:
+            return {k: (leaf if k == "table"
+                        else leaf.at[:, dst].set(leaf[:, src]))
+                    for k, leaf in c.items()}
+        if isinstance(c, dict):
+            return {k: walk(leaf) for k, leaf in c.items()}
+        return c
+    return walk(cache)
+
+
+def paged_prefix_view(cache, ids, s: int):
+    """Materialize the shared-prefix cache entries [L, 1, s, ...] from pool
+    blocks ``ids`` (tail-only prefill input). Only defined for the families
+    whose whole cache is one paged node (dense/moe/mla — the families that
+    support prefix sharing)."""
+    if not (isinstance(cache, dict) and "table" in cache):
+        raise NotImplementedError("prefix gather requires a pure paged cache")
+    out = {}
+    for k, leaf in cache.items():
+        if k == "table":
+            continue
+        pages = jnp.take(leaf, ids, axis=1)          # [L, n, bs, ...]
+        flat = pages.reshape((leaf.shape[0], ids.shape[0] * leaf.shape[2])
+                             + leaf.shape[3:])
+        out[k] = flat[:, None, :s]
+    return out
+
+
 def cache_axes(cfg, batch: int, cache_len: int, enc_len: int = 0):
     """Logical axes tree matching cache_struct (for dry-run in_shardings)."""
     def axes_for(shape, dtype):

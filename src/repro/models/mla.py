@@ -17,7 +17,9 @@ import jax.numpy as jnp
 
 from repro.backends import telemetry
 from repro.core.softmax_variants import spec_backend
-from repro.models.attention import attend_chunked, cache_write, valid_upto
+from repro.models.attention import (
+    attend_chunked, cache_write, paged_gather, paged_write, valid_upto,
+)
 from repro.models.layers import Ctx, apply_rope, dense_apply, dense_init, norm_init, norm_apply
 
 
@@ -80,17 +82,65 @@ def mla_apply(p, x, cfg, ctx: Ctx, positions, kind: str = "causal"):
     return dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
 
 
-def mla_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
-    """Absorbed decode against the latent cache {"c_kv":[B,L,r], "k_rope":[B,L,dr]}."""
-    b, s, _ = x.shape  # s == 1
+def mla_prefill_tail(p, x, prefix_c, prefix_kr, cfg, ctx: Ctx, positions,
+                     prefix_len: int):
+    """Prefill the unshared prompt tail against shared-prefix latents.
+
+    ``prefix_c`` [B, s, r] / ``prefix_kr`` [B, s, dr] are the cached latent /
+    rope-key values gathered from shared pool blocks — bit-identical to what
+    a full prefill computes for those positions, so up-projecting
+    [prefix ++ tail] latents reproduces the full-prefill K/V exactly.
+    Returns (y, {"c_kv" [B,T,r], "k_rope" [B,T,dr]} tail cache)."""
+    b, t, _ = x.shape
     h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
-    r = cfg.kv_lora_rank
+    q_nope, q_rope = _queries(p, x, cfg, ctx, positions)
+    c_t, kr_t = _latents(p, x, cfg, ctx, positions)
+    c_all = jnp.concatenate([ctx.cast(prefix_c), c_t], axis=1)
+    kr_all = jnp.concatenate([ctx.cast(prefix_kr)[:, :, None, :], kr_t], axis=1)
+    s_all = prefix_len + t
+    k_nope = dense_apply(p["wuk"], c_all, ctx).reshape(b, s_all, h, dn)
+    v = dense_apply(p["wuv"], c_all, ctx).reshape(b, s_all, h, dv)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all, (b, s_all, h, dr))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    kv_pos = jnp.arange(s_all, dtype=jnp.int32)[None, :]
+    out = attend_chunked(q, k, v, positions, kv_pos, "causal", cfg, ctx,
+                         (dn + dr) ** -0.5)
+    y = dense_apply(p["wo"], out.reshape(b, t, -1), ctx)
+    return y, {"c_kv": c_t, "k_rope": kr_t[:, :, 0]}
+
+
+def mla_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
+    """Absorbed decode against the latent cache {"c_kv":[B,L,r], "k_rope":[B,L,dr]}
+    — or, when a block table is present, the paged pool
+    {"c_kv":[NB,BS,r], "k_rope":[NB,BS,dr], "table":[B,n_logical]}."""
+    b, s, _ = x.shape  # s == 1
     q_nope, q_rope = _queries(p, x, cfg, ctx, positions)
     c_new, kr_new = _latents(p, x, cfg, ctx, positions)
+    if "table" in cache:
+        table = cache["table"]
+        c_pool = paged_write(cache["c_kv"], table, c_new[:, 0], cache_pos)
+        kr_pool = paged_write(cache["k_rope"], table, kr_new[:, 0, 0], cache_pos)
+        new_cache = {"c_kv": c_pool, "k_rope": kr_pool, "table": table}
+        c_kv = paged_gather(c_pool, table)
+        k_rope = paged_gather(kr_pool, table)
+        return _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cache_pos, cfg,
+                           ctx, b, s), new_cache
     c_kv = cache_write(cache["c_kv"], c_new, cache_pos)
     k_rope = cache_write(cache["k_rope"], kr_new[:, :, 0], cache_pos)
     c_kv = ctx.shard(c_kv, ("batch", "kv_seq", None))
     k_rope = ctx.shard(k_rope, ("batch", "kv_seq", None))
+    return _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cache_pos, cfg, ctx,
+                       b, s), {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cache_pos, cfg, ctx: Ctx,
+                b, s):
+    """Absorbed attention over a contiguous latent view [B, L, r] — shared by
+    the contiguous and paged (post-gather) decode paths, so both lower the
+    same einsums and stay bit-identical."""
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
     # absorb W_uk into q: q_lat [B,1,H,r]
     wuk = ctx.cast(p["wuk"]["w"]).reshape(r, h, dn)
     q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wuk)
@@ -107,5 +157,4 @@ def mla_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
     o_lat = jnp.einsum("bhql,blr->bqhr", w, ctx.cast(c_kv))
     wuv = ctx.cast(p["wuv"]["w"]).reshape(r, h, dv)
     out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wuv)
-    y = dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
-    return y, {"c_kv": c_kv, "k_rope": k_rope}
+    return dense_apply(p["wo"], out.reshape(b, s, -1), ctx)

@@ -15,7 +15,6 @@ Batch contracts (all int32 tokens):
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -26,7 +25,6 @@ from repro.backends import telemetry
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import ShardingRules
 from repro.models import transformer as tfm
-from repro.models.hybrid import full_attn_layer_ids
 from repro.models.kv_cache import hybrid_segments
 from repro.models.layers import (
     Ctx, Param, dense_apply, dense_init, embed_apply, embed_init, embed_logits,
@@ -257,6 +255,43 @@ class Model:
         x, cache = tfm.scan_prefill(sp["layers"], x, cfg, ctx, positions,
                                     "dense", cache_len)
         return x, cache
+
+    def prefill_tail(self, p, batch, prefix, prefix_len: int):
+        """Prefill only the unshared tail of a prompt whose first
+        ``prefix_len`` positions are already resident in shared cache blocks.
+
+        ``batch["tokens"]`` holds tokens[prefix_len:] ([B, T]); ``prefix`` is
+        the per-layer shared-prefix cache pytree (dense: {"k","v"}
+        [L, B, s, KV, Dh]; mla: {"c_kv","k_rope"} [L, B, s, ...]) gathered
+        from the paged pool. Returns (last_logits, tail_cache [L, B, T, ...])
+        — cache entries for the tail positions, bit-identical to the
+        corresponding slice of a full prefill (prefix-sharing's correctness
+        bar). Dense/moe/mla only: SSM state and hybrid rings are whole-prefix
+        summaries, so those families always prefill in full."""
+        cfg, ctx = self.cfg, self.ctx
+        if cfg.family not in ("dense", "moe") or cfg.rope_type == "mrope":
+            raise NotImplementedError(
+                "tail-only prefill covers the dense/moe (incl. MLA) families "
+                "with scalar-position rope")
+        x = self._embed(p, batch)
+        positions = positions_for(cfg, batch["tokens"].shape,
+                                  offset=prefix_len)
+        sp = p["stack"]
+        if cfg.family == "moe" and "prefix" in sp:
+            npre = cfg.n_dense_prefix
+            pfx_pre = jax.tree.map(lambda c: c[:npre], prefix)
+            pfx_main = jax.tree.map(lambda c: c[npre:], prefix)
+            x, c1 = tfm.scan_prefill_tail(sp["prefix"], pfx_pre, x, cfg, ctx,
+                                          positions, "dense", prefix_len)
+            x, c2 = tfm.scan_prefill_tail(sp["layers"], pfx_main, x, cfg, ctx,
+                                          positions, "moe", prefix_len)
+            cache = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                                 c1, c2)
+        else:
+            kind = "moe" if cfg.family == "moe" else "dense"
+            x, cache = tfm.scan_prefill_tail(sp["layers"], prefix, x, cfg, ctx,
+                                             positions, kind, prefix_len)
+        return self._head(p, x[:, -1:]), cache
 
     def decode_step(self, p, cache, batch, cache_pos):
         """batch: {"token": [B,1]} (+ "positions" [3,B,1] for mrope).

@@ -8,19 +8,22 @@ layers and scan the homogeneous segments.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.backends import telemetry
 from repro.models.attention import (
-    attend_chunked, attn_apply, attn_decode, attn_decode_ring, attn_init,
+    attend_chunked,
+    attn_apply,
+    attn_decode,
+    attn_init,
+    attn_prefill_tail,
     project_qkv,
 )
 from repro.models.hybrid import (
-    full_attn_layer_ids, hybrid_block_apply, hybrid_block_decode,
+    hybrid_block_apply,
+    hybrid_block_decode,
     hybrid_block_init,
 )
 from repro.models.layers import (
@@ -228,6 +231,51 @@ def block_prefill(p, x, cfg, ctx: Ctx, positions, kind: str, cache_len: int):
         y, _ = moe_apply(p["ffn"], h, cfg, ctx)
         return x + y, c
     return x + mlp_apply(p["ffn"], h, cfg.act, ctx), c
+
+
+def block_prefill_tail(p, x, cfg, ctx: Ctx, positions, kind: str, prefix,
+                       prefix_len: int):
+    """Prefill the unshared prompt tail of one dense/moe/mla block against
+    the shared-prefix cache entries ``prefix`` (gathered from pool blocks).
+    Returns (x, tail_cache) — cache entries for the tail positions only."""
+    x = ctx.shard(x, ("batch", "seq_sp", None))
+    h = norm_apply(p["norm1"], x, cfg.norm, ctx)
+    if cfg.attention == "mla":
+        from repro.models.mla import mla_prefill_tail
+        a, c = mla_prefill_tail(p["attn"], h, prefix["c_kv"], prefix["k_rope"],
+                                cfg, ctx, positions, prefix_len)
+    else:
+        a, c = attn_prefill_tail(p["attn"], h, prefix["k"], prefix["v"], cfg,
+                                 ctx, positions, prefix_len)
+    x = x + a
+    h = norm_apply(p["norm2"], x, cfg.norm, ctx)
+    if kind == "moe":
+        y, _ = moe_apply(p["ffn"], h, cfg, ctx)
+        return x + y, c
+    return x + mlp_apply(p["ffn"], h, cfg.act, ctx), c
+
+
+def scan_prefill_tail(params, prefix, x, cfg, ctx: Ctx, positions, kind: str,
+                      prefix_len: int):
+    """Tail prefill over a stacked segment; ``prefix`` leaves are stacked
+    [L, B, s, ...] per-layer shared-prefix cache entries."""
+
+    def body(carry, xs):
+        layer_p, pfx = xs
+        return block_prefill_tail(layer_p, carry, cfg, ctx, positions, kind,
+                                  pfx, prefix_len)
+
+    n_layers = jax.tree.leaves(params)[0].shape[0]
+    if not cfg.scan_layers:
+        outs = []
+        for i in range(n_layers):
+            layer = jax.tree.map(lambda p: p[i], params)
+            pfx = jax.tree.map(lambda c: c[i], prefix)
+            x, c = body(x, (layer, pfx))
+            outs.append(c)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    with telemetry.repeat(n_layers):
+        return jax.lax.scan(body, x, (params, prefix))
 
 
 def scan_prefill(params, x, cfg, ctx: Ctx, positions, kind: str, cache_len: int):

@@ -59,7 +59,9 @@ from repro.backends import CostReport, telemetry
 from repro.models import kv_cache
 from repro.models.model import Model
 from repro.serving.sampler import make_sampler
-from repro.serving.scheduler import Request, SlotScheduler
+from repro.serving.scheduler import (
+    BlockAllocator, Request, SlotScheduler, prefix_keys,
+)
 
 
 @dataclasses.dataclass
@@ -84,6 +86,7 @@ class RequestResult:
     finished_at: float          # serve-clock step time of completion
     latency_s: float            # wall seconds, queue entry -> completion
     cost: Optional[CostReport] = None   # this request's attributed share
+    shared_prefix: int = 0      # prompt tokens served from shared blocks
 
 
 @dataclasses.dataclass
@@ -95,6 +98,12 @@ class ServeReport:
     slots: int
     cache_len: int
     cost: Optional[CostReport] = None   # batch meter (prefills + all steps)
+    paged: bool = False
+    block_size: int = 0
+    prefill_tokens: int = 0             # prompt tokens actually prefilled
+    shared_prefill_tokens: int = 0      # prompt tokens served from shared blocks
+    cow_copies: int = 0
+    evictions: int = 0
 
     def by_rid(self) -> Dict[int, RequestResult]:
         return {r.rid: r for r in self.results}
@@ -229,6 +238,21 @@ class Engine:
                 lambda c, s: jax.lax.dynamic_update_slice_in_dim(
                     c, s.astype(c.dtype), slot, axis=1), cache, slot_cache),
             donate_argnums=(0,))
+        # paged-cache executors: install a prefilled request through the slot's
+        # block table (pool scatter + table row + slot-resident stripe), copy a
+        # block for the allocator's copy-on-write handshake, gather a shared
+        # prefix back into contiguous form for tail-only prefill. All shapes
+        # are static per (prompt-length, block-count) pair, so the jit caches
+        # stay as bounded as the prefill shape set.
+        self._paged_scatter = jax.jit(
+            kv_cache.paged_scatter, static_argnames=("t0", "t1"),
+            donate_argnums=(0,))
+        self._paged_copy = jax.jit(kv_cache.paged_copy_block,
+                                   donate_argnums=(0,))
+        self._paged_prefix = jax.jit(kv_cache.paged_prefix_view,
+                                     static_argnames=("s",))
+        self._prefill_tail = jax.jit(model.prefill_tail,
+                                     static_argnames=("prefix_len",))
         self._meter_cache: dict = {}  # (batch shapes, cache_len) -> CostReport
 
     def _decode_inputs(self, nxt, b: int, p: int, t: int):
@@ -348,12 +372,19 @@ class Engine:
             self._meter_cache[key] = acc.total()
         return self._meter_cache[key]
 
-    def _meter_serve_step(self, slots: int, cache_len: int) -> CostReport:
+    def _meter_serve_step(self, slots: int, cache_len: int,
+                          paged_geom=None) -> CostReport:
         """Softmax AP cost of ONE slot-batched decode step (static shapes —
-        one abstract trace, memoized)."""
-        key = ("serve_step", slots, cache_len)
+        one abstract trace, memoized). ``paged_geom``: (block_size,
+        num_blocks) to meter the paged layout (same softmax shapes — the
+        gather materializes the same [B, C] view — but kept honest)."""
+        key = ("serve_step", slots, cache_len, paged_geom)
         if key not in self._meter_cache:
-            struct = kv_cache.cache_struct(self.model.cfg, slots, cache_len)
+            if paged_geom is None:
+                struct = kv_cache.cache_struct(self.model.cfg, slots, cache_len)
+            else:
+                struct = kv_cache.paged_cache_struct(
+                    self.model.cfg, slots, cache_len, *paged_geom)
             with telemetry.collect() as acc:
                 jax.eval_shape(self.model.decode_step, self.params, struct,
                                {"token": jnp.zeros((slots, 1), jnp.int32)},
@@ -361,9 +392,36 @@ class Engine:
             self._meter_cache[key] = acc.total()
         return self._meter_cache[key]
 
+    def _prefix_struct(self, s: int):
+        """Abstract shared-prefix pytree for metering tail-only prefill —
+        derived from the real pool builders (a degenerate one-block pool of
+        block_size ``s``, viewed through ``paged_prefix_view``) so it can
+        never drift from the serving layouts in ``models/kv_cache.py``."""
+        struct = kv_cache.paged_cache_struct(self.model.cfg, 1, s, s, 1)
+        return jax.eval_shape(
+            functools.partial(kv_cache.paged_prefix_view, s=s),
+            struct, jax.ShapeDtypeStruct((1,), jnp.int32))
+
+    def _meter_prefill_tail(self, s: int, tail: int) -> CostReport:
+        """Softmax AP cost of a tail-only prefill (tail tokens attending over
+        s shared-prefix positions) — what a prefix-shared admission actually
+        executes."""
+        key = ("prefill_tail", s, tail)
+        if key not in self._meter_cache:
+            with telemetry.collect() as acc:
+                jax.eval_shape(
+                    functools.partial(self.model.prefill_tail, prefix_len=s),
+                    self.params,
+                    {"tokens": jnp.zeros((1, tail), jnp.int32)},
+                    self._prefix_struct(s))
+            self._meter_cache[key] = acc.total()
+        return self._meter_cache[key]
+
     def serve(self, requests: Sequence[Request], slots: int = 4,
               cache_len: Optional[int] = None, policy: str = "continuous",
-              report_cost: bool = False) -> ServeReport:
+              report_cost: bool = False, paged: bool = False,
+              block_size: int = 16, num_blocks: Optional[int] = None,
+              prefix_share: bool = False) -> ServeReport:
         """Continuous-batching serving over a trace of timed arrivals.
 
         Runs ONE compiled decode step (``make_serve_step_fn``) in a host
@@ -379,6 +437,19 @@ class Engine:
         ``ServeReport.cost`` is the batch AP meter and each request carries
         its attributed share (prefill + an even split of every decode step
         it was active in); the shares sum to the batch meter.
+
+        ``paged=True`` swaps the per-slot contiguous cache for the paged
+        layout: a global pool of ``num_blocks`` KV blocks of ``block_size``
+        tokens plus per-slot block tables (attention gathers through the
+        table — outputs stay bit-identical). ``prefix_share=True``
+        additionally reuses resident prompt blocks across requests with a
+        common prefix (block-granular, cumulative-content matched, refcounted
+        by a :class:`~repro.serving.scheduler.BlockAllocator`, copy-on-write
+        on the first divergent write) and prefills only the unshared tail.
+        Sharing covers the dense/moe/MLA families with fp KV storage; SSM
+        state and hybrid rings are whole-prefix summaries, so those families
+        page without sharing, and int8 KV is excluded because the non-paged
+        parity reference attends the prefix unquantized.
         """
         cfg = self.model.cfg
         if cfg.family == "encdec" or cfg.rope_type == "mrope":
@@ -393,11 +464,44 @@ class Engine:
         if cfg.family == "hybrid":
             # prefill builds window-capacity rings; the slot buffers must match
             C = max(C, cfg.window)
-        sched = SlotScheduler(reqs, slots, C, policy=policy)
+        if prefix_share and not paged:
+            raise ValueError("prefix_share=True requires paged=True")
+        alloc = None
+        shareable = False
+        if paged:
+            C = -(-C // block_size) * block_size     # round up to block grid
+            n_logical = C // block_size
+            if num_blocks is None:
+                # every slot's worst case, plus one request's worth of slack
+                # for the cross-request prefix cache to live in
+                num_blocks = slots * n_logical + (n_logical if prefix_share
+                                                  else 0)
+            alloc = BlockAllocator(num_blocks, block_size)
+            need_max = max(alloc.blocks_needed(r.prompt_len, r.max_new)
+                           for r in reqs)
+            if num_blocks < need_max:
+                raise ValueError(
+                    f"num_blocks {num_blocks} cannot fit the largest "
+                    f"request (worst case {need_max} blocks of "
+                    f"{block_size})")
+            shareable = (prefix_share and cfg.family in ("dense", "moe")
+                         and not getattr(cfg, "kv_quant", False))
+            sched = SlotScheduler(
+                reqs, slots, C, policy=policy,
+                admit_ok=lambda r: alloc.available() >= alloc.blocks_needed(
+                    r.prompt_len, r.max_new))
+            cache = kv_cache.paged_cache_zeros(cfg, slots, C, block_size,
+                                               num_blocks)
+        else:
+            sched = SlotScheduler(reqs, slots, C, policy=policy)
+            cache = kv_cache.cache_zeros(cfg, slots, C)
         attr = telemetry.SlotCostAttributor() if report_cost else None
-        step_cost = self._meter_serve_step(slots, C) if report_cost else None
-
-        cache = kv_cache.cache_zeros(cfg, slots, C)
+        step_cost = (self._meter_serve_step(
+            slots, C, (block_size, num_blocks) if paged else None)
+            if report_cost else None)
+        slot_blocks: Dict[int, List[int]] = {}
+        prefill_tok = shared_tok = 0
+        shared_of: Dict[int, int] = {}
         tok = np.zeros((slots, 1), np.int32)
         pos = np.full((slots,), C, np.int32)      # parked: no write lands
         keys = np.zeros((slots, 2), np.uint32)
@@ -417,21 +521,99 @@ class Engine:
             toks = np.concatenate([np.asarray(r.prompt, np.int32),
                                    np.asarray(gen, np.int32)])
             pos[slot] = C
+            if alloc is not None:
+                for b in slot_blocks.pop(slot, ()):
+                    alloc.release_block(b)
             results[r.rid] = RequestResult(
                 rid=r.rid, tokens=toks, prompt_len=r.prompt_len,
                 done=st.done, admitted_at=st.admitted_at, finished_at=t,
                 latency_s=time.perf_counter() - queued_wall.get(r.rid, wall0),
-                cost=attr.report_for(r.rid) if attr else None)
+                cost=attr.report_for(r.rid) if attr else None,
+                shared_prefix=shared_of.get(r.rid, 0))
+
+        def install_paged(slot: int, req: Request):
+            """Admit one request into the paged cache: match + refcount the
+            shared prefix, copy-on-write a partial boundary block, prefill
+            only the unshared tail, scatter it through the block table."""
+            nonlocal cache, prefill_tok, shared_tok
+            bs = block_size
+            P = req.prompt_len
+            pkeys = prefix_keys(req.prompt, bs) if shareable else []
+            shared = alloc.match_prefix(pkeys)
+            # always leave >= 1 tail token: the admission-time first token is
+            # sampled from the tail prefill's last-position logits
+            s = min(len(shared) * bs, P - 1)
+            keep = -(-s // bs)
+            for b in shared[keep:]:
+                alloc.release_block(b)
+            shared = shared[:keep]
+            cow = s > 0 and s % bs != 0
+            if cow:
+                # the boundary block is shared but position s (the forced
+                # tail token) lands inside it: first divergent write -> copy
+                old = shared[-1]
+                fresh, copied = alloc.writable(old)
+                assert copied, "boundary block was shared, writable must copy"
+                cache = self._paged_copy(cache, jnp.int32(old),
+                                         jnp.int32(fresh))
+                shared[-1] = fresh
+            ids = shared + [alloc.alloc() for _ in
+                            range(alloc.blocks_needed(P, req.max_new)
+                                  - len(shared))]
+            id_arr = np.asarray(ids, np.int32)
+            row = np.full((C // bs,), alloc.num_blocks, np.int32)
+            row[:len(ids)] = id_arr
+            if s == 0:
+                logits, slot_cache = self._prefill(
+                    self.params, {"tokens": jnp.asarray(req.prompt[None])},
+                    cache_len=C)
+                t0, t1 = 0, P
+            else:
+                prefix = self._paged_prefix(cache, jnp.asarray(id_arr[:keep]),
+                                            s=s)
+                logits, slot_cache = self._prefill_tail(
+                    self.params, {"tokens": jnp.asarray(req.prompt[None, s:])},
+                    prefix, prefix_len=s)
+                t0, t1 = 0, P - s
+            wpos = np.arange(s, P)
+            cache = self._paged_scatter(
+                cache, slot_cache, jnp.int32(slot), jnp.asarray(row),
+                jnp.asarray(id_arr[wpos // bs]),
+                jnp.asarray((wpos % bs).astype(np.int32)), t0=t0, t1=t1)
+            for i, key in enumerate(pkeys):
+                if i < len(shared) and not (cow and i == len(shared) - 1):
+                    continue    # still the registered original we acquired
+                alloc.register(key, ids[i])
+            slot_blocks[slot] = ids
+            shared_of[req.rid] = s
+            prefill_tok += P - s
+            shared_tok += s
+            if attr is not None:
+                if s > 0:
+                    attr.record_shared_prefill(
+                        req.rid, self._meter_prefill_tail(s, P - s),
+                        self._meter_prefill(s, C), s)
+                else:
+                    attr.record_request(req.rid, self._meter_prefill(P, C))
+            return logits
 
         while sched.unfinished:
             sched.advance(t)
             for r in sched.queue:
                 queued_wall.setdefault(r.rid, time.perf_counter())
             for slot, req in sched.admit(t):
-                logits, slot_cache = self._prefill(
-                    self.params, {"tokens": jnp.asarray(req.prompt[None])},
-                    cache_len=C)
-                cache = self._insert_slot(cache, slot_cache, jnp.int32(slot))
+                if alloc is not None:
+                    logits = install_paged(slot, req)
+                else:
+                    logits, slot_cache = self._prefill(
+                        self.params, {"tokens": jnp.asarray(req.prompt[None])},
+                        cache_len=C)
+                    cache = self._insert_slot(cache, slot_cache,
+                                              jnp.int32(slot))
+                    prefill_tok += req.prompt_len
+                    if attr is not None:
+                        attr.record_request(
+                            req.rid, self._meter_prefill(req.prompt_len, C))
                 k = jax.random.PRNGKey(req.seed)
                 k, sub = jax.random.split(k)
                 first = int(self.sample(logits[:, -1], sub)[0])
@@ -441,9 +623,6 @@ class Engine:
                 pos[slot] = req.prompt_len
                 keys[slot] = np.asarray(k, np.uint32)
                 done[slot] = done0
-                if attr is not None:
-                    attr.record_request(
-                        req.rid, self._meter_prefill(req.prompt_len, C))
                 if sched.slot_done(slot):
                     finish(slot)
             active = sched.active_slots()
@@ -478,7 +657,11 @@ class Engine:
         return ServeReport(
             results=ordered, steps=steps,
             wall_s=time.perf_counter() - wall0, slots=slots, cache_len=C,
-            cost=attr.total() if attr else None)
+            cost=attr.total() if attr else None,
+            paged=paged, block_size=block_size if paged else 0,
+            prefill_tokens=prefill_tok, shared_prefill_tokens=shared_tok,
+            cow_copies=alloc.cow_copies if alloc else 0,
+            evictions=alloc.evictions if alloc else 0)
 
 
 def make_serve_step(model: Model, kind: str, max_new: int = 64,

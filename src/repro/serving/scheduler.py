@@ -31,8 +31,8 @@ Admission policies:
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from collections import OrderedDict, deque
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -84,7 +84,8 @@ class SlotScheduler:
     """
 
     def __init__(self, requests: Sequence[Request], n_slots: int,
-                 cache_len: int, policy: str = "continuous"):
+                 cache_len: int, policy: str = "continuous",
+                 admit_ok: Optional[Callable[[Request], bool]] = None):
         if n_slots < 1:
             raise ValueError(f"need at least one slot, got {n_slots}")
         if policy not in ("continuous", "gang"):
@@ -92,6 +93,12 @@ class SlotScheduler:
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.policy = policy
+        # resource gate (paged serving): admission additionally requires
+        # admit_ok(queue head) — e.g. "enough free/evictable KV blocks for
+        # the request's worst case". Head-of-line blocking keeps FIFO order;
+        # a deferred head is retried on every later admit() call, and blocks
+        # freed by completing requests guarantee progress.
+        self._admit_ok = admit_ok
         for r in requests:
             if r.max_new < 1:
                 raise ValueError(f"request {r.rid}: max_new must be >= 1")
@@ -139,6 +146,8 @@ class SlotScheduler:
                 return
             budget = self.n_slots
         while self._free and self.queue and budget != 0:
+            if self._admit_ok is not None and not self._admit_ok(self.queue[0]):
+                break
             if budget is not None:
                 budget -= 1
             slot = self._free.popleft()
@@ -188,6 +197,150 @@ class SlotScheduler:
             len(st.generated) >= st.request.max_new or st.done)
 
 
+# --------------------------------------------------------------- block pool
+
+
+def prefix_keys(prompt: np.ndarray, block_size: int) -> List[bytes]:
+    """Cumulative content keys of the prompt's FULL blocks.
+
+    Key ``i`` identifies the cache content of block ``i`` — K/V entries at
+    position ``j`` depend on tokens ``[0..j]`` (hidden states are causal), so
+    the key must cover the whole prefix through block ``i``, not just that
+    block's tokens. Exact prefix bytes are used instead of a hash: collision-
+    free by construction, and at serving-trace scale the registry is tiny."""
+    t = np.ascontiguousarray(np.asarray(prompt, np.int32))
+    return [t[:(i + 1) * block_size].tobytes()
+            for i in range(t.shape[-1] // block_size)]
+
+
+class BlockAllocator:
+    """Fixed pool of KV cache blocks: free list, refcounts, a prefix-content
+    registry for cross-request sharing, and LRU eviction of cached blocks.
+
+    Block lifecycle::
+
+        free --alloc()--> private (refcount 1, mutable, unregistered)
+        private --register(key)--> shared (immutable; refcount may reach 0)
+        shared --acquire_cached(key)--> refcount += 1     (a prefix hit)
+        any --release_block()--> refcount -= 1
+            at 0: registered -> evictable LRU, unregistered -> free list
+        evictable --alloc() under pressure--> evicted (deregistered, reused)
+
+    Invariants (pinned by the property suite): every block is in exactly one
+    of {free, evictable, referenced}; a block is never handed out while
+    referenced; registered blocks are never written (writers go through
+    :meth:`writable`, which copies-on-write); eviction only happens at
+    refcount 0. Pure Python over plain data — no jax."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError(f"bad pool geometry ({num_blocks}, {block_size})")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: deque = deque(range(num_blocks))
+        self._ref = [0] * num_blocks
+        self._key_of: List[Optional[bytes]] = [None] * num_blocks
+        self._by_key: Dict[bytes, int] = {}
+        self._lru: "OrderedDict[int, None]" = OrderedDict()  # evictable
+        self.evictions = 0
+        self.cow_copies = 0
+        self.shared_hits = 0
+
+    # ------------------------------------------------------------- accounting
+
+    def available(self) -> int:
+        """Blocks allocatable right now (free + evictable cached)."""
+        return len(self._free) + len(self._lru)
+
+    def refcount(self, block: int) -> int:
+        return self._ref[block]
+
+    def registered(self, block: int) -> bool:
+        return self._key_of[block] is not None
+
+    def blocks_needed(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case private blocks for a request (no sharing assumed)."""
+        return -(-(prompt_len + max_new) // self.block_size)
+
+    # ------------------------------------------------------------- allocation
+
+    def alloc(self) -> int:
+        """A private mutable block (refcount 1). Evicts the LRU cached block
+        when the free list is empty; raises when nothing is allocatable."""
+        if self._free:
+            b = self._free.popleft()
+        elif self._lru:
+            b, _ = self._lru.popitem(last=False)
+            assert self._ref[b] == 0, "evicting a referenced block"
+            del self._by_key[self._key_of[b]]
+            self._key_of[b] = None
+            self.evictions += 1
+        else:
+            raise RuntimeError("KV block pool exhausted (no free or "
+                               "evictable blocks)")
+        assert self._ref[b] == 0, "allocating a referenced block"
+        self._ref[b] = 1
+        return b
+
+    def release_block(self, block: int) -> None:
+        assert self._ref[block] > 0, f"double-free of block {block}"
+        self._ref[block] -= 1
+        if self._ref[block] == 0:
+            if self._key_of[block] is not None:
+                self._lru[block] = None          # cached: evictable, MRU end
+            else:
+                self._free.append(block)
+
+    # ---------------------------------------------------------------- sharing
+
+    def acquire_cached(self, key: bytes) -> Optional[int]:
+        """Take a reference on the registered block for ``key``, if any."""
+        b = self._by_key.get(key)
+        if b is None:
+            return None
+        if self._ref[b] == 0:
+            del self._lru[b]
+        self._ref[b] += 1
+        self.shared_hits += 1
+        return b
+
+    def match_prefix(self, keys: Sequence[bytes]) -> List[int]:
+        """Acquire the longest registered chain of cumulative prefix keys."""
+        out: List[int] = []
+        for key in keys:
+            b = self.acquire_cached(key)
+            if b is None:
+                break
+            out.append(b)
+        return out
+
+    def register(self, key: bytes, block: int) -> bool:
+        """Publish a (full, final) prompt block for future prefix hits.
+        The block becomes immutable. No-op when the key is already
+        registered by another block (the caller's copy stays private)."""
+        assert self._ref[block] > 0, "registering an unreferenced block"
+        if key in self._by_key:
+            return False
+        assert self._key_of[block] is None, "re-registering a block"
+        self._key_of[block] = key
+        self._by_key[key] = block
+        return True
+
+    def writable(self, block: int) -> Tuple[int, bool]:
+        """Copy-on-write handshake: returns (block', copied). A private
+        mutable block comes back unchanged; a registered (immutable) or
+        multiply-referenced block is replaced by a fresh private block —
+        the caller must copy the device contents ``block -> block'`` and
+        repoint its table entry, after which this allocator drops the
+        caller's reference on the original."""
+        if self._ref[block] == 1 and self._key_of[block] is None:
+            return block, False
+        fresh = self.alloc()
+        self.release_block(block)
+        self.cow_copies += 1
+        return fresh, True
+
+
 def random_trace(n_requests: int, vocab: int, *, seed: int = 0,
                  prompt_lens: Sequence[int] = (4, 8, 16, 32),
                  max_new_range: Tuple[int, int] = (8, 64),
@@ -206,4 +359,29 @@ def random_trace(n_requests: int, vocab: int, *, seed: int = 0,
             max_new=int(rng.integers(max_new_range[0], max_new_range[1] + 1)),
             arrival=float(rng.integers(0, int(arrival_spacing * n_requests) + 1)),
             seed=1000 + rid))
+    return reqs
+
+
+def shared_prefix_trace(n_requests: int, vocab: int, *, prefix_len: int = 32,
+                        seed: int = 0,
+                        suffix_lens: Sequence[int] = (2, 4, 8),
+                        max_new_range: Tuple[int, int] = (8, 32),
+                        arrival_spacing: float = 2.0) -> List[Request]:
+    """A trace where every prompt opens with the SAME ``prefix_len`` tokens
+    (a system prompt / few-shot header) followed by a short private suffix —
+    the workload prefix sharing exists for. With block-granular sharing, all
+    requests after the first prefill only their suffix (plus at most one
+    partial block)."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, size=(prefix_len,), dtype=np.int32)
+    reqs = []
+    for rid in range(n_requests):
+        sfx = rng.integers(0, vocab, size=(int(rng.choice(list(suffix_lens))),),
+                           dtype=np.int32)
+        reqs.append(Request(
+            rid=rid,
+            prompt=np.concatenate([prefix, sfx]),
+            max_new=int(rng.integers(max_new_range[0], max_new_range[1] + 1)),
+            arrival=float(rng.integers(0, int(arrival_spacing * n_requests) + 1)),
+            seed=2000 + rid))
     return reqs

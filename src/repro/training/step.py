@@ -42,7 +42,6 @@ def make_train_step(model, opt: AdamW, grad_compress: bool = False,
     def grads_of(params, batch):
         if microbatches and microbatches > 1:
             def split(x):
-                b = x.shape[0] if x.ndim >= 1 else 0
                 mb = microbatches
                 if x.ndim >= 2 and x.shape[0] % mb == 0:
                     return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])

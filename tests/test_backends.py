@@ -13,7 +13,7 @@ from repro.backends import (
     register_backend, telemetry,
 )
 from repro.core.precision import BEST, PrecisionConfig
-from repro.core.softmax_variants import SoftmaxSpec, spec_backend
+from repro.core.softmax_variants import SoftmaxSpec
 
 INT_BACKENDS = ("int_jax", "int_pallas", "ap_sim")
 

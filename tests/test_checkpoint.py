@@ -2,7 +2,6 @@
 recovery, auto-resume."""
 
 import os
-import shutil
 
 import numpy as np
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.elastic import plan_mesh, reshard_tree, survivors_after_failure
-from repro.distributed.sharding import DEFAULT_RULES, ShardingRules, make_mesh
+from repro.distributed.sharding import ShardingRules, make_mesh
 from repro.launch.specs import sharding_for
 
 

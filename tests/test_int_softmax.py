@@ -10,7 +10,6 @@ from repro.core import (
     paper_sweep_grid, saturating_sum,
 )
 from repro.core.int_softmax import fixedpoint_div, int_exp_codes
-from repro.core.quantization import quantize_stable_scores
 
 
 def _kl(f, p):

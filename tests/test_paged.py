@@ -1,0 +1,251 @@
+"""Paged KV cache + cross-request prefix sharing: bit-exact parity with the
+contiguous-cache serve path, copy-on-write on divergent writes, pool-pressure
+eviction, and shared-prefill cost amortization.
+
+The correctness bar: ``Engine.serve(..., paged=True)`` — with or without
+``prefix_share`` — must produce EXACTLY the tokens of the non-paged serve
+(itself pinned bit-identical to per-request eager generation by
+tests/test_scheduler.py), across the dense / MLA-latent / SSM-state /
+hybrid-ring cache families and greedy/stochastic samplers. Paging is a memory
+layout change and sharing is a scheduling optimization; neither may perturb a
+single logit.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.backends.base import ZERO_COST
+from repro.configs.registry import smoke_config
+from repro.models import build_model
+from repro.models.attention import paged_gather, paged_write
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Request, shared_prefix_trace
+
+FAMILY_ARCHS = ["olmo-1b", "minicpm3-4b", "mamba2-780m", "hymba-1.5b"]
+SHARING_ARCHS = ["olmo-1b", "minicpm3-4b"]   # dense GQA + MLA latent
+
+
+def _setup(arch, **engine_kw):
+    cfg = smoke_config(arch)
+    m = build_model(cfg)
+    params, _ = m.init_split(jax.random.PRNGKey(0))
+    return cfg, m, Engine(m, params, **engine_kw)
+
+
+def _mixed_trace(vocab, seed=0, n=5):
+    rng = np.random.default_rng(seed)
+    shapes = [(4, 6, 0.0), (8, 3, 0.0), (5, 8, 1.0), (4, 2, 3.0),
+              (6, 5, 5.0)][:n]
+    return [Request(rid=i, prompt=rng.integers(0, vocab, (p,), dtype=np.int32),
+                    max_new=mn, arrival=a, seed=100 + i)
+            for i, (p, mn, a) in enumerate(shapes)]
+
+
+def _assert_same_tokens(rep_a, rep_b):
+    assert len(rep_a.results) == len(rep_b.results)
+    for a, b in zip(rep_a.results, rep_b.results):
+        assert a.rid == b.rid
+        assert np.array_equal(a.tokens, b.tokens), (a.rid, a.tokens, b.tokens)
+        assert a.done == b.done
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_paged_parity_per_cache_family(arch):
+    """Block-table-gathered attention == contiguous-cache attention, for the
+    dense / MLA-latent / SSM-state / hybrid-ring cache layouts. Sharing is
+    requested everywhere; the position-free families (ssm, hybrid) page
+    without sharing and must say so."""
+    cfg, m, eng = _setup(arch, max_new=8)
+    reqs = _mixed_trace(cfg.vocab)
+    base = eng.serve(reqs, slots=2, cache_len=16)
+    pag = eng.serve(reqs, slots=2, cache_len=16, paged=True, block_size=4,
+                    prefix_share=True)
+    _assert_same_tokens(base, pag)
+    assert pag.paged and pag.block_size == 4
+    if arch in SHARING_ARCHS:
+        assert pag.prefill_tokens + pag.shared_prefill_tokens \
+            == base.prefill_tokens
+    else:
+        assert pag.shared_prefill_tokens == 0
+        assert pag.prefill_tokens == base.prefill_tokens
+
+
+@pytest.mark.parametrize("arch", SHARING_ARCHS)
+def test_prefix_share_reduces_prefill_bit_identically(arch):
+    """The headline win: a common system prompt is prefilled once; every
+    later request only prefills its private suffix — same tokens out."""
+    cfg, m, eng = _setup(arch, max_new=6)
+    reqs = shared_prefix_trace(6, cfg.vocab, prefix_len=9, seed=1,
+                               suffix_lens=(2, 4, 7), max_new_range=(4, 6),
+                               arrival_spacing=1.0)
+    base = eng.serve(reqs, slots=2, cache_len=32)
+    pag = eng.serve(reqs, slots=2, cache_len=32, paged=True, block_size=4,
+                    prefix_share=True)
+    _assert_same_tokens(base, pag)
+    assert pag.shared_prefill_tokens > 0
+    assert pag.prefill_tokens < base.prefill_tokens
+    # every request after the first rode the shared header
+    assert sum(1 for r in pag.results if r.shared_prefix > 0) \
+        >= len(reqs) - 1
+
+
+def test_copy_on_write_on_divergent_boundary():
+    """An identical prompt matches ALL its blocks; the forced tail token
+    (admission samples from the tail prefill) then writes inside the last
+    shared block — the first divergent write must copy, not corrupt the
+    original, and outputs stay bit-identical under a stochastic sampler."""
+    cfg, m, eng = _setup("olmo-1b", max_new=6, sampler="temperature",
+                         temp=1.2)
+    rng = np.random.default_rng(3)
+    common = rng.integers(0, cfg.vocab, (8,), dtype=np.int32)  # 2 blocks @ 4
+    ext = np.concatenate([common,
+                          rng.integers(0, cfg.vocab, (3,), dtype=np.int32)])
+    reqs = [Request(rid=0, prompt=common.copy(), max_new=6, arrival=0.0,
+                    seed=11),
+            Request(rid=1, prompt=common.copy(), max_new=6, arrival=0.0,
+                    seed=22),
+            Request(rid=2, prompt=ext, max_new=6, arrival=1.0, seed=33)]
+    base = eng.serve(reqs, slots=3, cache_len=20)
+    pag = eng.serve(reqs, slots=3, cache_len=20, paged=True, block_size=4,
+                    prefix_share=True)
+    _assert_same_tokens(base, pag)
+    assert pag.cow_copies >= 1
+    by = pag.by_rid()
+    assert by[1].shared_prefix == 7          # 8-token twin, tail forced to 1
+    assert by[2].shared_prefix == 8          # extension reuses both blocks
+
+
+def test_pool_pressure_evicts_and_defers_without_corruption():
+    """A pool with zero slack: cached (refcount-0) prefix blocks must be
+    evicted to admit new work, and admission defers when not even eviction
+    can cover the worst case — outputs still bit-identical, everything
+    completes."""
+    cfg, m, eng = _setup("olmo-1b", max_new=6)
+    reqs = shared_prefix_trace(8, cfg.vocab, prefix_len=8, seed=5,
+                               suffix_lens=(4, 8), max_new_range=(4, 6),
+                               arrival_spacing=0.0)
+    base = eng.serve(reqs, slots=2, cache_len=24)
+    # n_logical = 6 -> 2 slots want 12 blocks worst-case; 10 forces the
+    # allocator to evict cached prefix/suffix blocks and defer admissions
+    pag = eng.serve(reqs, slots=2, cache_len=24, paged=True, block_size=4,
+                    num_blocks=10, prefix_share=True)
+    _assert_same_tokens(base, pag)
+    assert len(pag.results) == len(reqs)
+    assert pag.evictions > 0
+
+
+def test_paged_cost_attribution_amortizes_shared_prefill():
+    """Cost conservation survives sharing — per-request shares still sum to
+    the batch meter (nobody executed the skipped prefix prefill) — and the
+    shared requests' attributed prefill cost shrinks accordingly."""
+    from repro.core.precision import PrecisionConfig
+    from repro.core.softmax_variants import SoftmaxSpec
+    cfg = smoke_config("olmo-1b",
+                       softmax=SoftmaxSpec("int", PrecisionConfig(M=6, N=16)))
+    m = build_model(cfg)
+    params, _ = m.init_split(jax.random.PRNGKey(0))
+    eng = Engine(m, params, max_new=6)
+    reqs = shared_prefix_trace(5, cfg.vocab, prefix_len=12, seed=2,
+                               suffix_lens=(2, 4), max_new_range=(4, 6),
+                               arrival_spacing=1.0)
+    base = eng.serve(reqs, slots=2, cache_len=32, report_cost=True)
+    pag = eng.serve(reqs, slots=2, cache_len=32, paged=True, block_size=4,
+                    prefix_share=True, report_cost=True)
+    _assert_same_tokens(base, pag)
+    summed = ZERO_COST
+    for r in pag.results:
+        summed = summed + r.cost
+    assert summed.cycles == pytest.approx(pag.cost.cycles, rel=1e-9)
+    assert summed.energy_j == pytest.approx(pag.cost.energy_j, rel=1e-9)
+    # the batch spent strictly less softmax work than the private-cache run
+    assert pag.cost.cycles < base.cost.cycles
+
+
+def test_paged_write_gather_roundtrip_and_parking():
+    """Unit check of the pool primitives: per-row writes land at
+    (table[row, pos//bs], pos%bs); parked rows (pos == cache_len) and
+    sentinel table entries drop; gather reproduces the contiguous view."""
+    nb, bs, n_log, b, d = 7, 4, 3, 3, 5
+    pool = jnp.zeros((nb, bs, d), jnp.float32)
+    # row 0 -> blocks [3,1], row 1 -> [5], row 2 parked
+    table = jnp.asarray([[3, 1, nb], [5, nb, nb], [nb, nb, nb]], jnp.int32)
+    new = jnp.arange(b * d, dtype=jnp.float32).reshape(b, d) + 1.0
+    pos = jnp.asarray([5, 2, n_log * bs], jnp.int32)   # row 2 parked
+    out = paged_write(pool, table, new, pos)
+    assert np.allclose(np.asarray(out[1, 1]), np.asarray(new[0]))   # blk 1 off 1
+    assert np.allclose(np.asarray(out[5, 2]), np.asarray(new[1]))
+    assert float(jnp.abs(out).sum()) == pytest.approx(
+        float(jnp.abs(new[:2]).sum()))                  # parked row dropped
+    view = paged_gather(out, table)
+    assert view.shape == (b, n_log * bs, d)
+    assert np.allclose(np.asarray(view[0, 5]), np.asarray(new[0]))
+    assert np.allclose(np.asarray(view[1, 2]), np.asarray(new[1]))
+
+
+def test_paged_vector_pos_matches_scalar():
+    """decode_step on a paged cache accepts scalar or per-row positions and
+    produces identical logits and pool contents (the serve-step contract)."""
+    cfg, m, eng = _setup("olmo-1b", max_new=4)
+    B, P, C, bs = 2, 5, 12, 4
+    nb = B * (C // bs)
+    rng = np.random.default_rng(1)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, P)), jnp.int32)
+    from repro.models import kv_cache
+    cache = kv_cache.paged_cache_zeros(cfg, B, C, bs, nb)
+    # identity-ish block tables: row i owns blocks [3i, 3i+1, 3i+2]
+    table = jnp.arange(nb, dtype=jnp.int32).reshape(B, C // bs)
+    cache["table"] = jnp.broadcast_to(table, cache["table"].shape)
+    # install each prompt through the paged scatter, then decode both ways
+    params = eng.params
+    for i in range(B):
+        logits, sc = m.prefill(params, {"tokens": prompts[i:i + 1]},
+                               cache_len=C)
+        wpos = np.arange(P)
+        ids = np.asarray(table[i])
+        cache = kv_cache.paged_scatter(
+            cache, sc, jnp.int32(i), table[i],
+            jnp.asarray(ids[wpos // bs]), jnp.asarray(wpos % bs), 0, P)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (B, 1)), jnp.int32)
+    lg_s, c_s = m.decode_step(params, cache, {"token": tok}, jnp.int32(P))
+    lg_v, c_v = m.decode_step(params, cache, {"token": tok},
+                              jnp.full((B,), P, jnp.int32))
+    assert np.array_equal(lg_s, lg_v)
+    for a, b_ in zip(jax.tree.leaves(c_s), jax.tree.leaves(c_v)):
+        assert np.array_equal(a, b_)
+
+
+def test_paged_serve_validates_pool_and_flags():
+    """A pool that cannot fit the largest request fails loudly up front
+    (mirror of the contiguous cache_len check), and prefix sharing without
+    paging is rejected rather than silently ignored."""
+    cfg, m, eng = _setup("olmo-1b", max_new=4)
+    req = Request(rid=0, prompt=np.zeros((8,), np.int32), max_new=4)
+    with pytest.raises(ValueError, match="num_blocks"):
+        eng.serve([req], slots=2, paged=True, block_size=4, num_blocks=2)
+    with pytest.raises(ValueError, match="prefix_share"):
+        eng.serve([req], slots=2, prefix_share=True)
+
+
+def test_paged_single_compiled_step():
+    """Paged admissions (tail prefills, CoW copies, table updates) never
+    retrace the compiled serve decode step."""
+    cfg, m, eng = _setup("olmo-1b", max_new=6)
+    traces = {"n": 0}
+    orig = m.decode_step
+
+    def counting(*a, **k):
+        traces["n"] += 1
+        return orig(*a, **k)
+
+    m.decode_step = counting
+    reqs = shared_prefix_trace(8, cfg.vocab, prefix_len=8, seed=9,
+                               suffix_lens=(2, 4), max_new_range=(4, 6),
+                               arrival_spacing=1.0)
+    rep = eng.serve(reqs, slots=2, cache_len=24, paged=True, block_size=4,
+                    prefix_share=True, report_cost=True)
+    m.decode_step = orig
+    # one trace for the compiled serve step + one abstract metering trace
+    assert traces["n"] <= 2, traces["n"]
+    assert rep.steps > 0 and len(rep.results) == 8

@@ -30,7 +30,9 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.backends.base import ZERO_COST, CostReport  # noqa: E402
 from repro.backends.telemetry import SlotCostAttributor  # noqa: E402
-from repro.serving.scheduler import Request, SlotScheduler  # noqa: E402
+from repro.serving.scheduler import (  # noqa: E402
+    BlockAllocator, Request, SlotScheduler, prefix_keys,
+)
 
 SETTINGS = dict(max_examples=40, deadline=None)
 
@@ -177,6 +179,115 @@ def test_gang_mid_round_release_does_not_admit_into_running_batch():
     assert sched.active_requests() == [1]
     # B still running: the next admission round must be empty
     assert list(sched.admit()) == []
+
+
+# ----------------------------------------------------- block-pool invariants
+
+
+def _check_pool(alloc: BlockAllocator):
+    """The allocator's global invariant: every block is in exactly one of
+    {free, evictable LRU, referenced}, the registry is consistent, and
+    evictable blocks are all registered."""
+    free = set(alloc._free)
+    lru = set(alloc._lru)
+    ref = {b for b in range(alloc.num_blocks) if alloc._ref[b] > 0}
+    assert len(alloc._free) == len(free), "free list duplicates"
+    assert free | lru | ref == set(range(alloc.num_blocks))
+    assert not (free & lru) and not (free & ref) and not (lru & ref)
+    for b in lru:
+        assert alloc.registered(b), "evictable block must be registered"
+    for key, b in alloc._by_key.items():
+        assert alloc._key_of[b] == key
+    assert alloc.available() == len(free) + len(lru)
+
+
+@given(st.integers(2, 12), st.lists(st.integers(0, 4), max_size=60),
+       st.randoms(use_true_random=False))
+@settings(**SETTINGS)
+def test_block_pool_partition_under_random_ops(num_blocks, ops, rnd):
+    """Random alloc / release / register / acquire / copy-on-write streams:
+    the free/evictable/referenced partition holds after every op, a block is
+    never handed out while referenced, double-free is rejected, and eviction
+    only ever claims refcount-0 blocks (the internal asserts fire the test
+    otherwise)."""
+    alloc = BlockAllocator(num_blocks, block_size=4)
+    held = []          # our outstanding references (block ids, multiset)
+    keyno = 0
+    for op in ops:
+        if op == 0:    # alloc (may evict; may legally exhaust)
+            try:
+                b = alloc.alloc()
+                assert held.count(b) == 0, "alloc handed out a held block"
+                held.append(b)
+            except RuntimeError:
+                assert alloc.available() == 0
+        elif op == 1 and held:      # release one reference
+            b = rnd.choice(held)
+            held.remove(b)
+            alloc.release_block(b)
+        elif op == 2 and held:      # register a private block
+            b = rnd.choice(held)
+            if not alloc.registered(b) and alloc._ref[b] == 1:
+                assert alloc.register(f"k{keyno}".encode(), b)
+                keyno += 1
+        elif op == 3 and alloc._by_key:   # prefix hit on a cached block
+            key = rnd.choice(sorted(alloc._by_key))
+            b = alloc.acquire_cached(key)
+            assert b is not None and alloc._ref[b] >= 1
+            held.append(b)
+        elif op == 4 and held:      # copy-on-write handshake
+            b = rnd.choice(held)
+            try:
+                b2, copied = alloc.writable(b)
+            except RuntimeError:
+                assert alloc.available() == 0
+                continue
+            if copied:
+                held.remove(b)
+                held.append(b2)
+                assert not alloc.registered(b2) and alloc._ref[b2] == 1
+            else:
+                assert b2 == b
+                assert not alloc.registered(b) and alloc._ref[b] == 1
+        _check_pool(alloc)
+    # drain: release everything; the pool must be fully reclaimable
+    for b in held:
+        alloc.release_block(b)
+    _check_pool(alloc)
+    assert alloc.available() == alloc.num_blocks
+
+
+@given(st.integers(1, 3), st.integers(1, 6),
+       st.lists(st.integers(0, 3), min_size=1, max_size=10))
+@settings(**SETTINGS)
+def test_block_pool_double_free_and_stale_key_safety(bs, nblocks, plens):
+    """No use-after-free through the registry: once an evicted block's key
+    is gone, acquire_cached misses instead of resurrecting freed storage;
+    an extra release of a freed block asserts."""
+    alloc = BlockAllocator(nblocks, bs)
+    b = alloc.alloc()
+    alloc.register(b"key", b)
+    alloc.release_block(b)                   # cached, evictable
+    with pytest.raises(AssertionError):
+        alloc.release_block(b)               # double-free rejected
+    # exhaust the pool: the cached block is evicted last-resort
+    got = [alloc.alloc() for _ in range(nblocks)]
+    assert sorted(got) == list(range(nblocks))
+    assert alloc.acquire_cached(b"key") is None, "stale key survived eviction"
+    for g in got:
+        alloc.release_block(g)
+
+
+def test_prefix_keys_are_cumulative():
+    """Key i must witness the WHOLE prefix through block i (cache content is
+    causal), so equal blocks at different prefixes never collide."""
+    a = np.asarray([1, 2, 3, 4, 9, 9], np.int32)
+    b = np.asarray([7, 7, 3, 4, 9, 9], np.int32)
+    ka, kb = prefix_keys(a, 2), prefix_keys(b, 2)
+    assert len(ka) == 3
+    assert ka[0] != kb[0]
+    assert ka[1] != kb[1], "same block tokens, different prefix -> same key"
+    assert prefix_keys(a[:5], 2) == ka[:2]
 
 
 def test_trace_validation():
