@@ -41,6 +41,12 @@ METRICS = {
     "prefix_share.shared.tokens_per_s": ("abs", None),
     "prefix_share.speedup": ("ratio", 1.0),
     "prefix_share.prefill_reduction": ("det", None),
+    "speculative.baseline.tokens_per_s": ("abs", None),
+    "speculative.speculative.tokens_per_s": ("abs", None),
+    "speculative.speedup": ("ratio", 1.0),
+    # deterministic: greedy emissions on a fixed trace, no clock involved
+    "speculative.acceptance_rate": ("det", None),
+    "speculative.step_ratio": ("det", None),
 }
 
 
@@ -61,6 +67,16 @@ def _metrics(report: dict) -> dict:
         out["prefix_share.speedup"] = ps["speedup_tps"]
     if "prefill_reduction" in ps:
         out["prefix_share.prefill_reduction"] = ps["prefill_reduction"]
+    sp = report.get("speculative", {}).get("results", {})
+    for mode in ("baseline", "speculative"):
+        if mode in sp:
+            out[f"speculative.{mode}.tokens_per_s"] = sp[mode]["tokens_per_s"]
+    if "speedup_tps" in sp:
+        out["speculative.speedup"] = sp["speedup_tps"]
+    if "acceptance_rate" in sp:
+        out["speculative.acceptance_rate"] = sp["acceptance_rate"]
+    if "step_ratio" in sp:
+        out["speculative.step_ratio"] = sp["step_ratio"]
     return out
 
 

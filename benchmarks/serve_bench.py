@@ -21,12 +21,14 @@ import json
 import sys
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import smoke_config
+from repro.data.synthetic import SyntheticCorpus
 from repro.models import build_model
 from repro.serving.engine import Engine
-from repro.serving.scheduler import random_trace, shared_prefix_trace
+from repro.serving.scheduler import Request, random_trace, shared_prefix_trace
 
 
 def bench(arch: str, n_requests: int, slots: int, seed: int,
@@ -160,6 +162,117 @@ def bench_prefix_share(arch: str, n_requests: int, slots: int, seed: int,
             "results": out}
 
 
+def _warm_params(model, corpus, steps: int):
+    """Briefly train the smoke model on the (deterministic) chain corpus so
+    greedy generation follows the chain — the speculative bench needs a
+    model whose output is *predictable from its input stream*, which is
+    prompt-lookup decoding's target workload (summarization/code-edit style
+    copying), not a property of random-init weights."""
+    from repro.training.optimizer import AdamW, cosine_schedule
+    from repro.training.step import init_state, make_train_step
+    opt = AdamW(lr=cosine_schedule(1e-2, 10, steps))
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model, opt))
+    for i in range(steps):
+        state, _ = step_fn(state, {
+            k: jnp.asarray(v)
+            for k, v in corpus.batch(16, 64, seed=i).items()})
+    return state.params
+
+
+def lookup_trace(corpus: SyntheticCorpus, n_requests: int, *, seed: int,
+                 prompt_len: int = 24, max_new_range=(16, 32)):
+    """Input-grounded trace for the speculative bench: each prompt walks the
+    deterministic successor map far enough to sit ON one of its cycles, so
+    the model's greedy continuation repeats spans already present in the
+    prompt — exactly what the n-gram proposer looks up. Deterministic, so
+    the measured acceptance rate is a stable CI signal."""
+    succ = corpus.table[:, 0]
+    rng = np.random.default_rng(seed)
+
+    def prompt(seed_tok):
+        cur = int(seed_tok)
+        for _ in range(2 * corpus.vocab):   # burn past the rho tail
+            cur = int(succ[cur])
+        out = [cur]
+        for _ in range(prompt_len - 1):
+            out.append(int(succ[out[-1]]))
+        return np.asarray(out, np.int32)
+
+    return [Request(rid=rid, prompt=prompt(rng.integers(0, corpus.vocab)),
+                    max_new=int(rng.integers(*max_new_range)),
+                    arrival=0.0, seed=3000 + rid)
+            for rid in range(n_requests)]
+
+
+def bench_speculative(arch: str, n_requests: int, slots: int, seed: int,
+                      iters: int, draft_k: int, warm_steps: int) -> dict:
+    """Draft-and-verify vs plain continuous batching on the SAME engine,
+    trace, and (greedy) sampler — the outputs are bit-identical, so the
+    whole delta is scheduling: each verify round commits acceptance+1
+    tokens through one compiled dispatch instead of one token per step.
+    Records tokens/sec, the deterministic step counts and acceptance rate,
+    and the draft/verify AP-cost split."""
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    corpus = SyntheticCorpus(cfg.vocab, seed=1234, branching=1)
+    params = _warm_params(model, corpus, warm_steps)
+    eng = Engine(model, params, max_new=8)
+    reqs = lookup_trace(corpus, n_requests, seed=seed)
+    cache_len = max(r.prompt_len + r.max_new for r in reqs)
+
+    modes = {"baseline": {}, "speculative": dict(speculative=True,
+                                                 draft_k=draft_k)}
+    for kw in modes.values():
+        eng.serve(reqs, slots=slots, cache_len=cache_len, **kw)    # warm
+    walls = {m: [] for m in modes}
+    lats = {m: [] for m in modes}
+    reports = {}
+    for _ in range(iters):
+        for mode, kw in modes.items():
+            rep = eng.serve(reqs, slots=slots, cache_len=cache_len, **kw)
+            walls[mode].append(rep.wall_s)
+            lats[mode].extend(r.latency_s for r in rep.results)
+            reports[mode] = rep
+    for a, b in zip(reports["baseline"].results,
+                    reports["speculative"].results):
+        assert np.array_equal(a.tokens, b.tokens), \
+            f"speculative parity broke on rid {a.rid}"
+    gen_tokens = sum(r.max_new for r in reqs)
+    out = {}
+    for mode in modes:
+        rep = reports[mode]
+        wall = float(np.median(walls[mode]))
+        lat = np.asarray(lats[mode])
+        out[mode] = {
+            "steps": rep.steps,
+            "wall_s": wall,
+            "wall_s_all": walls[mode],
+            "tokens_per_s": gen_tokens / wall,
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p99_s": float(np.percentile(lat, 99)),
+        }
+        print(f"{mode:11s} steps={rep.steps:5d} "
+              f"tps={out[mode]['tokens_per_s']:8.0f} tok/s  "
+              f"p50={out[mode]['latency_p50_s'] * 1e3:7.1f} ms",
+              file=sys.stderr)
+    spec_rep = reports["speculative"]
+    out["speedup_tps"] = (out["speculative"]["tokens_per_s"]
+                          / out["baseline"]["tokens_per_s"])
+    out["step_ratio"] = (out["baseline"]["steps"]
+                         / max(out["speculative"]["steps"], 1))
+    out["acceptance_rate"] = spec_rep.acceptance_rate
+    out["drafted_tokens"] = spec_rep.drafted_tokens
+    out["accepted_tokens"] = spec_rep.accepted_tokens
+    print(f"speculative speedup {out['speedup_tps']:.2f}x tok/s, "
+          f"{out['step_ratio']:.2f}x fewer steps, "
+          f"acceptance {out['acceptance_rate']:.2f}", file=sys.stderr)
+    return {"config": {"requests": n_requests, "slots": slots, "seed": seed,
+                       "iters": iters, "draft_k": draft_k,
+                       "warm_steps": warm_steps, "draft": "ngram"},
+            "results": out}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -182,6 +295,18 @@ def main():
                     help="with --prefix-share: exit nonzero unless shared "
                          "tokens/sec >= ratio * private tokens/sec AND "
                          "sharing reduced prefilled tokens (CI gate)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="also bench n-gram draft-and-verify serving vs the "
+                         "plain engine on an input-grounded trace")
+    ap.add_argument("--draft-k", type=int, default=6,
+                    help="--speculative: draft tokens per verify round")
+    ap.add_argument("--warm-steps", type=int, default=120,
+                    help="--speculative: brief chain-corpus training so "
+                         "greedy generation is lookup-predictable")
+    ap.add_argument("--min-spec-ratio", type=float, default=0.0,
+                    help="with --speculative: exit nonzero unless "
+                         "speculative tokens/sec >= ratio * baseline AND "
+                         "drafting reduced decode steps (CI gate)")
     args = ap.parse_args()
 
     report = bench(args.arch, args.requests, args.slots, args.seed, args.iters)
@@ -189,6 +314,10 @@ def main():
         report["prefix_share"] = bench_prefix_share(
             args.arch, args.requests, args.slots, args.seed, args.iters,
             args.prefix_len, args.block_size)
+    if args.speculative:
+        report["speculative"] = bench_speculative(
+            args.arch, args.requests, args.slots, args.seed, args.iters,
+            args.draft_k, args.warm_steps)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out}")
@@ -215,6 +344,20 @@ def main():
                     "shared-prefix serving below gate: "
                     f"{ps['speedup_tps']:.2f}x < {args.min_share_ratio}x "
                     "vs private cache")
+    if args.speculative:
+        sp = report["speculative"]["results"]
+        print(f"speculative speedup: {sp['speedup_tps']:.2f}x tokens/sec "
+              f"({sp['step_ratio']:.2f}x fewer decode steps, "
+              f"acceptance {sp['acceptance_rate']:.2f})")
+        if args.min_spec_ratio > 0:
+            if sp["step_ratio"] <= 1.0:
+                raise SystemExit("speculative decoding did not reduce "
+                                 "decode steps")
+            if sp["speedup_tps"] < args.min_spec_ratio:
+                raise SystemExit(
+                    "speculative serving below gate: "
+                    f"{sp['speedup_tps']:.2f}x < {args.min_spec_ratio}x "
+                    "vs baseline")
 
 
 if __name__ == "__main__":

@@ -117,28 +117,47 @@ class SlotCostAttributor:
     ``sum(attr.report_for(r) for r in rids) == batch_total`` up to float
     rounding, because every step's report is split with exact fractions
     ``1/len(active)``.
+
+    Phase accounting: every record carries a ``kind`` ("decode" by default;
+    the speculative serving loop charges "draft" and "verify" phases, the
+    prefill path "prefill"), so draft and verify work show up separately in
+    :meth:`total_kind` while still flowing through the one batch meter —
+    the conservation invariant is per-kind-blind by construction.
     """
 
     def __init__(self):
         self._by_request: dict = {}
         self._batch_total = ZERO_COST
+        self._by_kind: dict = {}
         self._savings: dict = {}
         self._shared_tokens: dict = {}
 
-    def record_step(self, step_report: CostReport, active_requests) -> None:
+    def record_step(self, step_report: CostReport, active_requests,
+                    kind: str = "decode") -> None:
         """Charge one executed decode step to the requests that rode in it."""
         active = list(active_requests)
         if not active:
             return
         self._batch_total = self._batch_total + step_report
+        self._by_kind[kind] = self._by_kind.get(kind, ZERO_COST) + step_report
         share = step_report.scaled_f(1.0 / len(active))
         for rid in active:
             self._by_request[rid] = self._by_request.get(rid, ZERO_COST) + share
 
-    def record_request(self, rid, report: CostReport) -> None:
+    def record_request(self, rid, report: CostReport,
+                       kind: str = "prefill") -> None:
         """Charge a request-local phase (e.g. its prefill) to one request."""
         self._batch_total = self._batch_total + report
+        self._by_kind[kind] = self._by_kind.get(kind, ZERO_COST) + report
         self._by_request[rid] = self._by_request.get(rid, ZERO_COST) + report
+
+    def total_kind(self, kind: str) -> CostReport:
+        """Everything charged under one phase kind; the kinds partition the
+        batch meter: ``sum(total_kind(k) for k in kinds()) == total()``."""
+        return self._by_kind.get(kind, ZERO_COST)
+
+    def kinds(self):
+        return sorted(self._by_kind)
 
     def record_shared_prefill(self, rid, executed: CostReport,
                               saved: CostReport, shared_tokens: int) -> None:

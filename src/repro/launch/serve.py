@@ -83,9 +83,16 @@ def main():
     ap.add_argument("--prefix-share", action="store_true",
                     help="--paged: reuse resident prompt blocks across "
                          "requests with a common prefix (tail-only prefill)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="--continuous: draft-and-verify decoding (n-gram "
+                         "prompt-lookup drafts, one compiled multi-token "
+                         "verify step, exact rejection sampling)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="--speculative: draft tokens per verify round")
     args = ap.parse_args()
-    if (args.paged or args.prefix_share) and not args.continuous:
-        ap.error("--paged/--prefix-share require --continuous "
+    if (args.paged or args.prefix_share or args.speculative) \
+            and not args.continuous:
+        ap.error("--paged/--prefix-share/--speculative require --continuous "
                  "(they configure Engine.serve)")
     if args.prefix_share and not args.paged:
         ap.error("--prefix-share requires --paged (sharing points block "
@@ -146,7 +153,8 @@ def main():
                                            args.max_new))
         serve_kw = dict(slots=args.slots, policy=args.policy,
                         paged=args.paged, block_size=args.block_size,
-                        prefix_share=args.prefix_share)
+                        prefix_share=args.prefix_share,
+                        speculative=args.speculative, draft_k=args.draft_k)
         eng.serve(reqs, **serve_kw)  # compile
         rep = eng.serve(reqs, report_cost=True, **serve_kw)
         import numpy as np
@@ -156,10 +164,13 @@ def main():
                       f"(prefill {rep.prefill_tokens} tok, "
                       f"shared {rep.shared_prefill_tokens})"
                       if rep.paged else "")
+        spec_note = (f", speculative k={rep.draft_k} "
+                     f"(acceptance {rep.acceptance_rate:.2f})"
+                     if rep.speculative else "")
         print(f"{args.policy} serving: {len(reqs)} requests / {args.slots} "
               f"slots, {gen} tokens in {rep.steps} decode steps, "
               f"{rep.wall_s * 1e3:.1f} ms ({gen / rep.wall_s:.0f} tok/s)"
-              f"{paged_note}")
+              f"{paged_note}{spec_note}")
         print(f"request latency p50={np.percentile(lat, 50) * 1e3:.1f} ms "
               f"p99={np.percentile(lat, 99) * 1e3:.1f} ms")
         for r in rep.results[:3]:
@@ -170,6 +181,11 @@ def main():
                   f"lat={r.latency_s * 1e3:.1f} ms{cost}")
         if rep.cost is not None and rep.cost.cycles:
             print(f"batch softmax AP cost: {rep.cost.describe()}")
+            if rep.speculative and rep.cost_verify is not None:
+                print(f"  verify phase: {rep.cost_verify.describe()}")
+            if rep.speculative and rep.cost_draft is not None \
+                    and rep.cost_draft.cycles:
+                print(f"  draft phase: {rep.cost_draft.describe()}")
         return
     prompts = corpus.sample(args.batch, args.prompt_len, seed=777)[:, :args.prompt_len]
     mode = "eager" if args.eager else "fused"

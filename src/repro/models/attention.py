@@ -152,6 +152,49 @@ def cache_write(buf, new, cache_pos, axis: int = 1):
     return jnp.where(hit, new.astype(buf.dtype), buf)
 
 
+def cache_write_block(buf, new, cache_pos):
+    """Write a BLOCK of T entries per batch row into ``buf`` [B, L, ...] at
+    positions ``cache_pos + i`` (i < T) — the multi-token counterpart of
+    :func:`cache_write` used by the speculative verify step. ``new``
+    [B, T, ...]; ``cache_pos`` scalar or per-row [B]. Positions past the
+    buffer (parked slots at ``cache_len``, over-draft tails near the end of
+    a request's budget) drop instead of writing."""
+    b, t = new.shape[0], new.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    cols = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    return buf.at[rows, cols].set(new.astype(buf.dtype), mode="drop")
+
+
+def paged_write_block(pool, table, new, cache_pos):
+    """Multi-token :func:`paged_write`: scatter ``new`` [B, T, ...] through
+    the block table at positions ``cache_pos + i``. Rows/positions beyond
+    the table (sentinel entries, parked slots, over-draft tails) drop."""
+    nb, bs = pool.shape[:2]
+    b, n_log = table.shape
+    t = new.shape[1]
+    pos = (jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))[:, None]
+           + jnp.arange(t, dtype=jnp.int32)[None, :])            # [B, T]
+    lb, off = pos // bs, pos % bs
+    pb = jnp.take_along_axis(table, jnp.clip(lb, 0, n_log - 1), axis=1)
+    pb = jnp.where(lb >= n_log, nb, pb)
+    return pool.at[pb, off].set(new.astype(pool.dtype), mode="drop")
+
+
+def verify_mask(l_max: int, q_pos, window: int = 0):
+    """[B, T, l_max] validity for a multi-token verify step: query ``i`` of
+    row ``b`` sits at absolute position ``q_pos[b, i]`` and may attend every
+    cache position ``<= q_pos[b, i]`` (within the trailing ``window`` when
+    set) — exactly the masks T successive single-token decode steps would
+    apply, so verify attention rows match the autoregressive ones."""
+    kv = jnp.arange(l_max, dtype=jnp.int32)[None, None, :]
+    q = q_pos[:, :, None]
+    valid = kv <= q
+    if window:
+        valid &= kv > q - window
+    return valid
+
+
 def valid_upto(l_max: int, cache_pos, window: int = 0):
     """[B?, l_max] validity mask: positions <= cache_pos (and, when ``window``
     is set, within the trailing window). Supports scalar or per-row [B]
@@ -285,6 +328,88 @@ def attn_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
     out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
     y = dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
     return y, new_cache
+
+
+def attn_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
+                kind: str = "causal"):
+    """Multi-token decode for speculative verification: write K/V for all T
+    tokens at positions ``cache_pos .. cache_pos + T-1`` and attend the T
+    queries in one pass with per-query causal masking. Each query row sees
+    exactly the keys the corresponding single-token decode step would see,
+    so logits — and the written entries — match the autoregressive stream;
+    rejected tail entries are cleared afterwards by ``Model.verify_commit``.
+    ``positions`` [B, T] are the absolute positions (also the rope inputs).
+    Covers the contiguous, int8-quantized, and paged cache layouts."""
+    b, t, _ = x.shape
+    q, k_new, v_new = project_qkv(p, x, cfg, ctx, positions)
+    if "table" in cache:
+        table = cache["table"]
+        if "k_scale" in cache:
+            kq, ks = kv_quantize(k_new)
+            vq, vs = kv_quantize(v_new)
+            kp = paged_write_block(cache["k"], table, kq, cache_pos)
+            vp = paged_write_block(cache["v"], table, vq, cache_pos)
+            ksp = paged_write_block(cache["k_scale"], table, ks, cache_pos)
+            vsp = paged_write_block(cache["v_scale"], table, vs, cache_pos)
+            k = kv_dequantize(paged_gather(kp, table),
+                              paged_gather(ksp, table), ctx.dtype)
+            v = kv_dequantize(paged_gather(vp, table),
+                              paged_gather(vsp, table), ctx.dtype)
+            new_cache = {"k": kp, "v": vp, "k_scale": ksp, "v_scale": vsp,
+                         "table": table}
+        else:
+            kp = paged_write_block(cache["k"], table, k_new, cache_pos)
+            vp = paged_write_block(cache["v"], table, v_new, cache_pos)
+            k, v = paged_gather(kp, table), paged_gather(vp, table)
+            new_cache = {"k": kp, "v": vp, "table": table}
+    elif "k_scale" in cache:
+        kq, ks = kv_quantize(k_new)
+        vq, vs = kv_quantize(v_new)
+        k_codes = cache_write_block(cache["k"], kq, cache_pos)
+        v_codes = cache_write_block(cache["v"], vq, cache_pos)
+        k_sc = cache_write_block(cache["k_scale"], ks, cache_pos)
+        v_sc = cache_write_block(cache["v_scale"], vs, cache_pos)
+        k = kv_dequantize(k_codes, k_sc, ctx.dtype)
+        v = kv_dequantize(v_codes, v_sc, ctx.dtype)
+        new_cache = {"k": k_codes, "v": v_codes, "k_scale": k_sc,
+                     "v_scale": v_sc}
+    else:
+        k = cache_write_block(cache["k"], k_new, cache_pos)
+        v = cache_write_block(cache["v"], v_new, cache_pos)
+        k = ctx.shard(k, ("batch", "kv_seq", None, None))
+        v = ctx.shard(v, ("batch", "kv_seq", None, None))
+        new_cache = {"k": k, "v": v}
+    l_max = k.shape[1]
+    mask = verify_mask(l_max, positions,
+                       cfg.window if kind == "window" else 0)
+    out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
+    y = dense_apply(p["wo"], out.reshape(b, t, -1), ctx)
+    return y, new_cache
+
+
+def attn_verify_ring(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
+                     window: int):
+    """Multi-token ring decode with per-step cache snapshots (speculative
+    verify). A ring write at position q clobbers the entry from position
+    q - W, which is still inside the window of earlier positions — so a
+    rejected draft cannot be masked away like in the positional caches.
+    Instead the T tokens run through the exact single-token ring update in
+    an inner scan, emitting the cache after EVERY token; ``verify_commit``
+    restores the snapshot at the accepted depth. Returns
+    (y [B, T, d], staged {"k","v": [T, B, W, ...], "pos": [T, B, W]})."""
+    b, t, _ = x.shape
+    xs = jnp.moveaxis(x, 1, 0)[:, :, None, :]           # [T, B, 1, d]
+    ps = jnp.moveaxis(positions, 1, 0)                  # [T, B]
+
+    def step(c, xi_pi):
+        xi, pi = xi_pi
+        y, nc = attn_decode_ring(p, xi, c, pi, cfg, ctx, pi[:, None], window)
+        return nc, (y, nc)
+
+    with telemetry.repeat(t):    # body traces once, runs t times
+        _, (ys, snaps) = jax.lax.scan(step, cache, (xs, ps))
+    y = jnp.moveaxis(ys[:, :, 0, :], 0, 1)              # [B, T, d]
+    return y, snaps
 
 
 def attn_decode_ring(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,

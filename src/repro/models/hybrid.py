@@ -15,9 +15,12 @@ from __future__ import annotations
 
 import jax
 
-from repro.models.attention import attn_apply, attn_decode, attn_decode_ring, attn_init
+from repro.models.attention import (
+    attn_apply, attn_decode, attn_decode_ring, attn_init, attn_verify,
+    attn_verify_ring,
+)
 from repro.models.layers import Ctx, mlp_apply, mlp_init, norm_apply, norm_init
-from repro.models.ssm import ssm_apply, ssm_decode, ssm_init
+from repro.models.ssm import ssm_apply, ssm_decode, ssm_init, ssm_verify
 
 
 def hybrid_block_init(key, cfg):
@@ -55,6 +58,28 @@ def hybrid_block_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
         a, attn_cache = attn_decode(
             p["attn"], h, cache["attn"], cache_pos, cfg, ctx, positions)
     s, ssm_cache = ssm_decode(p["ssm"], h, cache["ssm"], cfg, ctx)
+    fused = 0.5 * (norm_apply(p["attn_norm"], a, "rmsnorm", ctx)
+                   + norm_apply(p["ssm_norm"], s, "rmsnorm", ctx))
+    x = x + fused
+    x = x + mlp_apply(p["mlp"], norm_apply(p["norm2"], x, cfg.norm, ctx), cfg.act, ctx)
+    return x, {"attn": attn_cache, "ssm": ssm_cache}
+
+
+def hybrid_block_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
+                        kind: str):
+    """Multi-token (speculative verify) hybrid step: the attention path runs
+    all T queries in one pass (full layers) or through the snapshotting ring
+    scan (window layers); the SSM path runs the snapshotting recurrence.
+    Returns (x [B, T, d], staged {"attn": ..., "ssm": snapshots})."""
+    h = norm_apply(p["norm1"], x, cfg.norm, ctx)
+    if kind == "window":
+        a, attn_cache = attn_verify_ring(
+            p["attn"], h, cache["attn"], cache_pos, cfg, ctx, positions,
+            cfg.window)
+    else:
+        a, attn_cache = attn_verify(
+            p["attn"], h, cache["attn"], cache_pos, cfg, ctx, positions)
+    s, ssm_cache = ssm_verify(p["ssm"], h, cache["ssm"], cfg, ctx)
     fused = 0.5 * (norm_apply(p["attn_norm"], a, "rmsnorm", ctx)
                    + norm_apply(p["ssm_norm"], s, "rmsnorm", ctx))
     x = x + fused

@@ -233,6 +233,70 @@ def paged_prefix_view(cache, ids, s: int):
     return out
 
 
+def commit_staged(staged, n_accept, cache_pos, t: int):
+    """Resolve a staged speculative-verify cache at accepted depth
+    ``n_accept`` [B] (see ``Model.verify_step`` for how the staged tree is
+    built). This is where the per-family layout knowledge lives:
+
+      * positional leaves — contiguous ``[L, B, C, ...]`` buffers or paged
+        pools behind a block table — hold entries for ALL t verify tokens;
+        the rejected tail (positions ``cache_pos + n_accept + 1 ..
+        cache_pos + t - 1``) is CLEARED to zero, so no drafted K/V outlives
+        its rejection and the committed cache is bit-identical to one built
+        by stepping only the accepted tokens;
+      * recurrent leaves — SSM state/conv and hybrid ring buffers, marked
+        by their ``state``/``pos`` keys — arrive as per-step snapshots
+        ``[L, T, B, ...]``; the snapshot after the last accepted token is
+        selected per row (their updates are irreversible, so rollback is
+        restore, not masking).
+
+    Out-of-range positions (parked slots at ``cache_len``, over-draft tails
+    at the end of a request's budget, sentinel table entries) drop — and a
+    paged clear can only ever land in the slot's own private blocks, since
+    decode positions sit strictly past any shared prefix."""
+    b = n_accept.shape[0]
+    pos0 = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
+    steps = jnp.arange(t, dtype=jnp.int32)
+    rej = steps[None, :] > n_accept[:, None]          # [B, T]
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    abs_pos = pos0[:, None] + steps[None, :]          # [B, T]
+    lanes = jnp.arange(b, dtype=jnp.int32)
+
+    def select(leaf):                                 # [L, T, B, ...]
+        return leaf[:, n_accept, lanes]
+
+    def clear_contig(leaf):                           # [L, B, C, ...]
+        c = leaf.shape[2]
+        cols = jnp.where(rej, abs_pos, c)             # accepted: park & drop
+        return leaf.at[:, rows, cols].set(0, mode="drop")
+
+    def clear_paged(node):                            # pools + block table
+        table = node["table"]                         # [L, S, n_log]
+        n_log = table.shape[2]
+        pool = next(v for k, v in node.items() if k != "table")
+        nb, bs = pool.shape[1], pool.shape[2]
+        lb, off = abs_pos // bs, abs_pos % bs
+        pb = jnp.take_along_axis(table[0], jnp.clip(lb, 0, n_log - 1),
+                                 axis=1)
+        pb = jnp.where(rej & (lb < n_log), pb, nb)
+        return {k: (v if k == "table"
+                    else v.at[:, pb, off].set(0, mode="drop"))
+                for k, v in node.items()}
+
+    def walk(node):
+        if not isinstance(node, dict):
+            raise TypeError(f"unexpected staged leaf {type(node)}")
+        if "state" in node or "pos" in node:          # recurrent snapshots
+            return {k: select(v) for k, v in node.items()}
+        if "table" in node:
+            return clear_paged(node)
+        if all(not isinstance(v, dict) for v in node.values()):
+            return {k: clear_contig(v) for k, v in node.items()}
+        return {k: walk(v) for k, v in node.items()}
+
+    return walk(staged)
+
+
 def cache_axes(cfg, batch: int, cache_len: int, enc_len: int = 0):
     """Logical axes tree matching cache_struct (for dry-run in_shardings)."""
     def axes_for(shape, dtype):

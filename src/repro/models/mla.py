@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from repro.backends import telemetry
 from repro.core.softmax_variants import spec_backend
 from repro.models.attention import (
-    attend_chunked, cache_write, paged_gather, paged_write, valid_upto,
+    attend_chunked, cache_write, cache_write_block, paged_gather, paged_write,
+    paged_write_block, valid_upto, verify_mask,
 )
 from repro.models.layers import Ctx, apply_rope, dense_apply, dense_init, norm_init, norm_apply
 
@@ -124,33 +125,63 @@ def mla_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
         new_cache = {"c_kv": c_pool, "k_rope": kr_pool, "table": table}
         c_kv = paged_gather(c_pool, table)
         k_rope = paged_gather(kr_pool, table)
-        return _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cache_pos, cfg,
+        mask = valid_upto(c_kv.shape[1], cache_pos)[:, None, :]
+        return _mla_attend(p, q_nope, q_rope, c_kv, k_rope, mask, cfg,
                            ctx, b, s), new_cache
     c_kv = cache_write(cache["c_kv"], c_new, cache_pos)
     k_rope = cache_write(cache["k_rope"], kr_new[:, :, 0], cache_pos)
     c_kv = ctx.shard(c_kv, ("batch", "kv_seq", None))
     k_rope = ctx.shard(k_rope, ("batch", "kv_seq", None))
-    return _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cache_pos, cfg, ctx,
+    mask = valid_upto(c_kv.shape[1], cache_pos)[:, None, :]
+    return _mla_attend(p, q_nope, q_rope, c_kv, k_rope, mask, cfg, ctx,
                        b, s), {"c_kv": c_kv, "k_rope": k_rope}
 
 
-def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cache_pos, cfg, ctx: Ctx,
+def mla_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
+    """Multi-token absorbed decode for speculative verification: write the T
+    latents at positions ``cache_pos .. cache_pos + T-1`` (contiguous or
+    through the block table) and attend all T queries with per-query causal
+    masking — each query row reproduces the single-token decode step at its
+    position. ``positions`` [B, T] absolute. Rejected tail entries are
+    cleared by ``Model.verify_commit``."""
+    b, t, _ = x.shape
+    q_nope, q_rope = _queries(p, x, cfg, ctx, positions)
+    c_new, kr_new = _latents(p, x, cfg, ctx, positions)
+    if "table" in cache:
+        table = cache["table"]
+        c_pool = paged_write_block(cache["c_kv"], table, c_new, cache_pos)
+        kr_pool = paged_write_block(cache["k_rope"], table, kr_new[:, :, 0],
+                                    cache_pos)
+        new_cache = {"c_kv": c_pool, "k_rope": kr_pool, "table": table}
+        c_kv = paged_gather(c_pool, table)
+        k_rope = paged_gather(kr_pool, table)
+    else:
+        c_kv = cache_write_block(cache["c_kv"], c_new, cache_pos)
+        k_rope = cache_write_block(cache["k_rope"], kr_new[:, :, 0], cache_pos)
+        c_kv = ctx.shard(c_kv, ("batch", "kv_seq", None))
+        k_rope = ctx.shard(k_rope, ("batch", "kv_seq", None))
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    mask = verify_mask(c_kv.shape[1], positions)
+    return _mla_attend(p, q_nope, q_rope, c_kv, k_rope, mask, cfg, ctx,
+                       b, t), new_cache
+
+
+def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, mask, cfg, ctx: Ctx,
                 b, s):
     """Absorbed attention over a contiguous latent view [B, L, r] — shared by
     the contiguous and paged (post-gather) decode paths, so both lower the
-    same einsums and stay bit-identical."""
+    same einsums and stay bit-identical. ``mask`` [B?, Sq, L] (broadcast over
+    heads)."""
     h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     r = cfg.kv_lora_rank
-    # absorb W_uk into q: q_lat [B,1,H,r]
+    # absorb W_uk into q: q_lat [B,Sq,H,r]
     wuk = ctx.cast(p["wuk"]["w"]).reshape(r, h, dn)
     q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wuk)
     scores = jnp.einsum("bqhr,blr->bhql", q_lat, ctx.cast(c_kv))
     scores = scores + jnp.einsum("bqhd,bld->bhql", q_rope, ctx.cast(k_rope))
     scores = scores.astype(jnp.float32) * ((dn + dr) ** -0.5)
     scores = ctx.shard(scores, ("batch", "heads", None, "kv_seq"))
-    l_max = c_kv.shape[1]
-    valid = valid_upto(l_max, cache_pos)
-    mask = jnp.broadcast_to(valid[:, None, None, :], scores.shape)
+    mask = jnp.broadcast_to(mask[:, None, :, :], scores.shape)
     backend = spec_backend(cfg.softmax)
     telemetry.record_softmax(backend, scores.shape, heads=h)
     w = backend.apply(scores, mask=mask).astype(ctx.dtype)

@@ -339,30 +339,86 @@ class Model:
                                           cache_pos)
         return self._head(p, x), new_cache
 
+    def verify_step(self, p, cache, batch, cache_pos):
+        """Multi-token decode for speculative verification: ``batch``
+        {"token": [B, T]} (slot 0 = the last committed token, slots 1..T-1 =
+        draft proposals) processed in ONE forward pass at positions
+        ``cache_pos .. cache_pos + T-1`` (``cache_pos`` scalar or per-row
+        [B], like ``decode_step``). Returns (logits [B, T, V],
+        staged_cache): logits[:, j] is the next-token distribution after
+        consuming token j — bit-matched to what T successive single-token
+        decode steps produce — and the staged cache holds every token's
+        entries (positional leaves fully written; recurrent leaves — SSM
+        state/conv, hybrid rings — as per-step snapshots with a leading T
+        axis). :meth:`verify_commit` resolves it once the accepted draft
+        depth is known. Families: the decoder-only lm set with
+        scalar-position rope (same coverage as ``Engine.serve``)."""
+        cfg, ctx = self.cfg, self.ctx
+        if cfg.family == "encdec" or cfg.rope_type == "mrope":
+            raise NotImplementedError(
+                "verify_step covers the decoder-only lm families "
+                "(dense/moe/mla/ssm/hybrid) with scalar-position rope")
+        b, t = batch["token"].shape
+        x = self._embed(p, {"tokens": batch["token"], **{
+            k: v for k, v in batch.items() if k != "token"}})
+        cp = jnp.asarray(cache_pos, jnp.int32)
+        pos0 = jnp.broadcast_to(cp, (b,)) if cp.ndim == 0 else cp
+        positions = pos0[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+        x, staged = self._stack_verify(p["stack"], cache, x, positions,
+                                       pos0)
+        return self._head(p, x), staged
+
+    def _stack_verify(self, sp, cache, x, positions, cache_pos):
+        return self._stack_step(sp, cache, x, positions, cache_pos,
+                                tfm.scan_verify)
+
+    def verify_commit(self, staged, n_accept, cache_pos, t: int):
+        """Resolve a staged verify cache once the accepted draft depth is
+        known. ``n_accept`` [B] int32 counts accepted draft tokens per row
+        (0..t-1; entry 0 of the verify block — the last committed token —
+        is always valid). Recurrent leaves select the snapshot after the
+        last accepted token; positional leaves CLEAR the rejected tail
+        entries (positions ``cache_pos + n_accept + 1 .. cache_pos + t-1``,
+        contiguous or through the block table), so no drafted K/V outlives
+        its rejection — the committed cache is bit-identical to one built
+        by stepping only the accepted tokens. The next write position is
+        ``cache_pos + n_accept + 1``. The per-family layout walk lives with
+        the cache layouts in :func:`repro.models.kv_cache.commit_staged`."""
+        from repro.models.kv_cache import commit_staged
+        return commit_staged(staged, n_accept, cache_pos, t)
+
     def _stack_decode(self, sp, cache, x, positions, cache_pos):
+        return self._stack_step(sp, cache, x, positions, cache_pos,
+                                tfm.scan_decode)
+
+    def _stack_step(self, sp, cache, x, positions, cache_pos, scan_fn):
+        """Family dispatch shared by single-token decode (``scan_decode``)
+        and multi-token verify (``scan_verify``): the stack layout — the
+        hybrid full/win_a/full/win_b/full ordering, the moe dense-prefix
+        split — is encoded ONCE; the two modes differ only in the scanned
+        per-layer step."""
         cfg, ctx = self.cfg, self.ctx
         if cfg.family == "ssm":
-            x, nc = tfm.scan_decode(sp["layers"], cache, x, cache_pos, cfg, ctx,
-                                    positions, "ssm")
-            return x, nc
+            return scan_fn(sp["layers"], cache, x, cache_pos, cfg, ctx,
+                           positions, "ssm")
         if cfg.family == "hybrid":
             take = lambda t, i: jax.tree.map(lambda q: q[i], t)
             new_full = []
-            x, nf = tfm.scan_decode(take(sp["full"], slice(0, 1)),
-                                    take(cache["full"], slice(0, 1)), x,
-                                    cache_pos, cfg, ctx, positions, "hybrid_full")
+            x, nf = scan_fn(take(sp["full"], slice(0, 1)),
+                            take(cache["full"], slice(0, 1)), x,
+                            cache_pos, cfg, ctx, positions, "hybrid_full")
             new_full.append(nf)
-            x, ca = tfm.scan_decode(sp["win_a"], cache["win_a"], x, cache_pos,
-                                    cfg, ctx, positions, "hybrid_win")
-            x, nf = tfm.scan_decode(take(sp["full"], slice(1, 2)),
-                                    take(cache["full"], slice(1, 2)), x,
-                                    cache_pos, cfg, ctx, positions, "hybrid_full")
+            x, ca = scan_fn(sp["win_a"], cache["win_a"], x, cache_pos,
+                            cfg, ctx, positions, "hybrid_win")
+            x, nf = scan_fn(take(sp["full"], slice(1, 2)),
+                            take(cache["full"], slice(1, 2)), x,
+                            cache_pos, cfg, ctx, positions, "hybrid_full")
             new_full.append(nf)
-            x, cb = tfm.scan_decode(sp["win_b"], cache["win_b"], x, cache_pos,
-                                    cfg, ctx, positions, "hybrid_win")
-            x, nf = tfm.scan_decode(take(sp["full"], slice(2, 3)),
-                                    take(cache["full"], slice(2, 3)), x,
-                                    cache_pos, cfg, ctx, positions, "hybrid_full")
+            x, cb = scan_fn(sp["win_b"], cache["win_b"], x, cache_pos,
+                            cfg, ctx, positions, "hybrid_win")
+            x, nf = scan_fn(take(sp["full"], slice(2, 3)),
+                            take(cache["full"], slice(2, 3)), x,
+                            cache_pos, cfg, ctx, positions, "hybrid_full")
             new_full.append(nf)
             full = jax.tree.map(lambda a, b, c: jnp.concatenate([a, b, c], 0),
                                 *new_full)
@@ -371,16 +427,15 @@ class Model:
             npre = self.cfg.n_dense_prefix
             cpre = jax.tree.map(lambda c: c[:npre], cache)
             cmain = jax.tree.map(lambda c: c[npre:], cache)
-            x, c1 = tfm.scan_decode(sp["prefix"], cpre, x, cache_pos, cfg, ctx,
-                                    positions, "dense")
-            x, c2 = tfm.scan_decode(sp["layers"], cmain, x, cache_pos, cfg, ctx,
-                                    positions, "moe")
+            x, c1 = scan_fn(sp["prefix"], cpre, x, cache_pos, cfg, ctx,
+                            positions, "dense")
+            x, c2 = scan_fn(sp["layers"], cmain, x, cache_pos, cfg, ctx,
+                            positions, "moe")
             return x, jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
                                    c1, c2)
         kind = "moe" if cfg.family == "moe" else "dense"
-        x, nc = tfm.scan_decode(sp["layers"], cache, x, cache_pos, cfg, ctx,
-                                positions, kind)
-        return x, nc
+        return scan_fn(sp["layers"], cache, x, cache_pos, cfg, ctx,
+                       positions, kind)
 
 
 def build_model(cfg: ModelConfig, rules: Optional[ShardingRules] = None,

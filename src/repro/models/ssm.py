@@ -137,6 +137,28 @@ def ssm_apply(p, x_in, cfg, ctx: Ctx, return_state: bool = False):
     return out
 
 
+def ssm_verify(p, x_in, cache, cfg, ctx: Ctx):
+    """T-token recurrent update with per-step snapshots (speculative
+    verify). The SSM state after T tokens has irreversibly folded all of
+    them in, so a rejected draft cannot be masked out the way positional
+    K/V can — instead the exact single-token recurrence runs in an inner
+    scan, emitting the cache after EVERY token; ``Model.verify_commit``
+    restores the snapshot at the accepted depth. ``x_in`` [B, T, d]
+    (already normalized). Returns (y [B, T, d],
+    staged {"state": [T, B, H, P, N], "conv": [T, B, k-1, C]})."""
+    from repro.backends import telemetry
+    t = x_in.shape[1]
+    xs = jnp.moveaxis(x_in, 1, 0)[:, :, None, :]        # [T, B, 1, d]
+
+    def step(c, xi):
+        y, nc = ssm_decode(p, xi, c, cfg, ctx)
+        return nc, (y, nc)
+
+    with telemetry.repeat(t):    # body traces once, runs t times
+        _, (ys, snaps) = jax.lax.scan(step, cache, xs)
+    return jnp.moveaxis(ys[:, :, 0, :], 0, 1), snaps    # [B, T, d]
+
+
 def ssm_decode(p, x_in, cache, cfg, ctx: Ctx):
     """One-token recurrent update. cache: {"state":[B,H,P,N], "conv":[B,k-1,C]}."""
     b, s, _ = x_in.shape  # s == 1

@@ -19,20 +19,22 @@ from repro.models.attention import (
     attn_decode,
     attn_init,
     attn_prefill_tail,
+    attn_verify,
     project_qkv,
 )
 from repro.models.hybrid import (
     hybrid_block_apply,
     hybrid_block_decode,
     hybrid_block_init,
+    hybrid_block_verify,
 )
 from repro.models.layers import (
     Ctx, Param, dense_apply, is_param, mlp_apply, mlp_init, norm_apply,
     norm_init,
 )
-from repro.models.mla import mla_apply, mla_decode, mla_init
+from repro.models.mla import mla_apply, mla_decode, mla_init, mla_verify
 from repro.models.moe import moe_apply, moe_init
-from repro.models.ssm import ssm_apply, ssm_decode, ssm_init
+from repro.models.ssm import ssm_apply, ssm_decode, ssm_init, ssm_verify
 
 
 # --------------------------------------------------------------------- blocks
@@ -97,6 +99,35 @@ def block_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions, kind: str):
         a, c = mla_decode(p["attn"], h, cache, cache_pos, cfg, ctx, positions)
     else:
         a, c = attn_decode(p["attn"], h, cache, cache_pos, cfg, ctx, positions)
+    x = x + a
+    h = norm_apply(p["norm2"], x, cfg.norm, ctx)
+    if kind == "moe":
+        y, _ = moe_apply(p["ffn"], h, cfg, ctx)
+        return x + y, c
+    return x + mlp_apply(p["ffn"], h, cfg.act, ctx), c
+
+
+def block_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions, kind: str):
+    """Multi-token (draft-verify) decode step over T tokens. Returns
+    (x, staged_cache): positional cache leaves come back with every token's
+    entry written (rejected tails are cleared later by
+    ``Model.verify_commit``); recurrent leaves (SSM state/conv, hybrid
+    rings) come back as per-step snapshots with a leading T axis.
+    ``positions`` [B, T] absolute token positions."""
+    x = ctx.shard(x, ("batch", None, None))
+    if kind == "ssm":
+        y, c = ssm_verify(p["ssm"], norm_apply(p["norm1"], x, cfg.norm, ctx),
+                          cache, cfg, ctx)
+        return x + y, c
+    if kind in ("hybrid_full", "hybrid_win"):
+        ak = "causal" if kind == "hybrid_full" else "window"
+        return hybrid_block_verify(p, x, cache, cache_pos, cfg, ctx,
+                                   positions, ak)
+    h = norm_apply(p["norm1"], x, cfg.norm, ctx)
+    if cfg.attention == "mla":
+        a, c = mla_verify(p["attn"], h, cache, cache_pos, cfg, ctx, positions)
+    else:
+        a, c = attn_verify(p["attn"], h, cache, cache_pos, cfg, ctx, positions)
     x = x + a
     h = norm_apply(p["norm2"], x, cfg.norm, ctx)
     if kind == "moe":
@@ -380,3 +411,30 @@ def scan_decode(params, caches, x, cache_pos, cfg, ctx: Ctx, positions,
     with telemetry.repeat(n):
         x, new_caches = jax.lax.scan(body, x, (params, caches))
     return x, new_caches
+
+
+def scan_verify(params, caches, x, cache_pos, cfg, ctx: Ctx, positions,
+                kind: str):
+    """Scan a stacked segment in multi-token verify mode. The emitted staged
+    caches stack per layer like ``scan_decode``'s, except recurrent leaves
+    carry the extra per-step snapshot axis: positional leaves [L, B, C, ...]
+    (or pool [L, NB, BS, ...]), recurrent leaves [L, T, B, ...]."""
+
+    def body(carry, xs):
+        layer_p, cache = xs
+        y, staged = block_verify(layer_p, carry, cache, cache_pos, cfg, ctx,
+                                 positions, kind)
+        return y, staged
+
+    n = jax.tree.leaves(params)[0].shape[0]
+    if not cfg.scan_layers:
+        outs = []
+        for i in range(n):
+            layer = jax.tree.map(lambda p: p[i], params)
+            cache = jax.tree.map(lambda c: c[i], caches)
+            x, st = body(x, (layer, cache))
+            outs.append(st)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    with telemetry.repeat(n):
+        x, staged = jax.lax.scan(body, x, (params, caches))
+    return x, staged

@@ -58,10 +58,11 @@ import numpy as np
 from repro.backends import CostReport, telemetry
 from repro.models import kv_cache
 from repro.models.model import Model
-from repro.serving.sampler import make_sampler
+from repro.serving.sampler import make_sampler, make_spec_verifier
 from repro.serving.scheduler import (
     BlockAllocator, Request, SlotScheduler, prefix_keys,
 )
+from repro.serving.speculative import make_proposer
 
 
 @dataclasses.dataclass
@@ -87,6 +88,8 @@ class RequestResult:
     latency_s: float            # wall seconds, queue entry -> completion
     cost: Optional[CostReport] = None   # this request's attributed share
     shared_prefix: int = 0      # prompt tokens served from shared blocks
+    drafted: int = 0            # speculative: draft tokens proposed
+    accepted: int = 0           # speculative: draft tokens accepted
 
 
 @dataclasses.dataclass
@@ -104,6 +107,17 @@ class ServeReport:
     shared_prefill_tokens: int = 0      # prompt tokens served from shared blocks
     cow_copies: int = 0
     evictions: int = 0
+    speculative: bool = False
+    draft_k: int = 0
+    drafted_tokens: int = 0             # draft tokens proposed (all rounds)
+    accepted_tokens: int = 0            # draft tokens the verifier accepted
+    cost_draft: Optional[CostReport] = None    # batch meter, draft phase
+    cost_verify: Optional[CostReport] = None   # batch meter, verify phase
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Accepted / proposed draft tokens (0.0 when not speculative)."""
+        return self.accepted_tokens / max(self.drafted_tokens, 1)
 
     def by_rid(self) -> Dict[int, RequestResult]:
         return {r.rid: r for r in self.results}
@@ -207,6 +221,32 @@ def make_serve_step_fn(model: Model, sample_fn: Callable,
     return serve_step
 
 
+def make_spec_step_fn(model: Model, verifier: Callable, k: int) -> Callable:
+    """Build the speculative draft-verify step: (params, cache, tok [S,1],
+    drafts [S,K], pos [S], keys [S,2]) -> (cache, out [S,K+1], n_emit [S],
+    keys).
+
+    ONE jitted dispatch per round: the K+1-token block (last committed token
+    ++ drafts) runs through ``Model.verify_step`` (all slots, all positions
+    in one forward pass), the per-slot rejection sampler turns the K+1
+    logits rows into 1..K+1 emissions, and ``Model.verify_commit`` rolls the
+    cache back to exactly the accepted depth — rejected drafts leave no K/V
+    behind in either the contiguous or the paged layout. Jit with
+    ``donate_argnums=(1,)``. Free slots ride along as dead lanes (positions
+    parked at ``cache_len``: every write drops, outputs are ignored)."""
+    t = k + 1
+
+    def spec_step(params, cache, tok, drafts, pos, keys):
+        block = jnp.concatenate([tok, drafts], axis=1)          # [S, K+1]
+        logits, staged = model.verify_step(params, cache,
+                                           {"token": block}, pos)
+        out, n_emit, keys = jax.vmap(verifier)(logits, drafts, keys)
+        cache = model.verify_commit(staged, n_emit - 1, pos, t)
+        return cache, out, n_emit, keys
+
+    return spec_step
+
+
 class Engine:
     def __init__(self, model: Model, params, max_new: int = 64,
                  sampler: str = "greedy", eos_id: Optional[int] = None,
@@ -217,6 +257,12 @@ class Engine:
         self.eos_id = eos_id
         self.pad_id = eos_id if pad_id is None else pad_id
         self.sample = make_sampler(sampler, **sampler_kw)
+        # registry samplers keep their spec around so speculative serving can
+        # derive the target distribution (callable samplers cannot be
+        # speculated against — their distribution is opaque)
+        self._sampler_kind = sampler if isinstance(sampler, str) else None
+        self._sampler_kw = dict(sampler_kw)
+        self._spec_jits: dict = {}   # draft_k -> jitted draft-verify step
         # donate the cache (arg 1): decode updates it in place; params (arg 0)
         # are reused across calls and must NOT be donated. Prefill donates
         # nothing: params are reused, the int32 token batch feeds a gather XLA
@@ -373,24 +419,43 @@ class Engine:
         return self._meter_cache[key]
 
     def _meter_serve_step(self, slots: int, cache_len: int,
-                          paged_geom=None) -> CostReport:
-        """Softmax AP cost of ONE slot-batched decode step (static shapes —
-        one abstract trace, memoized). ``paged_geom``: (block_size,
-        num_blocks) to meter the paged layout (same softmax shapes — the
-        gather materializes the same [B, C] view — but kept honest)."""
-        key = ("serve_step", slots, cache_len, paged_geom)
+                          paged_geom=None, t: int = 1) -> CostReport:
+        """Softmax AP cost of ONE slot-batched step (static shapes — one
+        abstract trace, memoized). ``t=1`` meters the plain decode step;
+        ``t>1`` meters the speculative verify step (``Model.verify_step``
+        over a ``t``-token block — the softmax rows grow from 1 to t
+        queries per head, which the meter sees through the static score
+        shapes). ``paged_geom``: (block_size, num_blocks) to meter the
+        paged layout (same softmax shapes — the gather materializes the
+        same [B, C] view — but kept honest)."""
+        key = ("serve_step", slots, cache_len, paged_geom, t)
         if key not in self._meter_cache:
             if paged_geom is None:
                 struct = kv_cache.cache_struct(self.model.cfg, slots, cache_len)
             else:
                 struct = kv_cache.paged_cache_struct(
                     self.model.cfg, slots, cache_len, *paged_geom)
+            fn = self.model.decode_step if t == 1 else self.model.verify_step
             with telemetry.collect() as acc:
-                jax.eval_shape(self.model.decode_step, self.params, struct,
-                               {"token": jnp.zeros((slots, 1), jnp.int32)},
+                jax.eval_shape(fn, self.params, struct,
+                               {"token": jnp.zeros((slots, t), jnp.int32)},
                                jnp.zeros((slots,), jnp.int32))
             self._meter_cache[key] = acc.total()
         return self._meter_cache[key]
+
+    def _get_spec_step(self, draft_k: int):
+        """The compiled draft-verify step for one draft depth (memoized —
+        shapes are static per (slots, cache_len, K), so serving any number
+        of traces shares one compilation per geometry)."""
+        if draft_k not in self._spec_jits:
+            verifier = make_spec_verifier(
+                self._sampler_kind,
+                pad_id=self.pad_id if self.pad_id is not None else 0,
+                **self._sampler_kw)
+            self._spec_jits[draft_k] = jax.jit(
+                make_spec_step_fn(self.model, verifier, draft_k),
+                donate_argnums=(1,))
+        return self._spec_jits[draft_k]
 
     def _prefix_struct(self, s: int):
         """Abstract shared-prefix pytree for metering tail-only prefill —
@@ -421,7 +486,9 @@ class Engine:
               cache_len: Optional[int] = None, policy: str = "continuous",
               report_cost: bool = False, paged: bool = False,
               block_size: int = 16, num_blocks: Optional[int] = None,
-              prefix_share: bool = False) -> ServeReport:
+              prefix_share: bool = False, speculative: bool = False,
+              draft_k: int = 4, draft: str = "ngram", max_ngram: int = 3,
+              draft_model=None, draft_params=None) -> ServeReport:
         """Continuous-batching serving over a trace of timed arrivals.
 
         Runs ONE compiled decode step (``make_serve_step_fn``) in a host
@@ -450,6 +517,23 @@ class Engine:
         state and hybrid rings are whole-prefix summaries, so those families
         page without sharing, and int8 KV is excluded because the non-paged
         parity reference attends the prefix unquantized.
+
+        ``speculative=True`` switches every active slot to draft-and-verify
+        decoding: a proposer guesses ``draft_k`` tokens per round
+        (``draft="ngram"`` — host-side prompt lookup, the default — or
+        ``draft="model"`` with a small ``draft_model``/``draft_params`` from
+        the config registry), one compiled verify step scores all K+1
+        positions at once (``Model.verify_step``), jit-safe rejection
+        sampling accepts a prefix and emits one extra token, and the cache
+        rolls back rejected positions (``Model.verify_commit``) in both the
+        contiguous and paged layouts. Greedy sampling makes the emitted
+        stream bit-identical to non-speculative serving; stochastic registry
+        samplers stay distribution-identical (deterministic-proposal
+        rejection sampling). Works with every cache family serve() covers
+        and composes with ``paged``/``prefix_share``. With ``report_cost``,
+        draft and verify phases are charged separately to the batch meter
+        (``ServeReport.cost_draft`` / ``cost_verify``; conservation across
+        per-request shares is preserved).
         """
         cfg = self.model.cfg
         if cfg.family == "encdec" or cfg.rope_type == "mrope":
@@ -495,10 +579,32 @@ class Engine:
         else:
             sched = SlotScheduler(reqs, slots, C, policy=policy)
             cache = kv_cache.cache_zeros(cfg, slots, C)
+        proposer = None
+        spec_step = None
+        if speculative:
+            if self._sampler_kind is None:
+                raise ValueError(
+                    "speculative serving needs a registry sampler (the "
+                    "verifier must know the target distribution); this "
+                    "engine was built with a callable sampler")
+            proposer = make_proposer(draft, draft_k, max_ngram=max_ngram,
+                                     draft_model=draft_model,
+                                     draft_params=draft_params)
+            if getattr(proposer, "model", None) is not None and \
+                    proposer.model.cfg.vocab != cfg.vocab:
+                raise ValueError(
+                    f"draft model vocab {proposer.model.cfg.vocab} != "
+                    f"target vocab {cfg.vocab}")
+            proposer.begin(slots, C)
+            spec_step = self._get_spec_step(draft_k)
         attr = telemetry.SlotCostAttributor() if report_cost else None
-        step_cost = (self._meter_serve_step(
-            slots, C, (block_size, num_blocks) if paged else None)
-            if report_cost else None)
+        geom = (block_size, num_blocks) if paged else None
+        step_cost = (self._meter_serve_step(slots, C, geom)
+                     if report_cost and not speculative else None)
+        verify_cost = (self._meter_serve_step(slots, C, geom, t=draft_k + 1)
+                       if report_cost and speculative else None)
+        draft_cost = (proposer.meter_round()
+                      if report_cost and speculative else None)
         slot_blocks: Dict[int, List[int]] = {}
         prefill_tok = shared_tok = 0
         shared_of: Dict[int, int] = {}
@@ -524,12 +630,15 @@ class Engine:
             if alloc is not None:
                 for b in slot_blocks.pop(slot, ()):
                     alloc.release_block(b)
+            if proposer is not None:
+                proposer.release(slot)
             results[r.rid] = RequestResult(
                 rid=r.rid, tokens=toks, prompt_len=r.prompt_len,
                 done=st.done, admitted_at=st.admitted_at, finished_at=t,
                 latency_s=time.perf_counter() - queued_wall.get(r.rid, wall0),
                 cost=attr.report_for(r.rid) if attr else None,
-                shared_prefix=shared_of.get(r.rid, 0))
+                shared_prefix=shared_of.get(r.rid, 0),
+                drafted=st.drafted, accepted=st.accepted)
 
         def install_paged(slot: int, req: Request):
             """Admit one request into the paged cache: match + refcount the
@@ -618,6 +727,9 @@ class Engine:
                 k, sub = jax.random.split(k)
                 first = int(self.sample(logits[:, -1], sub)[0])
                 done0 = self.eos_id is not None and first == self.eos_id
+                if proposer is not None:
+                    proposer.admit(slot, np.asarray(req.prompt, np.int32),
+                                   first, req.prompt_len)
                 sched.install(slot, first, done0)
                 tok[slot, 0] = first
                 pos[slot] = req.prompt_len
@@ -626,7 +738,51 @@ class Engine:
                 if sched.slot_done(slot):
                     finish(slot)
             active = sched.active_slots()
-            if active:
+            if active and speculative:
+                drafts = proposer.propose(active, tok, pos)
+                cache, out_d, n_d, keys_d = spec_step(
+                    self.params, cache, jnp.asarray(tok), jnp.asarray(drafts),
+                    jnp.asarray(pos), jnp.asarray(keys))
+                out_np = np.asarray(out_d)
+                n_np = np.asarray(n_d)
+                keys = np.array(keys_d)      # copy: host arrays stay writable
+                steps += 1
+                if attr is not None:
+                    rids = sched.active_requests()
+                    attr.record_step(verify_cost, rids, kind="verify")
+                    if draft_cost is not None:
+                        attr.record_step(draft_cost, rids, kind="draft")
+                for slot in active:
+                    st = sched.slots[slot]
+                    r = st.request
+                    n_emit = int(n_np[slot])
+                    budget = r.max_new - len(st.generated)
+                    # commit emissions host-side, truncating at EOS or the
+                    # request budget — exactly where the non-speculative
+                    # loop would have stopped stepping this slot
+                    used = 0
+                    for tk in out_np[slot, :n_emit]:
+                        st.generated.append(int(tk))
+                        used += 1
+                        if self.eos_id is not None and int(tk) == self.eos_id:
+                            st.done = True
+                            done[slot] = True
+                            break
+                        if len(st.generated) >= r.max_new:
+                            break
+                    # draft accounting counts only slots that could have
+                    # been committed (the budget cap is known up front) and
+                    # were: acceptance_rate measures useful drafting, not
+                    # verifier hits past the request's end
+                    sched.record_draft(slot, min(draft_k, budget),
+                                       min(used, n_emit - 1))
+                    proposer.observe(slot, out_np[slot, :used])
+                    tok[slot, 0] = st.generated[-1]
+                    pos[slot] += n_emit
+                    if sched.slot_done(slot):
+                        finish(slot)
+                t += 1.0
+            elif active:
                 cache, toks_d, keys_d, done_d = self._serve_step(
                     self.params, cache, jnp.asarray(tok), jnp.asarray(pos),
                     jnp.asarray(keys), jnp.asarray(done))
@@ -661,7 +817,14 @@ class Engine:
             paged=paged, block_size=block_size if paged else 0,
             prefill_tokens=prefill_tok, shared_prefill_tokens=shared_tok,
             cow_copies=alloc.cow_copies if alloc else 0,
-            evictions=alloc.evictions if alloc else 0)
+            evictions=alloc.evictions if alloc else 0,
+            speculative=speculative, draft_k=draft_k if speculative else 0,
+            drafted_tokens=sum(r.drafted for r in ordered),
+            accepted_tokens=sum(r.accepted for r in ordered),
+            cost_draft=attr.total_kind("draft") if attr and speculative
+            else None,
+            cost_verify=attr.total_kind("verify") if attr and speculative
+            else None)
 
 
 def make_serve_step(model: Model, kind: str, max_new: int = 64,

@@ -5,10 +5,20 @@ so the fused generation scan (``serving/engine.make_generate_fn``) can call
 them inside its traced step body. ``make_sampler`` selects the sampler
 *statically* (a Python-level closure, fixed before tracing); only logits and
 the PRNG key flow through the trace.
+
+Each registry sampler factors through a masked-logits transform
+(``_*_logits``): sampling is exactly ``jax.random.categorical`` over the
+transformed logits. That factorization is what speculative decoding builds
+on — :func:`make_spec_verifier` turns the same transform into the target
+distribution ``p = softmax(masked_logits)`` and runs deterministic-proposal
+rejection sampling against it (accept draft ``d`` with probability ``p(d)``;
+on rejection, resample from ``p`` with ``d`` removed and renormalized),
+which is distribution-identical to autoregressive sampling token by token.
 """
 
 from __future__ import annotations
 
+import inspect
 from typing import Callable
 
 import jax
@@ -21,18 +31,30 @@ def greedy(logits, key=None):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
+def _temperature_logits(logits, temp: float = 1.0, top_k: int = 0):
+    """Temperature scaling + exact top-k masking.
+
+    ``jax.lax.top_k`` keeps exactly ``k`` entries, ties broken by lower
+    index — a value-threshold mask (``logits < kth``) would admit every
+    token tied at the k-th value (and paid a full-vocab sort per step)."""
     logits = logits.astype(jnp.float32) / max(temp, 1e-6)
     if top_k:
         k = min(top_k, logits.shape[-1])
-        kth = jnp.sort(logits, axis=-1)[..., -k][..., None]
-        logits = jnp.where(logits < kth, NEG_INF, logits)
-    return jax.random.categorical(key, logits).astype(jnp.int32)
+        vals, idx = jax.lax.top_k(logits, k)
+        masked = jnp.full_like(logits, NEG_INF)
+        logits = jnp.put_along_axis(masked, idx, vals, axis=-1,
+                                    inplace=False)
+    return logits
 
 
-def top_p(logits, key, p: float = 0.9, temp: float = 1.0):
-    """Nucleus sampling: keep exactly the smallest prefix of the
-    probability-sorted vocab whose mass reaches ``p``, renormalize, sample.
+def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
+    return jax.random.categorical(
+        key, _temperature_logits(logits, temp, top_k)).astype(jnp.int32)
+
+
+def _top_p_logits(logits, p: float = 0.9, temp: float = 1.0):
+    """Nucleus masking: keep exactly the smallest prefix of the
+    probability-sorted vocab whose mass reaches ``p``.
 
     Jit-safe formulation: argsort descending, keep every position whose
     *exclusive* cumulative probability is still below ``p`` (the top-1 token
@@ -51,14 +73,21 @@ def top_p(logits, key, p: float = 0.9, temp: float = 1.0):
     keep_sorted = cum_exclusive < p
     inv = jnp.argsort(order, axis=-1)
     keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
-    masked = jnp.where(keep, logits, NEG_INF)
-    return jax.random.categorical(key, masked).astype(jnp.int32)
+    return jnp.where(keep, logits, NEG_INF)
 
 
+def top_p(logits, key, p: float = 0.9, temp: float = 1.0):
+    return jax.random.categorical(
+        key, _top_p_logits(logits, p, temp)).astype(jnp.int32)
+
+
+# registry: sampler name -> (sample fn, masked-logits transform). The
+# transform is None only for greedy, whose "distribution" is the argmax
+# point mass (speculative verification special-cases it for bit-exactness).
 _SAMPLERS = {
-    "greedy": lambda kw: (lambda logits, key: greedy(logits)),
-    "temperature": lambda kw: (lambda logits, key: temperature(logits, key, **kw)),
-    "top_p": lambda kw: (lambda logits, key: top_p(logits, key, **kw)),
+    "greedy": (greedy, None),
+    "temperature": (temperature, _temperature_logits),
+    "top_p": (top_p, _top_p_logits),
 }
 _SAMPLERS["nucleus"] = _SAMPLERS["top_p"]
 
@@ -67,12 +96,104 @@ def available_samplers():
     return sorted(_SAMPLERS)
 
 
+def _validate_kwargs(kind: str, fn: Callable, kw: dict) -> None:
+    """Reject options the target sampler does not take — a typoed or
+    misplaced kwarg (``make_sampler("greedy", top_k=8)``) must fail loudly,
+    not silently sample from a different distribution than requested."""
+    allowed = [name for name in inspect.signature(fn).parameters
+               if name not in ("logits", "key")]
+    unknown = sorted(set(kw) - set(allowed))
+    if unknown:
+        raise ValueError(
+            f"sampler {kind!r} got unexpected options {unknown}; "
+            f"it accepts {sorted(allowed)}")
+
+
 def make_sampler(kind="greedy", **kw) -> Callable:
     """kind: registry name, or a callable ``(logits, key) -> int32 tokens``
-    (must be jit-safe — it runs inside the fused generation scan)."""
+    (must be jit-safe — it runs inside the fused generation scan). Unknown
+    keyword options for a registry sampler raise ``ValueError``."""
     if callable(kind):
+        if kw:
+            raise ValueError("sampler options cannot be applied to a "
+                             f"callable sampler: {sorted(kw)}")
         return kind
     if kind not in _SAMPLERS:
         raise ValueError(f"unknown sampler {kind!r}; "
                          f"available: {available_samplers()}")
-    return _SAMPLERS[kind](kw)
+    fn, _ = _SAMPLERS[kind]
+    _validate_kwargs(kind, fn, kw)
+    return lambda logits, key: fn(logits, key, **kw)
+
+
+# ------------------------------------------------------- speculative verify
+
+
+def make_spec_verifier(kind="greedy", pad_id: int = 0, **kw) -> Callable:
+    """Build the jit-safe draft-verification sampler for speculative
+    decoding: ``verify(logits [T, V], drafts [T-1], key) -> (out [T] int32,
+    n_emit int32, key)``.
+
+    ``logits[j]`` is the target model's next-token distribution after
+    consuming draft position ``j`` (slot 0 = the last committed token);
+    ``drafts`` are the proposer's K = T-1 guesses. ``out[:n_emit]`` are the
+    emitted tokens — the accepted draft prefix plus one final token (the
+    bonus sample when every draft survived, or the rejection resample at
+    the first failing slot); ``out[n_emit:]`` is ``pad_id`` filler.
+
+    Greedy is exact: a draft is accepted iff it equals the argmax, so the
+    emissions are bit-identical to the autoregressive greedy stream.
+    Stochastic samplers use deterministic-proposal rejection sampling
+    against ``p = softmax(masked_logits)``: accept ``d_j`` with probability
+    ``p_j(d_j)``; on rejection sample from ``p_j`` with ``d_j`` masked out
+    (renormalized). Marginally every emitted token is an exact draw from
+    ``p_j`` — the output *distribution* matches autoregressive sampling,
+    though the PRNG stream (and hence the realized tokens for a given key)
+    differs.
+    """
+    if callable(kind):
+        raise ValueError("speculative verification needs a registry sampler "
+                         "(its target distribution must be known); got a "
+                         "callable")
+    if kind not in _SAMPLERS:
+        raise ValueError(f"unknown sampler {kind!r}; "
+                         f"available: {available_samplers()}")
+    fn, masked_fn = _SAMPLERS[kind]
+    _validate_kwargs(kind, fn, kw)
+    pad = jnp.int32(pad_id)
+
+    if masked_fn is None:          # greedy: exact prefix match + bonus
+        def verify(logits, drafts, key):
+            targets = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [T]
+            match = (drafts == targets[:-1]).astype(jnp.int32)
+            n_acc = jnp.sum(jnp.cumprod(match))          # accepted drafts
+            steps = jnp.arange(targets.shape[0], dtype=jnp.int32)
+            out = jnp.where(steps <= n_acc, targets, pad)
+            return out, n_acc + 1, key
+        return verify
+
+    def verify(logits, drafts, key):
+        t = logits.shape[0]
+        k = t - 1
+        masked = masked_fn(logits, **kw)                 # [T, V]
+        probs = jax.nn.softmax(masked, axis=-1)
+        key, k_u, k_last = jax.random.split(key, 3)
+        u = jax.random.uniform(k_u, (k,))
+        p_draft = jnp.take_along_axis(probs[:-1], drafts[:, None], 1)[:, 0]
+        acc = (u < p_draft).astype(jnp.int32)
+        n_acc = jnp.sum(jnp.cumprod(acc))                # 0..K
+        # final emission: at slot n_acc — the bonus draw from the full
+        # distribution when every draft survived, else the rejection
+        # resample with the failed draft removed and renormalized
+        last = masked[n_acc]
+        failed = drafts[jnp.minimum(n_acc, k - 1)]
+        excl = last.at[failed].set(NEG_INF)
+        last = jnp.where(n_acc < k, excl, last)
+        emit_last = jax.random.categorical(k_last, last).astype(jnp.int32)
+        steps = jnp.arange(t, dtype=jnp.int32)
+        drafts_pad = jnp.concatenate([drafts, drafts[-1:]])
+        out = jnp.where(steps < n_acc, drafts_pad,
+                        jnp.where(steps == n_acc, emit_last, pad))
+        return out, n_acc + 1, key
+
+    return verify

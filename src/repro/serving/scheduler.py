@@ -68,6 +68,10 @@ class SlotState:
     generated: List[int]          # tokens emitted so far (incl. first)
     done: bool = False            # EOS hit (emissions are pad from now on)
     admitted_at: float = 0.0
+    # speculative-decoding bookkeeping (zero when serving non-speculatively)
+    drafted: int = 0              # draft tokens proposed for this slot
+    accepted: int = 0             # draft tokens the verifier accepted
+    draft_depth: int = 0          # depth of the most recent draft round
 
 
 class SlotScheduler:
@@ -188,6 +192,17 @@ class SlotScheduler:
     def unfinished(self) -> bool:
         return bool(self._pending or self.queue
                     or any(s is not None for s in self.slots))
+
+    def record_draft(self, slot: int, proposed: int, accepted: int) -> None:
+        """Track one speculative round's per-slot draft depth and acceptance
+        (``accepted <= proposed``); the aggregate acceptance rate is the
+        serving telemetry that decides whether drafting pays off."""
+        st = self.slots[slot]
+        assert st is not None, f"draft record on free slot {slot}"
+        assert 0 <= accepted <= proposed, (slot, proposed, accepted)
+        st.drafted += int(proposed)
+        st.accepted += int(accepted)
+        st.draft_depth = int(proposed)
 
     def slot_done(self, slot: int) -> bool:
         """A slot is complete when its request's token budget is spent or its

@@ -1,0 +1,284 @@
+"""Draft proposers for speculative decoding on the serving engine.
+
+The engine's draft-and-verify loop (``Engine.serve(speculative=True)``)
+separates WHERE draft tokens come from (this module) from HOW they are
+verified (``Model.verify_step`` + the rejection sampler in
+``serving/sampler.py``). A proposer only has to be *cheap* and *often
+right* — verification makes the output distribution exact regardless of
+proposal quality, so a bad proposer costs throughput, never correctness.
+
+Two proposers:
+
+``NgramProposer`` — prompt-lookup decoding: propose the K tokens that
+    followed the most recent earlier occurrence of the current suffix
+    n-gram in the request's own token stream (prompt + accepted output).
+    Pure host-side numpy, zero device and zero AP cost; strong on
+    input-grounded generation (summarization, code edits, retrieval
+    answers) and on the repetitive continuations small models produce.
+
+``DraftModelProposer`` — classic two-model speculation: a small model from
+    the config registry greedily proposes K tokens through its own
+    slot-batched contiguous KV cache. Because the proposals are greedy and
+    the target only ever commits a *prefix* of them, the draft cache never
+    needs rollback: accepted positions already hold the right K/V, and
+    rejected positions are masked by the cache-position validity rule and
+    overwritten as positions re-advance — which is also why the draft
+    model is restricted to the positional-cache families (dense/moe/mla);
+    recurrent SSM state cannot un-consume a rejected token.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backends import CostReport, telemetry
+
+
+def ngram_propose(seq: np.ndarray, k: int, max_ngram: int = 3) -> np.ndarray:
+    """Prompt-lookup draft: find the most recent earlier occurrence of the
+    longest suffix n-gram (n = ``max_ngram`` down to 1) of ``seq`` and
+    propose the ``k`` tokens that followed it. Short continuations are
+    padded by repeating their last token; with no match at all, the last
+    token of ``seq`` is repeated (likely rejected — costs a draft slot,
+    never correctness)."""
+    seq = np.asarray(seq, np.int32)
+    n_tot = seq.shape[0]
+    for n in range(min(max_ngram, n_tot - 1), 0, -1):
+        tail = seq[n_tot - n:]
+        starts = np.flatnonzero(seq[:n_tot - n] == tail[0])
+        for i in starts[::-1]:
+            if i + n < n_tot and np.array_equal(seq[i:i + n], tail):
+                cont = seq[i + n:i + n + k]
+                out = np.empty((k,), np.int32)
+                m = cont.shape[0]
+                out[:m] = cont
+                if m < k:
+                    out[m:] = cont[-1] if m else seq[-1]
+                return out
+    return np.full((k,), seq[-1], np.int32)
+
+
+class _NgramIndex:
+    """Incremental suffix-n-gram index over one request's token stream.
+
+    For each n it remembers the (latest, previous) start positions of every
+    n-gram seen, updated in O(max_ngram) per appended token — so a propose
+    round is an O(max_ngram + k) lookup instead of rescanning the whole
+    prompt+output (which would make the host-side proposer cost quadratic
+    over a request's lifetime). ``propose`` returns exactly what
+    :func:`ngram_propose` computes on the full sequence: the latest
+    registration of the current suffix gram is the suffix itself, so the
+    *previous* one is the most recent earlier occurrence."""
+
+    def __init__(self, max_ngram: int):
+        self.max_ngram = max_ngram
+        self.toks: List[int] = []
+        self._last: List[Dict[tuple, tuple]] = [
+            {} for _ in range(max_ngram + 1)]
+
+    def extend(self, tokens) -> None:
+        for t in tokens:
+            self.toks.append(int(t))
+            n_tot = len(self.toks)
+            for n in range(1, min(self.max_ngram, n_tot) + 1):
+                d = self._last[n]
+                g = tuple(self.toks[-n:])
+                prev = d.get(g)
+                d[g] = (n_tot - n, prev[0] if prev else None)
+
+    def propose(self, k: int) -> np.ndarray:
+        toks = self.toks
+        n_tot = len(toks)
+        for n in range(min(self.max_ngram, n_tot - 1), 0, -1):
+            entry = self._last[n].get(tuple(toks[-n:]))
+            if entry is None:
+                continue
+            start = entry[1] if entry[0] == n_tot - n else entry[0]
+            if start is None:
+                continue
+            cont = toks[start + n:start + n + k]
+            out = np.empty((k,), np.int32)
+            m = len(cont)
+            out[:m] = cont
+            if m < k:
+                out[m:] = cont[-1] if m else toks[-1]
+            return out
+        return np.full((k,), toks[-1], np.int32)
+
+
+class NgramProposer:
+    """Host-side prompt-lookup drafting (no device state). The engine feeds
+    committed tokens through :meth:`observe`; each slot keeps an incremental
+    n-gram index so proposing never rescans the stream."""
+
+    kind = "ngram"
+
+    def __init__(self, k: int, max_ngram: int = 3):
+        if k < 1:
+            raise ValueError(f"draft_k must be >= 1, got {k}")
+        self.k = k
+        self.max_ngram = max_ngram
+
+    def begin(self, slots: int, cache_len: int) -> None:
+        self._slots = slots
+        self._index: Dict[int, _NgramIndex] = {}
+
+    def admit(self, slot: int, prompt: np.ndarray, first_token: int,
+              pos: int) -> None:
+        idx = _NgramIndex(self.max_ngram)
+        idx.extend(prompt)
+        idx.extend([first_token])
+        self._index[slot] = idx
+
+    def observe(self, slot: int, tokens: Sequence[int]) -> None:
+        self._index[slot].extend(tokens)
+
+    def release(self, slot: int) -> None:
+        self._index.pop(slot, None)
+
+    def meter_round(self) -> Optional[CostReport]:
+        return None     # host lookup: zero AP cost
+
+    def propose(self, active: Sequence[int], tok: np.ndarray,
+                pos: np.ndarray) -> np.ndarray:
+        out = np.zeros((self._slots, self.k), np.int32)
+        for slot in active:
+            out[slot] = self._index[slot].propose(self.k)
+        return out
+
+
+class DraftModelProposer:
+    """Greedy draft proposals from a small model sharing the target's vocab.
+
+    Owns a slot-batched contiguous cache shaped like the target's serving
+    slots and a single jitted (decode_step + argmax) function; one
+    ``propose`` round runs K of those slot-batched steps (each far cheaper
+    than a target step when the draft is small). The engine drives it with
+    its own host-side ``tok``/``pos`` state — the accepted-stream invariant
+    (draft K/V at every position < pos is correct) holds by induction
+    because accepted tokens ARE the draft's own proposals."""
+
+    kind = "draft_model"
+
+    def __init__(self, model, params, k: int):
+        if k < 1:
+            raise ValueError(f"draft_k must be >= 1, got {k}")
+        cfg = model.cfg
+        if cfg.family not in ("dense", "moe") or cfg.rope_type == "mrope":
+            raise ValueError(
+                "draft models must come from the positional-cache families "
+                "(dense/moe, incl. MLA attention) with scalar-position rope: "
+                "recurrent SSM/hybrid state cannot roll back a rejected "
+                f"draft (got family {cfg.family!r})")
+        self.model = model
+        self.params = params
+        self.k = k
+        self._cache = None
+
+        def step(p, cache, tok, pos):
+            logits, cache = model.decode_step(p, cache, {"token": tok}, pos)
+            return cache, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+
+        self._step = jax.jit(step, donate_argnums=(1,))
+        self._prefill = jax.jit(model.prefill, static_argnames=("cache_len",))
+        self._insert = jax.jit(
+            lambda cache, slot_cache, slot: jax.tree.map(
+                lambda c, s: jax.lax.dynamic_update_slice_in_dim(
+                    c, s.astype(c.dtype), slot, axis=1), cache, slot_cache),
+            donate_argnums=(0,))
+        self._meter: dict = {}
+
+    def begin(self, slots: int, cache_len: int) -> None:
+        from repro.models import kv_cache
+        self._slots, self._cache_len = slots, cache_len
+        self._cache = kv_cache.cache_zeros(self.model.cfg, slots, cache_len)
+        self._written: Dict[int, int] = {}   # per slot: positions < w written
+        self._tail: Dict[int, List[int]] = {}   # last two committed tokens
+
+    def admit(self, slot: int, prompt: np.ndarray, first_token: int,
+              pos: int) -> None:
+        _, slot_cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompt[None])},
+            cache_len=self._cache_len)
+        self._cache = self._insert(self._cache, slot_cache, jnp.int32(slot))
+        self._written[slot] = pos            # prefill covered 0 .. P-1
+        self._tail[slot] = [int(prompt[-1]), int(first_token)]
+
+    def observe(self, slot: int, tokens: Sequence[int]) -> None:
+        self._tail[slot] = (self._tail[slot] + [int(t) for t in tokens])[-2:]
+
+    def release(self, slot: int) -> None:
+        # stale rows are masked by position and re-prefilled on admit
+        self._written.pop(slot, None)
+        self._tail.pop(slot, None)
+
+    def meter_round(self) -> Optional[CostReport]:
+        """AP softmax cost of ONE propose round (K slot-batched draft decode
+        steps) — what the telemetry layer charges as 'draft' work. The
+        occasional catch-up step (at most one per round, only after a fully
+        accepted round) is folded into the same K-step estimate."""
+        key = (self._slots, self._cache_len)
+        if key not in self._meter:
+            from repro.models import kv_cache
+            struct = kv_cache.cache_struct(self.model.cfg, self._slots,
+                                           self._cache_len)
+            with telemetry.collect() as acc:
+                jax.eval_shape(
+                    self.model.decode_step, self.params, struct,
+                    {"token": jnp.zeros((self._slots, 1), jnp.int32)},
+                    jnp.zeros((self._slots,), jnp.int32))
+            self._meter[key] = acc.total().scaled(self.k)
+        return self._meter[key]
+
+    def propose(self, active: Sequence[int], tok: np.ndarray,
+                pos: np.ndarray) -> np.ndarray:
+        # catch-up: a FULLY accepted round commits K+1 tokens but the K
+        # propose steps only wrote K draft-cache entries, leaving position
+        # pos-1 (token d_K, the second-to-last committed token) unwritten —
+        # feed it now, parking the slots that need no catch-up out of
+        # range. At most one position per slot can be behind
+        # (n_emit <= K+1), so one batched step closes it.
+        behind = [s for s in active
+                  if int(pos[s]) > self._written.get(s, int(pos[s]))]
+        if behind:
+            ct = np.zeros((pos.shape[0], 1), np.int32)
+            cp = np.full((pos.shape[0],), self._cache_len, np.int32)
+            for s in behind:
+                ct[s, 0] = self._tail[s][-2]
+                cp[s] = pos[s] - 1
+            self._cache, _ = self._step(self.params, self._cache,
+                                        jnp.asarray(ct), jnp.asarray(cp))
+        cur = jnp.asarray(tok)
+        pos_d = jnp.asarray(pos)
+        outs: List[np.ndarray] = []
+        for i in range(self.k):
+            self._cache, nxt = self._step(self.params, self._cache, cur,
+                                          pos_d + i)
+            outs.append(np.asarray(nxt))
+            cur = nxt[:, None]
+        for s in active:     # [tok, d1 .. d_{K-1}] landed at pos .. pos+K-1
+            self._written[s] = int(pos[s]) + self.k
+        return np.stack(outs, axis=1).astype(np.int32)
+
+
+def make_proposer(draft: str, k: int, *, max_ngram: int = 3,
+                  draft_model=None, draft_params=None):
+    """Resolve the ``Engine.serve(draft=...)`` option: "ngram" (default) or
+    "model" (requires ``draft_model``/``draft_params``, e.g. a
+    ``smoke_config`` registry model). A ready proposer object passes
+    through."""
+    if hasattr(draft, "propose"):
+        return draft
+    if draft == "ngram":
+        return NgramProposer(k, max_ngram=max_ngram)
+    if draft == "model":
+        if draft_model is None or draft_params is None:
+            raise ValueError('draft="model" requires draft_model and '
+                             'draft_params')
+        return DraftModelProposer(draft_model, draft_params, k)
+    raise ValueError(f"unknown draft proposer {draft!r}; "
+                     "available: ngram, model")
