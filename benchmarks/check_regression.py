@@ -47,11 +47,52 @@ METRICS = {
     # deterministic: greedy emissions on a fixed trace, no clock involved
     "speculative.acceptance_rate": ("det", None),
     "speculative.step_ratio": ("det", None),
+    # paged-kernel serve comparison (serve_bench --paged --kernel pallas)
+    "paged_kernel.gather.tokens_per_s": ("abs", None),
+    "paged_kernel.pallas.tokens_per_s": ("abs", None),
+    "paged_kernel.speedup": ("abs", None),  # interpret-mode on CI: no floor
+    "paged_kernel.token_parity": ("det", None),
+    "paged_kernel.retraces_zero": ("det", None),
 }
+
+def _kind(name: str):
+    """Gate class for a metric name. Unlisted wall-clock rates (calls/sec,
+    tokens/sec — e.g. the per-context BENCH_kernels.json latency rows) are
+    noise-aware "abs": always reported, failed only under --gate-absolute;
+    everything else unlisted defaults to deterministic."""
+    if name in METRICS:
+        return METRICS[name]
+    if name.endswith("calls_per_s") or name.endswith("tokens_per_s"):
+        return ("abs", None)
+    return ("det", None)
+
+
+# BENCH_kernels.json rows: exactness is the deterministic contract; the
+# wall-clock columns are interpret-mode latencies on whatever runner produced
+# them, so they gate as "abs". Rates are calls/sec so that "higher is
+# better" holds for every gated metric.
+def _kernel_metrics(report: dict) -> dict:
+    out = {}
+    for ctx, r in report.get("paged_decode", {}).items():
+        out[f"kernels.paged.{ctx}.exact"] = float(bool(r.get("exact")))
+        if r.get("fused_us"):
+            out[f"kernels.paged.{ctx}.fused_calls_per_s"] = 1e6 / r["fused_us"]
+        if r.get("gather_us"):
+            out[f"kernels.paged.{ctx}.gather_calls_per_s"] = (
+                1e6 / r["gather_us"])
+    for row in report.get("rows", []):
+        if "exact_vs_oracle=" in row.get("derived", ""):
+            val = row["derived"].split("exact_vs_oracle=")[1].split(";")[0]
+            out[f"kernels.{row['name']}.exact"] = float(val == "True")
+    return out
 
 
 def _metrics(report: dict) -> dict:
-    """Flatten the gated metrics (higher is better for every one of them)."""
+    """Flatten the gated metrics (higher is better for every one of them).
+    Detects BENCH_kernels.json reports by shape and routes accordingly."""
+    if "paged_decode" in report or ("rows" in report
+                                    and "results" not in report):
+        return _kernel_metrics(report)
     out = {}
     r = report.get("results", {})
     for policy in ("gang", "continuous"):
@@ -77,6 +118,17 @@ def _metrics(report: dict) -> dict:
         out["speculative.acceptance_rate"] = sp["acceptance_rate"]
     if "step_ratio" in sp:
         out["speculative.step_ratio"] = sp["step_ratio"]
+    pk = report.get("paged_kernel", {}).get("results", {})
+    for mode in ("gather", "pallas"):
+        if mode in pk:
+            out[f"paged_kernel.{mode}.tokens_per_s"] = (
+                pk[mode]["tokens_per_s"])
+    if "speedup_tps" in pk:
+        out["paged_kernel.speedup"] = pk["speedup_tps"]
+    if "token_parity" in pk:
+        out["paged_kernel.token_parity"] = float(pk["token_parity"])
+    if "retraces_zero" in pk:
+        out["paged_kernel.retraces_zero"] = float(pk["retraces_zero"])
     return out
 
 
@@ -103,7 +155,7 @@ def main():
             print(f"SKIP {name}: missing from fresh run", file=sys.stderr)
             continue
         b, fr = base[name], fresh[name]
-        kind, floor = METRICS.get(name, ("det", None))
+        kind, floor = _kind(name)
         if b <= 0:
             continue
         change = fr / b - 1.0

@@ -2,7 +2,13 @@
 
 Reads artifacts/dryrun/<mesh>/<arch>__<shape>.json (produced by
 repro.launch.dryrun) and emits one row per cell with the three terms, the
-dominant bottleneck, and the useful-flops ratio.
+dominant bottleneck, and the useful-flops ratio. Also emits
+predicted-vs-measured rows for the fused paged-decode kernel: the
+``launch/roofline.paged_decode_operator`` bytes model (pages touched vs the
+3x full-logical-capacity gather) next to the measured interpret-mode walls
+from the committed ``BENCH_kernels.json`` — on CPU the measured ratio does
+NOT track the bytes ratio (the interpreter pays per-page dispatch), which is
+exactly the point of printing both columns.
 """
 
 from __future__ import annotations
@@ -12,6 +18,38 @@ import json
 import os
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+KERNELS = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
+
+# geometry of kernel_bench._paged_case, which produced the measured walls
+_PAGED_GEOM = dict(slots=2, kv_heads=2, rows=2, d_head=64, dv_head=64,
+                   block_size=64)
+
+
+def paged_rows() -> list:
+    """Predicted (bytes model) vs measured (interpret walls) paged decode."""
+    from repro.launch.roofline import paged_decode_operator
+    if not os.path.exists(KERNELS):
+        return [("roofline.paged_decode.missing", 0.0,
+                 "run benchmarks/kernel_bench.py --out BENCH_kernels.json")]
+    with open(KERNELS) as f:
+        report = json.load(f)
+    rows = []
+    for key, meas in sorted(report.get("paged_decode", {}).items(),
+                            key=lambda kv: int(kv[0][3:])):
+        ctx = int(key[3:])          # "ctx4096" -> 4096
+        nlog = ctx // _PAGED_GEOM["block_size"]
+        op = paged_decode_operator(pages_touched=nlog, n_logical=nlog,
+                                   **_PAGED_GEOM)
+        measured = (meas["gather_us"] / meas["fused_us"]
+                    if meas.get("fused_us") else float("nan"))
+        rows.append((
+            f"roofline.paged_decode.{key}", meas.get("fused_us", 0.0),
+            f"pred_bytes_ratio={op['bytes_ratio']:.2f};"
+            f"fused_MB={op['fused_bytes'] / 2**20:.2f};"
+            f"gather_MB={op['gather_bytes'] / 2**20:.2f};"
+            f"measured_wall_ratio={measured:.3f};"
+            f"exact={meas.get('exact')}"))
+    return rows
 
 
 def load(mesh: str = "single"):
@@ -41,6 +79,7 @@ def run() -> list:
     if not rows:
         rows.append(("roofline.missing", 0.0,
                      "run repro.launch.dryrun first"))
+    rows.extend(paged_rows())
     return rows
 
 

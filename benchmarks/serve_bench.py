@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import smoke_config
+from repro.core.softmax_variants import SoftmaxSpec
 from repro.data.synthetic import SyntheticCorpus
 from repro.models import build_model
 from repro.serving.engine import Engine
@@ -273,6 +274,78 @@ def bench_speculative(arch: str, n_requests: int, slots: int, seed: int,
             "results": out}
 
 
+def bench_paged_kernel(arch: str, n_requests: int, slots: int, seed: int,
+                       iters: int, block_size: int) -> dict:
+    """Fused Pallas paged-decode (``Engine.serve(kernel="pallas")``) vs the
+    gather-then-attend baseline on the SAME paged engine, trace, and greedy
+    sampler. The outputs are bit-identical by construction (the kernel's
+    contract), so ``token_parity`` and ``retraces_zero`` are deterministic
+    CI signals; the tokens/sec columns are interpret-mode walls on CPU
+    hosts, where the Pallas interpreter loses to compiled XLA gather — the
+    fused win is a bytes story (pages touched vs full logical capacity,
+    see ``launch/roofline.paged_decode_operator``) that materializes on the
+    TPU target, so the latency ratio gates only via an explicit
+    ``--min-kernel-ratio``."""
+    cfg = smoke_config(arch, softmax=SoftmaxSpec("int"))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    eng = Engine(model, params, max_new=8)
+    reqs = random_trace(n_requests, cfg.vocab, seed=seed,
+                        prompt_lens=(4, 8, 16),
+                        max_new_range=(4, 16), arrival_spacing=0.0)
+    cache_len = max(r.prompt_len + r.max_new for r in reqs)
+
+    modes = {"gather": {}, "pallas": dict(kernel="pallas")}
+    base_kw = dict(slots=slots, cache_len=cache_len, paged=True,
+                   block_size=block_size)
+    for kw in modes.values():
+        eng.serve(reqs, **base_kw, **kw)       # warm / compile
+    walls = {m: [] for m in modes}
+    lats = {m: [] for m in modes}
+    reports = {}
+    for _ in range(iters):
+        for mode, kw in modes.items():
+            rep = eng.serve(reqs, **base_kw, **kw)
+            walls[mode].append(rep.wall_s)
+            lats[mode].extend(r.latency_s for r in rep.results)
+            reports[mode] = rep
+    for a, b in zip(reports["gather"].results, reports["pallas"].results):
+        assert np.array_equal(a.tokens, b.tokens), \
+            f"pallas kernel parity broke on rid {a.rid}"
+    gen_tokens = sum(r.max_new for r in reqs)
+    out = {}
+    for mode in modes:
+        rep = reports[mode]
+        wall = float(np.median(walls[mode]))
+        lat = np.asarray(lats[mode])
+        out[mode] = {
+            "steps": rep.steps,
+            "wall_s": wall,
+            "wall_s_all": walls[mode],
+            "tokens_per_s": gen_tokens / wall,
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p99_s": float(np.percentile(lat, 99)),
+        }
+        print(f"{mode:11s} steps={rep.steps:5d} "
+              f"tps={out[mode]['tokens_per_s']:8.0f} tok/s  "
+              f"p50={out[mode]['latency_p50_s'] * 1e3:7.1f} ms",
+              file=sys.stderr)
+    out["speedup_tps"] = (out["pallas"]["tokens_per_s"]
+                          / out["gather"]["tokens_per_s"])
+    out["token_parity"] = 1.0      # the zip/assert above would have raised
+    # one compiled step for the whole serve: any mid-flight retrace would
+    # grow the pallas serve-step's jit cache past a single entry
+    out["retraces_zero"] = float(
+        eng._get_serve_step("pallas")._cache_size() <= 1)
+    print(f"pallas/gather {out['speedup_tps']:.2f}x tok/s "
+          f"(interpret-mode), parity={out['token_parity']:.0f}, "
+          f"retraces_zero={out['retraces_zero']:.0f}", file=sys.stderr)
+    return {"config": {"requests": n_requests, "slots": slots, "seed": seed,
+                       "iters": iters, "block_size": block_size,
+                       "softmax": "int", "interpret": True},
+            "results": out}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -307,6 +380,16 @@ def main():
                     help="with --speculative: exit nonzero unless "
                          "speculative tokens/sec >= ratio * baseline AND "
                          "drafting reduced decode steps (CI gate)")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="also bench the fused Pallas paged-decode kernel "
+                         "(serve kernel='pallas') vs the gather baseline "
+                         "on the paged executor")
+    ap.add_argument("--min-kernel-ratio", type=float, default=0.0,
+                    help="with --paged-kernel: exit nonzero unless pallas "
+                         "tokens/sec >= ratio * gather tokens/sec "
+                         "(leave 0 on CPU hosts: the fused column runs "
+                         "the Pallas interpreter there; token parity and "
+                         "zero-retrace always gate)")
     args = ap.parse_args()
 
     report = bench(args.arch, args.requests, args.slots, args.seed, args.iters)
@@ -318,6 +401,10 @@ def main():
         report["speculative"] = bench_speculative(
             args.arch, args.requests, args.slots, args.seed, args.iters,
             args.draft_k, args.warm_steps)
+    if args.paged_kernel:
+        report["paged_kernel"] = bench_paged_kernel(
+            args.arch, args.requests, args.slots, args.seed, args.iters,
+            args.block_size)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out}")
@@ -358,6 +445,20 @@ def main():
                     "speculative serving below gate: "
                     f"{sp['speedup_tps']:.2f}x < {args.min_spec_ratio}x "
                     "vs baseline")
+    if args.paged_kernel:
+        pk = report["paged_kernel"]["results"]
+        print(f"paged-kernel (pallas/gather): {pk['speedup_tps']:.2f}x "
+              f"tokens/sec, token_parity={pk['token_parity']:.0f}, "
+              f"retraces_zero={pk['retraces_zero']:.0f}")
+        if pk["token_parity"] < 1.0:
+            raise SystemExit("pallas kernel broke token parity vs gather")
+        if pk["retraces_zero"] < 1.0:
+            raise SystemExit("pallas serve step retraced mid-serve")
+        if args.min_kernel_ratio > 0 and \
+                pk["speedup_tps"] < args.min_kernel_ratio:
+            raise SystemExit(
+                f"pallas paged decode below gate: {pk['speedup_tps']:.2f}x "
+                f"< {args.min_kernel_ratio}x vs gather")
 
 
 if __name__ == "__main__":

@@ -67,7 +67,9 @@ def _load_builtins(strict: bool) -> bool:
         return False
     _LOADING = True
     try:
-        from repro.backends import ap_backend, jax_backends  # noqa: F401
+        from repro.backends import (  # noqa: F401
+            ap_backend, jax_backends, paged_kernel,
+        )
         return True
     except ImportError:
         if strict:

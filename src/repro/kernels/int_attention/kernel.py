@@ -15,7 +15,10 @@ Layout/tiling:
 Exactness: the integer softmax needs true row max/sum; each program holds
 full rows (all Skv columns), so outputs are bit-identical to the oracle —
 no online-rescaling approximation is involved (that trick is unsound for the
-integer exponential, see DESIGN.md).
+integer exponential, see DESIGN.md and the expanded DESIGN NOTE in
+kernels/paged_attention/kernel.py, whose paged-decode kernel inherits this
+full-row constraint and therefore sizes its VMEM score scratch to the full
+logical context).
 
 VMEM: BLK_Q=128, Skv=4096: scores 2 MB + k,v 2x1 MB(bf16 D=128) + q small
 ~= 4.5 MB. For 32k context drop BLK_Q to 16 (ops.py auto-scales).

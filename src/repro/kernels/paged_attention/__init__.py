@@ -1,0 +1,1 @@
+"""Fused paged-decode attention kernels (block-table walk, no dense gather)."""

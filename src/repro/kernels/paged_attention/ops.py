@@ -1,0 +1,102 @@
+"""Model-facing entry points for the fused paged-decode kernels.
+
+These wrappers own everything the kernels keep out of their grids: the
+model-layout <-> kernel-layout reshapes (rows are ``t * group + g`` dense,
+``t * heads + h`` MLA), the pages-per-step autotune (``choose_tiles``,
+validated against the roofline VMEM model), and the interpret default
+(interpret off TPU, like ``kernels/int_attention/ops.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionConfig
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_dense, paged_attention_mla,
+)
+from repro.launch.roofline import VMEM_BYTES, paged_tile_vmem_bytes
+
+_PPS_CANDIDATES = (8, 4, 2, 1)
+
+
+@functools.lru_cache(maxsize=None)
+def choose_tiles(rows: int, n_logical: int, block_size: int, d_head: int,
+                 dv_head: int, compute_bytes: int = 2, quant: bool = False,
+                 vmem_budget: int = VMEM_BYTES) -> int:
+    """Pick pages-per-step for the paged kernel: the largest candidate that
+    divides the block-table length AND fits the roofline VMEM model
+    (``launch/roofline.paged_tile_vmem_bytes``). Cached per static config —
+    the choice is a trace-time constant, so it can never cause a retrace
+    mid-serve. Fails loudly (instead of silently spilling) when even one
+    page per step exceeds the budget."""
+    l_full = n_logical * block_size
+    for pps in _PPS_CANDIDATES:
+        if n_logical % pps != 0:
+            continue
+        need = paged_tile_vmem_bytes(rows, l_full, block_size, d_head,
+                                     dv_head, pps, compute_bytes, quant)
+        if need <= vmem_budget:
+            return pps
+    need = paged_tile_vmem_bytes(rows, l_full, block_size, d_head, dv_head,
+                                 1, compute_bytes, quant)
+    raise ValueError(
+        f"paged-decode tile rejected by roofline VMEM model: rows={rows} "
+        f"l_full={l_full} needs {need} B at pps=1 > budget {vmem_budget} B; "
+        f"shrink the pool (num_blocks/block_size) or the verify width")
+
+
+def _interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def paged_attend_dense(q, k_pool, v_pool, table, positions,
+                       pcfg: PrecisionConfig, *, scale: float,
+                       window: int = 0, k_scale=None, v_scale=None,
+                       scores_dtype=jnp.float32, interpret=None):
+    """q [B, T, H, D] (model layout) -> [B, T, H, Dv].
+
+    ``positions`` [B, T] are the absolute query positions (decode: the
+    written ``cache_pos`` broadcast to T=1; verify: the draft positions).
+    """
+    b, t, h, d = q.shape
+    kvh = k_pool.shape[2]
+    dv = v_pool.shape[-1]
+    group = h // kvh
+    rows = t * group
+    quant = k_scale is not None
+    qk = q.reshape(b, t, kvh, group, d).transpose(0, 2, 1, 3, 4)
+    qk = qk.reshape(b, kvh, rows, d)
+    pps = choose_tiles(rows, table.shape[1], k_pool.shape[1], d, dv,
+                       jnp.dtype(q.dtype).itemsize, quant)
+    out = paged_attention_dense(
+        qk, k_pool, v_pool, table, positions.astype(jnp.int32), pcfg,
+        scale=scale, window=window, k_scale=k_scale, v_scale=v_scale,
+        scores_dtype=jnp.dtype(scores_dtype), pps=pps,
+        interpret=_interpret(interpret))
+    out = out.reshape(b, kvh, t, group, dv).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, t, h, dv)
+
+
+def paged_attend_mla(q_lat, q_rope, c_pool, kr_pool, table, positions,
+                     pcfg: PrecisionConfig, *, scale: float, interpret=None):
+    """q_lat [B, T, H, R], q_rope [B, T, H, DR] -> o_lat [B, T, H, R].
+
+    Absorbed-MLA attention over the latent pool; the ``W_uv`` up-projection
+    and output projection stay with the caller (shared with the reference)."""
+    b, t, h, r = q_lat.shape
+    dr = q_rope.shape[-1]
+    rows = t * h
+    # dv slot = R (the [L, R] latent scratch dominates, mirroring dense's V)
+    pps = choose_tiles(rows, table.shape[1], c_pool.shape[1], dr, r,
+                       jnp.dtype(q_lat.dtype).itemsize, False)
+    out = paged_attention_mla(
+        q_lat.reshape(b, rows, r), q_rope.reshape(b, rows, dr),
+        c_pool, kr_pool, table, positions.astype(jnp.int32), pcfg,
+        scale=scale, pps=pps, interpret=_interpret(interpret))
+    return out.reshape(b, t, h, r)

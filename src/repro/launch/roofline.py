@@ -105,3 +105,64 @@ def mfu_like(model_flops_global: float, flops_pd: float, n_chips: int) -> float:
     """MODEL_FLOPS / HLO_FLOPS: how much compiled compute is useful."""
     total_hlo = flops_pd * n_chips
     return model_flops_global / total_hlo if total_hlo else float("nan")
+
+
+# --------------------------------------------------------------------------
+# Paged-decode attention operator (the fused block-table kernel)
+
+VMEM_BYTES = 128 * 2 ** 20   # v5e VMEM per core; the kernel's tile budget
+
+
+def paged_tile_vmem_bytes(rows: int, l_full: int, block_size: int,
+                          d_head: int, dv_head: int, pps: int,
+                          compute_bytes: int = 2, quant: bool = False) -> int:
+    """VMEM resident per (slot, head) program of the paged-decode kernel.
+
+    scores scratch  rows * l_full * 4            (f32, full rows — no online
+                                                  rescaling, see kernel docs)
+    V scratch       l_full * dv_head * compute_bytes
+    page tiles      pps * block_size * (d_head + dv_head) * elt
+                    (+ 2 * pps * block_size * 4 scale vectors when quant)
+    q block         rows * d_head * compute_bytes
+    out block       rows * dv_head * compute_bytes
+    """
+    elt = 1 if quant else compute_bytes
+    tiles = pps * block_size * (d_head + dv_head) * elt
+    if quant:
+        tiles += 2 * pps * block_size * 4
+    return (rows * l_full * 4
+            + l_full * dv_head * compute_bytes
+            + tiles
+            + rows * (d_head + dv_head) * compute_bytes)
+
+
+def paged_decode_operator(slots: int, kv_heads: int, rows: int, d_head: int,
+                          dv_head: int, pages_touched: int, block_size: int,
+                          n_logical: int, compute_bytes: int = 2,
+                          quant: bool = False) -> Dict[str, float]:
+    """Roofline terms for one fused paged-decode step, plus the
+    gather-then-attend bytes it replaces.
+
+    The fused kernel's memory term counts only the PAGES TOUCHED — table
+    entries actually walked — not the logical capacity: per (slot, kv-head)
+    it streams ``pages_touched * block_size`` K and V rows once. The gather
+    reference instead materializes (write + re-read) the full
+    ``n_logical * block_size`` logical cache, so its bytes scale with pool
+    capacity even for mostly-empty slots.
+    """
+    elt = 1 if quant else compute_bytes
+    l_live = pages_touched * block_size
+    l_full = n_logical * block_size
+    kv_bytes = slots * kv_heads * l_live * (d_head + dv_head) * elt
+    if quant:
+        kv_bytes += 2 * slots * kv_heads * l_live * 4
+    q_o_bytes = slots * kv_heads * rows * (d_head + dv_head) * compute_bytes
+    flops = 2.0 * slots * kv_heads * rows * l_live * (d_head + dv_head)
+    terms = roofline_terms(flops, kv_bytes + q_o_bytes, 0.0)
+    # gather path: pool -> dense [S, l_full, KV, D] intermediate (write),
+    # then the attention reads it back; x3 ~= write + read K and V
+    gather = slots * kv_heads * l_full * (d_head + dv_head) * elt * 3
+    terms["fused_bytes"] = kv_bytes + q_o_bytes
+    terms["gather_bytes"] = float(gather)
+    terms["bytes_ratio"] = gather / max(kv_bytes + q_o_bytes, 1.0)
+    return terms

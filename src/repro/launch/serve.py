@@ -89,6 +89,10 @@ def main():
                          "verify step, exact rejection sampling)")
     ap.add_argument("--draft-k", type=int, default=4,
                     help="--speculative: draft tokens per verify round")
+    ap.add_argument("--kernel", default="jnp", choices=("jnp", "pallas"),
+                    help="--paged: decode-attention path; 'pallas' runs the "
+                         "fused block-table-walk kernel (bit-identical to "
+                         "the gather baseline; interpret mode off-TPU)")
     args = ap.parse_args()
     if (args.paged or args.prefix_share or args.speculative) \
             and not args.continuous:
@@ -97,6 +101,9 @@ def main():
     if args.prefix_share and not args.paged:
         ap.error("--prefix-share requires --paged (sharing points block "
                  "tables at resident pool blocks)")
+    if args.kernel != "jnp" and not args.paged:
+        ap.error("--kernel pallas requires --paged (the fused kernel walks "
+                 "the per-slot block table)")
 
     metered = get_backend(args.softmax).metered
     spec = SoftmaxSpec(args.softmax, PrecisionConfig(M=args.M, N=args.N)) \
@@ -154,7 +161,8 @@ def main():
         serve_kw = dict(slots=args.slots, policy=args.policy,
                         paged=args.paged, block_size=args.block_size,
                         prefix_share=args.prefix_share,
-                        speculative=args.speculative, draft_k=args.draft_k)
+                        speculative=args.speculative, draft_k=args.draft_k,
+                        kernel=args.kernel)
         eng.serve(reqs, **serve_kw)  # compile
         rep = eng.serve(reqs, report_cost=True, **serve_kw)
         import numpy as np

@@ -211,14 +211,21 @@ def paged_gather(pool, table):
     """Materialize a contiguous per-row view of a paged pool.
 
     ``pool`` [NB, BS, ...] (physical blocks), ``table`` [B, n_logical]
-    (physical block id per logical block; the sentinel ``NB`` marks
-    unallocated entries) -> [B, n_logical * BS, ...]. Sentinel/stale entries
-    gather arbitrary resident data — every downstream consumer masks by
-    position validity, exactly like the zero padding of the contiguous
-    cache, so the values never reach an output."""
+    (physical block id per logical block) -> [B, n_logical * BS, ...].
+
+    Sentinel contract: any table entry outside ``[0, NB)`` (the allocator's
+    ``NB`` marker, or anything stale/negative) yields an ALL-ZERO block —
+    not whatever resident block a clipped index happens to hit. Downstream
+    consumers mask by position validity anyway, but the explicit zeros make
+    the gathered view bit-identical to what the fused paged kernel streams
+    (it zeroes sentinel tiles the same way), including on parked rows whose
+    validity mask covers the whole (empty) cache."""
     nb, bs = pool.shape[:2]
     pages = jnp.take(pool, jnp.clip(table, 0, nb - 1), axis=0)
     b, n = table.shape
+    dead = (table < 0) | (table >= nb)
+    pages = jnp.where(dead.reshape(b, n, *([1] * (pages.ndim - 2))),
+                      jnp.zeros((), pool.dtype), pages)
     return pages.reshape((b, n * bs) + pool.shape[2:])
 
 
@@ -236,32 +243,77 @@ def paged_write(pool, table, new, cache_pos):
     return pool.at[pb, off].set(new.astype(pool.dtype), mode="drop")
 
 
+def _attend_paged_fused(p, q, new_cache, positions, cfg, ctx: Ctx, kind,
+                        backend):
+    """Attend straight against the paged pools via the block-table-walking
+    Pallas kernel (``kernels/paged_attention``) — no dense gather. Bit-exact
+    vs gather + ``backend.apply``; see the kernel module docstring for the
+    rounding contract. ``positions`` [B, T] absolute query positions."""
+    from repro.kernels.paged_attention import ops as paged_ops
+
+    b, t, h, dh = q.shape
+    table = new_cache["table"]
+    kvh = new_cache["k"].shape[2]
+    l_max = table.shape[1] * new_cache["k"].shape[1]
+    # same score shape/heads the gather path records — metering is invariant
+    # to the execution substrate
+    telemetry.record_softmax(backend, (b, kvh, h // kvh, t, l_max),
+                             heads=kvh * (h // kvh))
+    quant = "k_scale" in new_cache
+    out = paged_ops.paged_attend_dense(
+        q,
+        new_cache["k"] if quant else new_cache["k"].astype(q.dtype),
+        new_cache["v"] if quant else new_cache["v"].astype(q.dtype),
+        table, positions, backend.cfg,
+        scale=dh ** -0.5,
+        window=cfg.window if kind == "window" else 0,
+        k_scale=new_cache.get("k_scale"), v_scale=new_cache.get("v_scale"),
+        scores_dtype=jnp.dtype(cfg.scores_dtype))
+    return dense_apply(p["wo"], out.reshape(b, t, -1), ctx)
+
+
 def _attn_decode_paged(p, x, cache, cache_pos, cfg, ctx: Ctx, positions, kind):
     """Paged single-token decode: scatter the new K/V through the block
-    table, gather the whole logical cache back for attention. The gathered
-    [B, C, KV, D] holds exactly the values the contiguous path holds at
-    every valid position, so scores — and outputs — are bit-identical."""
+    table, then attend. The reference path gathers the whole logical cache
+    back ([B, C, KV, D] holds exactly the values the contiguous path holds
+    at every valid position, so scores — and outputs — are bit-identical);
+    backends advertising ``fused_paged_decode`` skip the gather and walk the
+    block table in a fused kernel instead, bit-identical to the reference."""
     b, s, _ = x.shape  # s == 1
     q, k_new, v_new = project_qkv(p, x, cfg, ctx, positions)
     table = cache["table"]
     if "k_scale" in cache:
         kq, ks = kv_quantize(k_new)
         vq, vs = kv_quantize(v_new)
-        kp = paged_write(cache["k"], table, kq[:, 0], cache_pos)
-        vp = paged_write(cache["v"], table, vq[:, 0], cache_pos)
-        ksp = paged_write(cache["k_scale"], table, ks[:, 0], cache_pos)
-        vsp = paged_write(cache["v_scale"], table, vs[:, 0], cache_pos)
-        k = kv_dequantize(paged_gather(kp, table), paged_gather(ksp, table),
-                          ctx.dtype)
-        v = kv_dequantize(paged_gather(vp, table), paged_gather(vsp, table),
-                          ctx.dtype)
-        new_cache = {"k": kp, "v": vp, "k_scale": ksp, "v_scale": vsp,
-                     "table": table}
+        new_cache = {
+            "k": paged_write(cache["k"], table, kq[:, 0], cache_pos),
+            "v": paged_write(cache["v"], table, vq[:, 0], cache_pos),
+            "k_scale": paged_write(cache["k_scale"], table, ks[:, 0],
+                                   cache_pos),
+            "v_scale": paged_write(cache["v_scale"], table, vs[:, 0],
+                                   cache_pos),
+            "table": table}
     else:
-        kp = paged_write(cache["k"], table, k_new[:, 0], cache_pos)
-        vp = paged_write(cache["v"], table, v_new[:, 0], cache_pos)
-        k, v = paged_gather(kp, table), paged_gather(vp, table)
-        new_cache = {"k": kp, "v": vp, "table": table}
+        new_cache = {
+            "k": paged_write(cache["k"], table, k_new[:, 0], cache_pos),
+            "v": paged_write(cache["v"], table, v_new[:, 0], cache_pos),
+            "table": table}
+    backend = spec_backend(cfg.softmax)
+    if getattr(backend, "fused_paged_decode", False):
+        pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32),
+                               (b,))[:, None]
+        return _attend_paged_fused(p, q, new_cache, pos, cfg, ctx, kind,
+                                   backend), new_cache
+    if "k_scale" in cache:
+        k = kv_dequantize(paged_gather(new_cache["k"], table),
+                          paged_gather(new_cache["k_scale"], table),
+                          ctx.dtype)
+        v = kv_dequantize(paged_gather(new_cache["v"], table),
+                          paged_gather(new_cache["v_scale"], table),
+                          ctx.dtype)
+    else:
+        k = paged_gather(new_cache["k"], table)
+        v = paged_gather(new_cache["v"], table)
     l_max = k.shape[1]
     valid = valid_upto(l_max, cache_pos,
                        cfg.window if kind == "window" else 0)
@@ -351,17 +403,26 @@ def attn_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
             vp = paged_write_block(cache["v"], table, vq, cache_pos)
             ksp = paged_write_block(cache["k_scale"], table, ks, cache_pos)
             vsp = paged_write_block(cache["v_scale"], table, vs, cache_pos)
-            k = kv_dequantize(paged_gather(kp, table),
-                              paged_gather(ksp, table), ctx.dtype)
-            v = kv_dequantize(paged_gather(vp, table),
-                              paged_gather(vsp, table), ctx.dtype)
             new_cache = {"k": kp, "v": vp, "k_scale": ksp, "v_scale": vsp,
                          "table": table}
         else:
             kp = paged_write_block(cache["k"], table, k_new, cache_pos)
             vp = paged_write_block(cache["v"], table, v_new, cache_pos)
-            k, v = paged_gather(kp, table), paged_gather(vp, table)
             new_cache = {"k": kp, "v": vp, "table": table}
+        backend = spec_backend(cfg.softmax)
+        if getattr(backend, "fused_paged_decode", False):
+            # verify rows are just decode rows at T positions: the same
+            # fused kernel covers the K+1 block with per-row masking
+            return _attend_paged_fused(p, q, new_cache,
+                                       positions.astype(jnp.int32), cfg,
+                                       ctx, kind, backend), new_cache
+        if "k_scale" in cache:
+            k = kv_dequantize(paged_gather(kp, table),
+                              paged_gather(ksp, table), ctx.dtype)
+            v = kv_dequantize(paged_gather(vp, table),
+                              paged_gather(vsp, table), ctx.dtype)
+        else:
+            k, v = paged_gather(kp, table), paged_gather(vp, table)
     elif "k_scale" in cache:
         kq, ks = kv_quantize(k_new)
         vq, vs = kv_quantize(v_new)

@@ -123,6 +123,13 @@ def mla_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
         c_pool = paged_write(cache["c_kv"], table, c_new[:, 0], cache_pos)
         kr_pool = paged_write(cache["k_rope"], table, kr_new[:, 0, 0], cache_pos)
         new_cache = {"c_kv": c_pool, "k_rope": kr_pool, "table": table}
+        backend = spec_backend(cfg.softmax)
+        if getattr(backend, "fused_paged_decode", False):
+            pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32),
+                                   (b,))[:, None]
+            return _mla_attend_paged_fused(p, q_nope, q_rope, new_cache,
+                                           pos, cfg, ctx, backend, b,
+                                           s), new_cache
         c_kv = paged_gather(c_pool, table)
         k_rope = paged_gather(kr_pool, table)
         mask = valid_upto(c_kv.shape[1], cache_pos)[:, None, :]
@@ -153,6 +160,11 @@ def mla_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
         kr_pool = paged_write_block(cache["k_rope"], table, kr_new[:, :, 0],
                                     cache_pos)
         new_cache = {"c_kv": c_pool, "k_rope": kr_pool, "table": table}
+        backend = spec_backend(cfg.softmax)
+        if getattr(backend, "fused_paged_decode", False):
+            return _mla_attend_paged_fused(p, q_nope, q_rope, new_cache,
+                                           positions, cfg, ctx, backend, b,
+                                           t), new_cache
         c_kv = paged_gather(c_pool, table)
         k_rope = paged_gather(kr_pool, table)
     else:
@@ -166,17 +178,51 @@ def mla_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
                        b, t), new_cache
 
 
+def _absorb_queries(p, q_nope, cfg, ctx: Ctx):
+    """Fold W_uk into the query: q_lat [B,Sq,H,r]. Shared by the reference
+    (post-gather) and fused paged attends — same einsum, same rounding."""
+    h, dn = cfg.n_heads, cfg.qk_nope_dim
+    wuk = ctx.cast(p["wuk"]["w"]).reshape(cfg.kv_lora_rank, h, dn)
+    return jnp.einsum("bqhd,rhd->bqhr", q_nope, wuk)
+
+
+def _mla_output(p, o_lat, cfg, ctx: Ctx, b, s):
+    """Up-project the latent attention output through W_uv and the output
+    projection — shared tail of the reference and fused paths."""
+    h, dv = cfg.n_heads, cfg.v_head_dim
+    wuv = ctx.cast(p["wuv"]["w"]).reshape(cfg.kv_lora_rank, h, dv)
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wuv)
+    return dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+
+
+def _mla_attend_paged_fused(p, q_nope, q_rope, new_cache, positions, cfg,
+                            ctx: Ctx, backend, b, s):
+    """Absorbed attention straight against the paged latent pools via the
+    block-table-walking Pallas kernel — no dense gather. Bit-exact vs
+    gather + ``_mla_attend`` (the kernel reproduces the two-dot "semi"
+    rounding of the score sum; see its module docstring)."""
+    from repro.kernels.paged_attention import ops as paged_ops
+
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    table = new_cache["table"]
+    l_max = table.shape[1] * new_cache["c_kv"].shape[1]
+    q_lat = _absorb_queries(p, q_nope, cfg, ctx)
+    telemetry.record_softmax(backend, (b, h, s, l_max), heads=h)
+    o_lat = paged_ops.paged_attend_mla(
+        q_lat, q_rope, ctx.cast(new_cache["c_kv"]),
+        ctx.cast(new_cache["k_rope"]), table, positions.astype(jnp.int32),
+        backend.cfg, scale=(dn + dr) ** -0.5)
+    return _mla_output(p, o_lat, cfg, ctx, b, s)
+
+
 def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, mask, cfg, ctx: Ctx,
                 b, s):
     """Absorbed attention over a contiguous latent view [B, L, r] — shared by
     the contiguous and paged (post-gather) decode paths, so both lower the
     same einsums and stay bit-identical. ``mask`` [B?, Sq, L] (broadcast over
     heads)."""
-    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
-    r = cfg.kv_lora_rank
-    # absorb W_uk into q: q_lat [B,Sq,H,r]
-    wuk = ctx.cast(p["wuk"]["w"]).reshape(r, h, dn)
-    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wuk)
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q_lat = _absorb_queries(p, q_nope, cfg, ctx)
     scores = jnp.einsum("bqhr,blr->bhql", q_lat, ctx.cast(c_kv))
     scores = scores + jnp.einsum("bqhd,bld->bhql", q_rope, ctx.cast(k_rope))
     scores = scores.astype(jnp.float32) * ((dn + dr) ** -0.5)
@@ -186,6 +232,4 @@ def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, mask, cfg, ctx: Ctx,
     telemetry.record_softmax(backend, scores.shape, heads=h)
     w = backend.apply(scores, mask=mask).astype(ctx.dtype)
     o_lat = jnp.einsum("bhql,blr->bqhr", w, ctx.cast(c_kv))
-    wuv = ctx.cast(p["wuv"]["w"]).reshape(r, h, dv)
-    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wuv)
-    return dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+    return _mla_output(p, o_lat, cfg, ctx, b, s)

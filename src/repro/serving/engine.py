@@ -262,7 +262,9 @@ class Engine:
         # speculated against — their distribution is opaque)
         self._sampler_kind = sampler if isinstance(sampler, str) else None
         self._sampler_kw = dict(sampler_kw)
-        self._spec_jits: dict = {}   # draft_k -> jitted draft-verify step
+        self._spec_jits: dict = {}   # (draft_k, kernel) -> jitted verify step
+        self._kernel_models: dict = {}   # kernel name -> Model variant
+        self._serve_jits: dict = {}      # kernel name -> jitted serve step
         # donate the cache (arg 1): decode updates it in place; params (arg 0)
         # are reused across calls and must NOT be donated. Prefill donates
         # nothing: params are reused, the int32 token batch feeds a gather XLA
@@ -279,6 +281,7 @@ class Engine:
         self._serve_step = jax.jit(
             make_serve_step_fn(model, self.sample, eos_id, pad_id),
             donate_argnums=(1,))
+        self._serve_jits["jnp"] = self._serve_step
         self._insert_slot = jax.jit(
             lambda cache, slot_cache, slot: jax.tree.map(
                 lambda c, s: jax.lax.dynamic_update_slice_in_dim(
@@ -443,19 +446,63 @@ class Engine:
             self._meter_cache[key] = acc.total()
         return self._meter_cache[key]
 
-    def _get_spec_step(self, draft_k: int):
-        """The compiled draft-verify step for one draft depth (memoized —
+    _INT_KINDS = ("int", "int_jax", "int_pallas", "int_pallas_paged")
+
+    def _kernel_model(self, kernel: str) -> Model:
+        """The Model variant executing decode under ``kernel``.
+
+        ``"jnp"`` is the engine's own model. ``"pallas"`` swaps the softmax
+        spec to ``int_pallas_paged`` — the SAME Alg.-1 ``apply`` body, so
+        prefill and every non-paged-decode site lower identically and the
+        variant SHARES ``self.params`` — while the paged decode/verify sites
+        route through the fused block-table kernel. Requires an integer-
+        family base spec: the fused kernel runs the integer softmax, so a
+        float-softmax model has no bit-identical fused counterpart."""
+        if kernel == "jnp":
+            return self.model
+        if kernel != "pallas":
+            raise ValueError(
+                f"unknown decode kernel {kernel!r} (expected jnp | pallas)")
+        if kernel not in self._kernel_models:
+            spec = self.model.cfg.softmax
+            if spec is None or spec.kind not in self._INT_KINDS:
+                kind = None if spec is None else spec.kind
+                raise ValueError(
+                    "kernel='pallas' serves the integer softmax family "
+                    f"(one of {self._INT_KINDS}); this engine's model uses "
+                    f"{kind!r}")
+            var = dataclasses.replace(spec, kind="int_pallas_paged")
+            ctx = self.model.ctx
+            self._kernel_models[kernel] = Model(
+                self.model.cfg.with_softmax(var), rules=ctx.rules,
+                mesh=ctx.mesh, dtype=ctx.dtype)
+        return self._kernel_models[kernel]
+
+    def _get_serve_step(self, kernel: str = "jnp"):
+        """The compiled continuous-batching step for one decode kernel
+        (memoized; ``"jnp"`` aliases the step built in ``__init__``)."""
+        if kernel not in self._serve_jits:
+            self._serve_jits[kernel] = jax.jit(
+                make_serve_step_fn(self._kernel_model(kernel), self.sample,
+                                   self.eos_id, self.pad_id),
+                donate_argnums=(1,))
+        return self._serve_jits[kernel]
+
+    def _get_spec_step(self, draft_k: int, kernel: str = "jnp"):
+        """The compiled draft-verify step for one (draft depth, kernel) —
         shapes are static per (slots, cache_len, K), so serving any number
-        of traces shares one compilation per geometry)."""
-        if draft_k not in self._spec_jits:
+        of traces shares one compilation per geometry."""
+        key = (draft_k, kernel)
+        if key not in self._spec_jits:
             verifier = make_spec_verifier(
                 self._sampler_kind,
                 pad_id=self.pad_id if self.pad_id is not None else 0,
                 **self._sampler_kw)
-            self._spec_jits[draft_k] = jax.jit(
-                make_spec_step_fn(self.model, verifier, draft_k),
+            self._spec_jits[key] = jax.jit(
+                make_spec_step_fn(self._kernel_model(kernel), verifier,
+                                  draft_k),
                 donate_argnums=(1,))
-        return self._spec_jits[draft_k]
+        return self._spec_jits[key]
 
     def _prefix_struct(self, s: int):
         """Abstract shared-prefix pytree for metering tail-only prefill —
@@ -488,7 +535,8 @@ class Engine:
               block_size: int = 16, num_blocks: Optional[int] = None,
               prefix_share: bool = False, speculative: bool = False,
               draft_k: int = 4, draft: str = "ngram", max_ngram: int = 3,
-              draft_model=None, draft_params=None) -> ServeReport:
+              draft_model=None, draft_params=None,
+              kernel: str = "jnp") -> ServeReport:
         """Continuous-batching serving over a trace of timed arrivals.
 
         Runs ONE compiled decode step (``make_serve_step_fn``) in a host
@@ -534,6 +582,13 @@ class Engine:
         draft and verify phases are charged separately to the batch meter
         (``ServeReport.cost_draft`` / ``cost_verify``; conservation across
         per-request shares is preserved).
+
+        ``kernel="pallas"`` (paged, integer-softmax models only) runs decode
+        and verify steps through the fused block-table attention kernel
+        (``kernels/paged_attention``) instead of gather-then-attend —
+        bit-identical outputs, one compiled step per geometry exactly like
+        the default executor, and composes with ``prefix_share`` and
+        ``speculative``.
         """
         cfg = self.model.cfg
         if cfg.family == "encdec" or cfg.rope_type == "mrope":
@@ -550,6 +605,10 @@ class Engine:
             C = max(C, cfg.window)
         if prefix_share and not paged:
             raise ValueError("prefix_share=True requires paged=True")
+        if kernel != "jnp" and not paged:
+            raise ValueError("kernel='pallas' requires paged=True (the "
+                             "fused kernel walks the block table)")
+        serve_step = self._get_serve_step(kernel)
         alloc = None
         shareable = False
         if paged:
@@ -596,7 +655,7 @@ class Engine:
                     f"draft model vocab {proposer.model.cfg.vocab} != "
                     f"target vocab {cfg.vocab}")
             proposer.begin(slots, C)
-            spec_step = self._get_spec_step(draft_k)
+            spec_step = self._get_spec_step(draft_k, kernel)
         attr = telemetry.SlotCostAttributor() if report_cost else None
         geom = (block_size, num_blocks) if paged else None
         step_cost = (self._meter_serve_step(slots, C, geom)
@@ -783,7 +842,7 @@ class Engine:
                         finish(slot)
                 t += 1.0
             elif active:
-                cache, toks_d, keys_d, done_d = self._serve_step(
+                cache, toks_d, keys_d, done_d = serve_step(
                     self.params, cache, jnp.asarray(tok), jnp.asarray(pos),
                     jnp.asarray(keys), jnp.asarray(done))
                 toks_np = np.asarray(toks_d)

@@ -1,0 +1,265 @@
+"""Fused paged-decode attention kernel: bit-exactness and contracts.
+
+The oracles, in increasing integration order:
+
+  * kernel-level: ``paged_attend_dense`` / ``paged_attend_mla`` (interpret
+    mode) are bit-identical to gather-then-attend with the ``int_jax``
+    integer softmax, across dense/GQA/MLA layouts, block sizes {8, 16, 64},
+    sliding windows, int8-quantized pools, multi-token (verify) rows, f32
+    compute, and a 4k-token context;
+  * ``paged_gather``'s sentinel contract: entries outside [0, NB) yield
+    all-zero blocks (the regression this PR fixes — clipped indices used to
+    read a resident block silently);
+  * the tile autotuner: picks a pages-per-step dividing the table length
+    that fits the roofline VMEM model, and fails LOUDLY when nothing fits;
+  * model-level: ``decode_step`` / ``verify_step`` on a paged cache under
+    ``int_pallas_paged`` are bit-identical to ``int`` (gather reference),
+    including cache leaves, for dense / GQA / MLA / int8-KV smokes.
+
+Engine-level parity (serve tokens, speculative composition) lives in
+``test_speculative.py``.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.core.int_softmax import int_softmax
+from repro.core.precision import BEST
+from repro.core.softmax_variants import SoftmaxSpec
+from repro.kernels.paged_attention import ops
+from repro.models import build_model, kv_cache
+from repro.models.attention import paged_gather
+
+
+# ------------------------------------------------------- reference (gather)
+
+
+def _gather(pool, table):
+    nb = pool.shape[0]
+    b, nlog = table.shape
+    pages = jnp.take(pool, jnp.clip(table, 0, nb - 1), axis=0)
+    dead = ((table < 0) | (table >= nb)).reshape(
+        b, nlog, *([1] * (pages.ndim - 2)))
+    pages = jnp.where(dead, jnp.zeros((), pool.dtype), pages)
+    return pages.reshape((b, nlog * pool.shape[1]) + pool.shape[2:])
+
+
+def _ref_dense(q, k_pool, v_pool, table, positions, *, scale, window=0,
+               k_scale=None, v_scale=None):
+    k, v = _gather(k_pool, table), _gather(v_pool, table)
+    if k_scale is not None:
+        k = (k.astype(jnp.float32)
+             * _gather(k_scale, table)[..., None]).astype(q.dtype)
+        v = (v.astype(jnp.float32)
+             * _gather(v_scale, table)[..., None]).astype(q.dtype)
+    b, t, h, d = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, t, kvh, h // kvh, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    l = k.shape[1]
+    kv_pos = jnp.arange(l, dtype=jnp.int32)[None, None, :]
+    valid = kv_pos <= positions[:, :, None]
+    if window:
+        valid &= kv_pos > positions[:, :, None] - window
+    m = valid[:, None, None, :, :]
+    w = int_softmax(scores, cfg=BEST, mask=m, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, t, h, v.shape[-1])
+
+
+# jitted: the score sum's rounding must match the compiled model path
+# (XLA's "semi" semantics — each dot rounded to bf16, the add in f32 —
+# which the fused kernel reproduces; an eager add would round differently)
+@jax.jit
+def _ref_mla(q_lat, q_rope, c_pool, kr_pool, table, positions, scale):
+    c_kv, k_rope = _gather(c_pool, table), _gather(kr_pool, table)
+    scores = jnp.einsum("bqhr,blr->bhql", q_lat, c_kv)
+    scores = scores + jnp.einsum("bqhd,bld->bhql", q_rope, k_rope)
+    scores = scores.astype(jnp.float32) * scale
+    l = c_kv.shape[1]
+    kv = jnp.arange(l, dtype=jnp.int32)[None, None, :]
+    valid = kv <= positions[:, :, None]
+    mask = jnp.broadcast_to(valid[:, None, :, :], scores.shape)
+    w = int_softmax(scores, cfg=BEST, mask=mask, axis=-1).astype(q_lat.dtype)
+    return jnp.einsum("bhql,blr->bqhr", w, c_kv)
+
+
+def _mixed_table(rng, B, NLOG, NB, BS, T):
+    """Per-row tables with a random live prefix and NB sentinels after it;
+    positions inside the live region."""
+    table = np.full((B, NLOG), NB, np.int32)
+    perm = rng.permutation(NB)
+    pi = 0
+    positions = np.zeros((B, T), np.int32)
+    for b in range(B):
+        npages = int(rng.integers(1, NLOG + 1))
+        table[b, :npages] = perm[pi:pi + npages]
+        pi += npages
+        positions[b] = int(rng.integers(0, npages * BS)) + np.arange(T)
+    return jnp.asarray(table), jnp.asarray(positions)
+
+
+# --------------------------------------------------------- kernel-level
+
+
+@pytest.mark.parametrize("bs,nlog", [(8, 4), (16, 4), (64, 2)])
+@pytest.mark.parametrize("t,kvh,window,quant", [
+    (1, 2, 0, False),    # decode, MHA-ish
+    (1, 1, 0, False),    # decode, GQA group=4
+    (3, 2, 0, False),    # verify rows
+    (1, 2, 12, False),   # sliding window
+    (1, 2, 0, True),     # int8 pools, fused dequant
+])
+def test_dense_kernel_bitexact(bs, nlog, t, kvh, window, quant):
+    B, H, D = 3, 4, 32
+    NB = B * nlog + 2
+    r = np.random.default_rng(hash((bs, nlog, t, kvh, window, quant)) % 2**31)
+    q = jnp.asarray(r.normal(size=(B, t, H, D)), jnp.bfloat16)
+    if quant:
+        k_pool = jnp.asarray(r.integers(-127, 128, (NB, bs, kvh, D)), jnp.int8)
+        v_pool = jnp.asarray(r.integers(-127, 128, (NB, bs, kvh, D)), jnp.int8)
+        k_scale = jnp.asarray(r.random((NB, bs, kvh)), jnp.float32) * .1
+        v_scale = jnp.asarray(r.random((NB, bs, kvh)), jnp.float32) * .1
+    else:
+        k_pool = jnp.asarray(r.normal(size=(NB, bs, kvh, D)), jnp.bfloat16)
+        v_pool = jnp.asarray(r.normal(size=(NB, bs, kvh, D)), jnp.bfloat16)
+        k_scale = v_scale = None
+    table, positions = _mixed_table(r, B, nlog, NB, bs, t)
+    scale = D ** -0.5
+    want = _ref_dense(q, k_pool, v_pool, table, positions, scale=scale,
+                      window=window, k_scale=k_scale, v_scale=v_scale)
+    got = ops.paged_attend_dense(q, k_pool, v_pool, table, positions, BEST,
+                                 scale=scale, window=window, k_scale=k_scale,
+                                 v_scale=v_scale, interpret=True)
+    assert jnp.array_equal(want.astype(jnp.float32),
+                           got.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_dense_kernel_bitexact_dtype(dtype):
+    B, t, H, D, NB, bs, nlog = 2, 1, 4, 32, 8, 8, 3
+    r = np.random.default_rng(7)
+    q = jnp.asarray(r.normal(size=(B, t, H, D)), dtype)
+    k_pool = jnp.asarray(r.normal(size=(NB, bs, 2, D)), dtype)
+    v_pool = jnp.asarray(r.normal(size=(NB, bs, 2, D)), dtype)
+    table, positions = _mixed_table(r, B, nlog, NB, bs, t)
+    scale = D ** -0.5
+    want = _ref_dense(q, k_pool, v_pool, table, positions, scale=scale)
+    got = ops.paged_attend_dense(q, k_pool, v_pool, table, positions, BEST,
+                                 scale=scale, interpret=True)
+    assert jnp.array_equal(want.astype(jnp.float32),
+                           got.astype(jnp.float32))
+
+
+def test_dense_kernel_bitexact_4k():
+    """One long-context case: 4k logical tokens walked 8 pages per step."""
+    B, t, H, kvh, D, bs = 2, 1, 4, 2, 32, 16
+    nlog = 4096 // bs
+    NB = nlog + 8
+    r = np.random.default_rng(11)
+    q = jnp.asarray(r.normal(size=(B, t, H, D)), jnp.bfloat16)
+    k_pool = jnp.asarray(r.normal(size=(NB, bs, kvh, D)), jnp.bfloat16)
+    v_pool = jnp.asarray(r.normal(size=(NB, bs, kvh, D)), jnp.bfloat16)
+    table = np.full((B, nlog), NB, np.int32)
+    table[0] = r.permutation(NB)[:nlog]
+    table[1, :nlog // 2] = r.permutation(NB)[:nlog // 2]
+    positions = jnp.asarray([[4095], [nlog // 2 * bs - 1]], jnp.int32)
+    table = jnp.asarray(table)
+    scale = D ** -0.5
+    want = _ref_dense(q, k_pool, v_pool, table, positions, scale=scale)
+    got = ops.paged_attend_dense(q, k_pool, v_pool, table, positions, BEST,
+                                 scale=scale, interpret=True)
+    assert jnp.array_equal(want.astype(jnp.float32),
+                           got.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("bs,nlog,t", [(8, 4, 1), (16, 4, 3), (64, 2, 1)])
+def test_mla_kernel_bitexact(bs, nlog, t):
+    B, H, R, DR = 3, 4, 64, 16
+    NB = B * nlog + 2
+    r = np.random.default_rng(hash((bs, nlog, t)) % 2**31)
+    q_lat = jnp.asarray(r.normal(size=(B, t, H, R)), jnp.bfloat16)
+    q_rope = jnp.asarray(r.normal(size=(B, t, H, DR)), jnp.bfloat16)
+    c_pool = jnp.asarray(r.normal(size=(NB, bs, R)), jnp.bfloat16)
+    kr_pool = jnp.asarray(r.normal(size=(NB, bs, DR)), jnp.bfloat16)
+    table, positions = _mixed_table(r, B, nlog, NB, bs, t)
+    scale = (R // 2 + DR) ** -0.5
+    want = _ref_mla(q_lat, q_rope, c_pool, kr_pool, table, positions, scale)
+    got = ops.paged_attend_mla(q_lat, q_rope, c_pool, kr_pool, table,
+                               positions, BEST, scale=scale, interpret=True)
+    assert jnp.array_equal(want.astype(jnp.float32),
+                           got.astype(jnp.float32))
+
+
+# ------------------------------------------------- sentinel + autotune
+
+
+def test_paged_gather_zeros_sentinels():
+    """Entries outside [0, NB) gather ZERO blocks — not block 0 / NB-1."""
+    pool = jnp.arange(2 * 3 * 4, dtype=jnp.float32).reshape(2, 3, 4) + 1.0
+    table = jnp.asarray([[0, 2, -1], [1, -7, 5]], jnp.int32)  # 2,5,-7: dead
+    out = paged_gather(pool, table)
+    out = out.reshape(2, 3, 3, 4)
+    assert np.array_equal(out[0, 0], pool[0])
+    assert np.array_equal(out[1, 0], pool[1])
+    for b, n in [(0, 1), (0, 2), (1, 1), (1, 2)]:
+        assert np.all(np.asarray(out[b, n]) == 0.0), (b, n)
+
+
+def test_choose_tiles_divides_and_fits():
+    pps = ops.choose_tiles(4, 256, 16, 64, 64, 2, False)
+    assert pps in (8, 4, 2, 1) and 256 % pps == 0
+    # a table length not divisible by 8 falls back to a dividing candidate
+    assert ops.choose_tiles(4, 12, 16, 64, 64, 2, False) in (4, 2, 1)
+
+
+def test_choose_tiles_rejects_loudly():
+    with pytest.raises(ValueError, match="rejected by roofline"):
+        ops.choose_tiles(4, 4096, 64, 128, 128, 2, False, vmem_budget=1024)
+
+
+# ----------------------------------------------------------- model-level
+
+
+@pytest.mark.parametrize("arch,kv_quant", [
+    ("olmo-1b", False), ("qwen2.5-32b", False), ("minicpm3-4b", False),
+    ("olmo-1b", True),
+])
+def test_model_paged_decode_fused_bitexact(arch, kv_quant):
+    """decode_step and verify_step under ``int_pallas_paged`` reproduce the
+    gather reference (``int``) bit-for-bit — logits AND cache leaves."""
+    bs, C, B, T, P = 8, 64, 3, 4, 9
+    cfg_ref = smoke_config(arch, softmax=SoftmaxSpec("int"))
+    cfg_fused = smoke_config(arch, softmax=SoftmaxSpec("int_pallas_paged"))
+    if kv_quant:
+        cfg_ref = dataclasses.replace(cfg_ref, kv_quant=True)
+        cfg_fused = dataclasses.replace(cfg_fused, kv_quant=True)
+    m_ref, m_fused = build_model(cfg_ref), build_model(cfg_fused)
+    params, _ = m_ref.init_split(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg_ref.vocab, (B, P)))}
+    logits, cache = m_ref.prefill(params, batch, C)
+    pcache = kv_cache.paged_cache_zeros(cfg_ref, B, C, bs, B * (C // bs))
+    from test_speculative import _paged_install
+    cache = _paged_install(cfg_ref, cache, pcache, B, C, bs)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    pos = jnp.full((B,), P, jnp.int32)
+
+    cr, cf = cache, cache
+    for i in range(2):
+        lr, cr = m_ref.decode_step(params, cr, {"token": tok}, pos + i)
+        lf, cf = m_fused.decode_step(params, cf, {"token": tok}, pos + i)
+        assert jnp.array_equal(lr, lf), (arch, i)
+        for a, b in zip(jax.tree.leaves(cr), jax.tree.leaves(cf)):
+            assert np.array_equal(a, b), (arch, i)
+        tok = jnp.argmax(lr[:, -1], -1).astype(jnp.int32)[:, None]
+
+    block = jnp.asarray(rng.integers(0, cfg_ref.vocab, (B, T)))
+    vr, _ = m_ref.verify_step(params, cache, {"token": block}, pos)
+    vf, _ = m_fused.verify_step(params, cache, {"token": block}, pos)
+    assert jnp.array_equal(vr, vf), arch

@@ -211,6 +211,61 @@ def test_greedy_spec_serve_parity_per_backend(backend):
     _assert_same_tokens(base, spec)
 
 
+@pytest.mark.parametrize("arch", ["olmo-1b", "minicpm3-4b"])
+def test_greedy_spec_serve_parity_pallas_kernel(arch):
+    """``kernel="pallas"`` (fused block-table attention) composes with
+    speculative verify: the fused kernel covers the K+1 verify block with
+    per-row masking, and rollback of rejected drafts leaves pool blocks
+    bit-identical — so both the plain and speculative pallas runs emit
+    exactly the tokens of the jnp gather executor."""
+    cfg, m, eng = _setup(arch, softmax=SoftmaxSpec("int"), max_new=8)
+    reqs = _mixed_trace(cfg.vocab)
+    kw = dict(slots=2, paged=True, block_size=4)
+    base = eng.serve(reqs, **kw)
+    fused = eng.serve(reqs, kernel="pallas", **kw)
+    _assert_same_tokens(base, fused)
+    spec = eng.serve(reqs, kernel="pallas", speculative=True, draft_k=3, **kw)
+    _assert_same_tokens(base, spec)
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "minicpm3-4b"])
+def test_pallas_verify_full_reject_rollback(arch):
+    """Model-level no-leak oracle under the fused kernel: a fully rejected
+    verify block commits to a cache bit-identical to one plain decode step —
+    drafted K/V in pool blocks must not survive rejection."""
+    B, C, bs, T, P = 2, 32, 4, 3, 6
+    cfg = smoke_config(arch, softmax=SoftmaxSpec("int_pallas_paged"))
+    m = build_model(cfg)
+    params, _ = m.init_split(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, P)))}
+    logits, cache = m.prefill(params, batch, C)
+    from repro.models import kv_cache
+    pcache = kv_cache.paged_cache_zeros(cfg, B, C, bs, B * (C // bs))
+    cache = _paged_install(cfg, cache, pcache, B, C, bs)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    pos = jnp.full((B,), P, jnp.int32)
+    block = jnp.concatenate(
+        [tok, jnp.asarray(rng.integers(0, cfg.vocab, (B, T - 1)))], axis=1)
+    _, staged = m.verify_step(params, cache, {"token": block}, pos)
+    none = m.verify_commit(staged, jnp.zeros((B,), jnp.int32), pos, T)
+    _, one = m.decode_step(params, cache, {"token": tok}, pos)
+    for a, b in zip(jax.tree.leaves(none), jax.tree.leaves(one)):
+        assert np.array_equal(a, b), arch
+
+
+def test_pallas_kernel_validation():
+    """The fused kernel demands a paged cache and an integer softmax — both
+    misuses fail loudly, before any compilation."""
+    cfg, m, eng = _setup("olmo-1b", softmax=SoftmaxSpec("int"), max_new=4)
+    reqs = _mixed_trace(cfg.vocab, n=2)
+    with pytest.raises(ValueError, match="requires paged"):
+        eng.serve(reqs, kernel="pallas")
+    _, _, eng_fp = _setup("olmo-1b", max_new=4)   # fp softmax default
+    with pytest.raises(ValueError, match="integer softmax"):
+        eng_fp.serve(reqs, kernel="pallas", paged=True, block_size=4)
+
+
 def test_spec_serve_eos_parity():
     """EOS inside a verified block truncates exactly where the
     autoregressive loop would have stopped (done flag, pad fill, early slot
