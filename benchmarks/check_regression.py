@@ -32,7 +32,8 @@ import sys
 
 # metric name -> (kind, floor). Kinds: "det" (deterministic), "ratio"
 # (dimensionless speedup with an explicit floor), "abs" (machine-dependent
-# absolute throughput).
+# absolute throughput), "det_low" (deterministic, LOWER is better — e.g.
+# per-device pool bytes, where growth beyond tolerance is the regression).
 METRICS = {
     "gang.tokens_per_s": ("abs", None),
     "continuous.tokens_per_s": ("abs", None),
@@ -53,6 +54,15 @@ METRICS = {
     "paged_kernel.speedup": ("abs", None),  # interpret-mode on CI: no floor
     "paged_kernel.token_parity": ("det", None),
     "paged_kernel.retraces_zero": ("det", None),
+    # tensor-parallel serve comparison (serve_bench --shards N)
+    "sharded.single.tokens_per_s": ("abs", None),
+    "sharded.sharded.tokens_per_s": ("abs", None),
+    "sharded.speedup": ("abs", None),   # simulated devices on CI: no floor
+    "sharded.token_parity": ("det", None),
+    "sharded.retraces_zero": ("det", None),
+    "sharded.capacity_ratio": ("det", None),
+    # pure byte accounting, lower is better: growth = a pool layout leak
+    "sharded.pool_bytes_per_device": ("det_low", None),
 }
 
 def _kind(name: str):
@@ -129,6 +139,16 @@ def _metrics(report: dict) -> dict:
         out["paged_kernel.token_parity"] = float(pk["token_parity"])
     if "retraces_zero" in pk:
         out["paged_kernel.retraces_zero"] = float(pk["retraces_zero"])
+    sh = report.get("sharded", {}).get("results", {})
+    for mode in ("single", "sharded"):
+        if mode in sh:
+            out[f"sharded.{mode}.tokens_per_s"] = sh[mode]["tokens_per_s"]
+    if "speedup_tps" in sh:
+        out["sharded.speedup"] = sh["speedup_tps"]
+    for key in ("token_parity", "retraces_zero", "capacity_ratio",
+                "pool_bytes_per_device"):
+        if key in sh:
+            out[f"sharded.{key}"] = float(sh[key])
     return out
 
 
@@ -161,6 +181,11 @@ def main():
         change = fr / b - 1.0
         dropped = fr < (1.0 - args.max_regression) * b
         if kind == "det":
+            failed = dropped
+        elif kind == "det_low":
+            # lower is better (byte accounting): deterministic, so any
+            # growth beyond tolerance is a layout/accounting regression
+            dropped = fr > (1.0 + args.max_regression) * b
             failed = dropped
         elif kind == "ratio":
             # a noisy wall-clock ratio: fail only when the drop is beyond

@@ -346,6 +346,98 @@ def bench_paged_kernel(arch: str, n_requests: int, slots: int, seed: int,
             "results": out}
 
 
+def bench_sharded(arch: str, n_requests: int, slots: int, seed: int,
+                  iters: int, n_shards: int, block_size: int) -> dict:
+    """Tensor-parallel paged serving (``Engine.serve(shards=N)``) vs the
+    single-device baseline on the SAME engine, trace, and greedy sampler.
+    Deterministic TP makes the outputs bit-identical (``token_parity``), so
+    the durable signals are the per-device POOL bytes — partitioned K/V
+    divides by N, block tables replicate (``pool_bytes_per_device``,
+    ``capacity_ratio``) — plus ``retraces_zero`` on the donated sharded
+    carry. The tokens/sec column is an honest wall on simulated CPU devices
+    (one host executing N shards serially under GSPMD), so the latency ratio
+    never gates; on real accelerators the same path shards across chips."""
+    if len(jax.devices()) < n_shards:
+        raise SystemExit(
+            f"--shards {n_shards} needs {n_shards} devices but jax sees "
+            f"{len(jax.devices())}; on CPU hosts set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards} before "
+            f"running (see README, 'Multi-device serving')")
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving.sharded import pool_report
+
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    eng = Engine(model, params, max_new=8)
+    mesh = make_serving_mesh(n_shards)
+    reqs = random_trace(n_requests, cfg.vocab, seed=seed,
+                        prompt_lens=(4, 8, 16),
+                        max_new_range=(4, 16), arrival_spacing=0.0)
+    cache_len = max(r.prompt_len + r.max_new for r in reqs)
+
+    modes = {"single": {}, "sharded": dict(mesh=mesh)}
+    base_kw = dict(slots=slots, cache_len=cache_len, paged=True,
+                   block_size=block_size)
+    for kw in modes.values():
+        eng.serve(reqs, **base_kw, **kw)       # warm / compile
+    walls = {m: [] for m in modes}
+    lats = {m: [] for m in modes}
+    reports = {}
+    for _ in range(iters):
+        for mode, kw in modes.items():
+            rep = eng.serve(reqs, **base_kw, **kw)
+            walls[mode].append(rep.wall_s)
+            lats[mode].extend(r.latency_s for r in rep.results)
+            reports[mode] = rep
+    for a, b in zip(reports["single"].results, reports["sharded"].results):
+        assert np.array_equal(a.tokens, b.tokens), \
+            f"sharded serving parity broke on rid {a.rid}"
+    gen_tokens = sum(r.max_new for r in reqs)
+    out = {}
+    for mode in modes:
+        rep = reports[mode]
+        wall = float(np.median(walls[mode]))
+        lat = np.asarray(lats[mode])
+        out[mode] = {
+            "steps": rep.steps,
+            "wall_s": wall,
+            "wall_s_all": walls[mode],
+            "tokens_per_s": gen_tokens / wall,
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p99_s": float(np.percentile(lat, 99)),
+        }
+        print(f"{mode:11s} steps={rep.steps:5d} "
+              f"tps={out[mode]['tokens_per_s']:8.0f} tok/s  "
+              f"p50={out[mode]['latency_p50_s'] * 1e3:7.1f} ms",
+              file=sys.stderr)
+    # the serve() geometry: cache rounds up to the block grid, every slot
+    # gets its worst case (no prefix cache in this bench)
+    C = -(-cache_len // block_size) * block_size
+    num_blocks = slots * (C // block_size)
+    pool = pool_report(cfg, slots, C, block_size, num_blocks, n_shards)
+    out["speedup_tps"] = (out["sharded"]["tokens_per_s"]
+                          / out["single"]["tokens_per_s"])
+    out["token_parity"] = 1.0      # the zip/assert above would have raised
+    out["retraces_zero"] = float(
+        eng._get_serve_step("jnp", mesh)._cache_size() <= 1)
+    out["pool_bytes_single"] = pool["total_bytes"]
+    out["pool_bytes_per_device"] = pool["per_device_bytes"]
+    out["capacity_ratio"] = pool["capacity_ratio"]
+    print(f"sharded/single {out['speedup_tps']:.2f}x tok/s "
+          f"(simulated devices), parity={out['token_parity']:.0f}, "
+          f"retraces_zero={out['retraces_zero']:.0f}, pool/device "
+          f"{out['pool_bytes_per_device'] / 2**20:.2f} MiB vs "
+          f"{out['pool_bytes_single'] / 2**20:.2f} MiB "
+          f"({out['capacity_ratio']:.2f}x capacity)", file=sys.stderr)
+    return {"config": {"requests": n_requests, "slots": slots, "seed": seed,
+                       "iters": iters, "block_size": block_size,
+                       "shards": n_shards,
+                       "devices": len(jax.devices()),
+                       "platform": jax.default_backend()},
+            "results": out}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -390,6 +482,11 @@ def main():
                          "(leave 0 on CPU hosts: the fused column runs "
                          "the Pallas interpreter there; token parity and "
                          "zero-retrace always gate)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="also bench tensor-parallel paged serving across "
+                         "N mesh shards vs single-device (needs N devices; "
+                         "on CPU hosts set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
 
     report = bench(args.arch, args.requests, args.slots, args.seed, args.iters)
@@ -405,6 +502,10 @@ def main():
         report["paged_kernel"] = bench_paged_kernel(
             args.arch, args.requests, args.slots, args.seed, args.iters,
             args.block_size)
+    if args.shards:
+        report["sharded"] = bench_sharded(
+            args.arch, args.requests, args.slots, args.seed, args.iters,
+            args.shards, args.block_size)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out}")
@@ -459,6 +560,27 @@ def main():
             raise SystemExit(
                 f"pallas paged decode below gate: {pk['speedup_tps']:.2f}x "
                 f"< {args.min_kernel_ratio}x vs gather")
+    if args.shards:
+        sh = report["sharded"]["results"]
+        print(f"sharded ({args.shards} shards): {sh['speedup_tps']:.2f}x "
+              f"tokens/sec vs single-device, pool/device "
+              f"{sh['pool_bytes_per_device'] / 2**20:.2f} MiB "
+              f"({sh['capacity_ratio']:.2f}x capacity), "
+              f"token_parity={sh['token_parity']:.0f}, "
+              f"retraces_zero={sh['retraces_zero']:.0f}")
+        # deterministic gates: TP must not perturb a token, must not grow
+        # the per-device pool past partitioned/N + replicated, and must
+        # keep the one-compiled-step contract on the donated sharded carry
+        if sh["token_parity"] < 1.0:
+            raise SystemExit("sharded serving broke token parity vs "
+                             "single-device")
+        if sh["retraces_zero"] < 1.0:
+            raise SystemExit("sharded serve step retraced mid-serve")
+        if sh["pool_bytes_per_device"] >= sh["pool_bytes_single"]:
+            raise SystemExit(
+                f"sharding did not shrink the per-device pool: "
+                f"{sh['pool_bytes_per_device']:.0f} >= "
+                f"{sh['pool_bytes_single']:.0f} bytes")
 
 
 if __name__ == "__main__":

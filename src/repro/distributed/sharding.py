@@ -42,6 +42,14 @@ DEFAULT_RULES: dict = {
     "seq_sp": "model",
     "kv_seq": "model",
     "kv_lora": None,
+    "latent": None,      # MLA latent CACHE dim (serve-path TP shards it)
+    # pre-row-parallel-contraction collect point (attn out before wo, MLP
+    # hidden before down): "model" here = the layout the producing einsum
+    # already emits, so the constraint is a no-op; the serving rules remap it
+    # to None, all-gathering the operand so the contraction runs in full on
+    # every device (deterministic, bitwise vs single-device) instead of as
+    # partial-sum + psum (order-dependent rounding)
+    "tp_collect": "model",
     "head_dim": None,
     "state": None,
     "conv": None,
@@ -97,6 +105,29 @@ class ShardingRules:
 
     def sharding(self, logical_axes: Sequence[Optional[str]], mesh: Mesh) -> NamedSharding:
         return NamedSharding(mesh, self.spec(logical_axes, mesh))
+
+
+# Tensor-parallel serving (Engine.serve(mesh=...)): decode parallelism comes
+# from sharding attention heads / MLA latents, NOT from splitting the KV
+# sequence — the cache carry must keep ONE stable head-sharded layout across
+# every compiled step, so "kv_seq" is unmapped and the MLA latent cache dim
+# picks up the model axis instead. "seq_sp" is unmapped (decode activations
+# are [S, 1, d]; nothing to split) and "tp_collect" -> None turns every
+# row-parallel contraction into gather-then-full-matmul: greedy sharded
+# decode emits the exact single-device token stream instead of drifting on
+# psum rounding order.
+SERVING_OVERRIDES = (("kv_seq", None), ("seq_sp", None),
+                     ("latent", "model"), ("tp_collect", None))
+
+
+def serving_rules(base: Optional[ShardingRules] = None) -> ShardingRules:
+    """Rules for the tensor-parallel serve path, layered over an arch's own
+    rules: heads/kv_heads/mlp/vocab stay on the model axis, kv_seq is never
+    sharded (head TP replaces split-KV for decode), and the MLA latent cache
+    dim maps to the model axis so the paged latent pool partitions per
+    device."""
+    return ShardingRules(SERVING_OVERRIDES,
+                         base=base._rules if base is not None else None)
 
 
 def logical_constraint(x, logical_axes: Sequence[Optional[str]],

@@ -26,3 +26,25 @@ def make_host_mesh():
     """Whatever this host has (tests / examples): (n, 1) data x model."""
     n = len(jax.devices())
     return make_mesh((n, 1), ("data", "model"))
+
+
+def make_serving_mesh(shards=None, devices=None):
+    """1-D ("model",) mesh over the first ``shards`` devices — the mesh
+    ``Engine.serve(mesh=...)`` shards attention heads and the paged block
+    pool across. ``shards=None`` takes every visible device. Raises (rather
+    than letting XLA fail on placement) when the host has too few devices,
+    with the simulated-device recipe CI uses."""
+    devs = list(jax.devices() if devices is None else devices)
+    n = len(devs) if shards is None else int(shards)
+    if n < 1:
+        raise ValueError(f"shards must be >= 1, got {n}")
+    if n > len(devs):
+        raise ValueError(
+            f"serving mesh wants {n} shards but only {len(devs)} device(s) "
+            "are visible; on CPU hosts simulate devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "(set it before the first jax import — see README, "
+            "'Multi-device serving')")
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:n]), ("model",))

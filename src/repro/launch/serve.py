@@ -93,11 +93,23 @@ def main():
                     help="--paged: decode-attention path; 'pallas' runs the "
                          "fused block-table-walk kernel (bit-identical to "
                          "the gather baseline; interpret mode off-TPU)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="tensor-parallel serving across N mesh devices "
+                         "(heads + paged pool shard; greedy output is "
+                         "bit-identical to single-device). On CPU hosts "
+                         "set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before launch")
     args = ap.parse_args()
-    if (args.paged or args.prefix_share or args.speculative) \
+    if (args.paged or args.prefix_share or args.speculative or args.shards) \
             and not args.continuous:
-        ap.error("--paged/--prefix-share/--speculative require --continuous "
-                 "(they configure Engine.serve)")
+        ap.error("--paged/--prefix-share/--speculative/--shards require "
+                 "--continuous (they configure Engine.serve)")
+    if args.shards:
+        if len(jax.devices()) < args.shards:
+            ap.error(f"--shards {args.shards} needs {args.shards} devices "
+                     f"but jax sees {len(jax.devices())}; on CPU hosts set "
+                     f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                     f"{args.shards} before launch")
     if args.prefix_share and not args.paged:
         ap.error("--prefix-share requires --paged (sharing points block "
                  "tables at resident pool blocks)")
@@ -162,7 +174,8 @@ def main():
                         paged=args.paged, block_size=args.block_size,
                         prefix_share=args.prefix_share,
                         speculative=args.speculative, draft_k=args.draft_k,
-                        kernel=args.kernel)
+                        kernel=args.kernel,
+                        shards=args.shards if args.shards else None)
         eng.serve(reqs, **serve_kw)  # compile
         rep = eng.serve(reqs, report_cost=True, **serve_kw)
         import numpy as np

@@ -107,13 +107,24 @@ def attend_chunked(q, k, v, q_pos, kv_pos, kind, cfg, ctx: Ctx,
     return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, out.shape[-1])
 
 
+def _collect_heads(out, ctx: Ctx):
+    """Pin the attend output's head layout before the output projection.
+    Under the default rules "tp_collect" IS the model axis — the layout the
+    attend einsum already produced, so this is a no-op. The serving rules map
+    it to None: heads all-gather before ``wo``, whose weight the serve path
+    keeps replicated, so the contraction runs in full on every device —
+    sharded greedy decode emits the exact single-device token stream instead
+    of drifting on row-parallel psum rounding order."""
+    return ctx.shard(out, ("batch", None, "tp_collect", None))
+
+
 def attn_apply(p, x, cfg, ctx: Ctx, positions, kind: str = "causal"):
     """Training / prefill self-attention. kind: causal | window | none."""
     b, s, _ = x.shape
     q, k, v = project_qkv(p, x, cfg, ctx, positions)
     pos = positions[0] if cfg.rope_type == "mrope" else positions
     out = attend_chunked(q, k, v, pos, pos, kind, cfg, ctx)
-    out = ctx.shard(out, ("batch", None, "heads", None))
+    out = _collect_heads(out, ctx)
     return dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
 
 
@@ -269,7 +280,25 @@ def _attend_paged_fused(p, q, new_cache, positions, cfg, ctx: Ctx, kind,
         window=cfg.window if kind == "window" else 0,
         k_scale=new_cache.get("k_scale"), v_scale=new_cache.get("v_scale"),
         scores_dtype=jnp.dtype(cfg.scores_dtype))
-    return dense_apply(p["wo"], out.reshape(b, t, -1), ctx)
+    return dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, t, -1),
+                       ctx)
+
+
+def _shard_paged(new_cache, ctx: Ctx):
+    """Pin the paged pool carry's sharding: pools partition by kv-heads
+    (under the serving rules each device owns its heads' pages; under the
+    default rules "kv_heads" dedups against the already-used model axis, so
+    nothing changes for the dry-run path), the block table stays replicated.
+    Constraining the CARRY — not just the attended view — keeps one stable
+    NamedSharding across every donated decode/verify step (no relayout, no
+    retrace)."""
+    out = dict(new_cache)
+    out["k"] = ctx.shard(out["k"], (None, None, "kv_heads", None))
+    out["v"] = ctx.shard(out["v"], (None, None, "kv_heads", None))
+    if "k_scale" in out:
+        out["k_scale"] = ctx.shard(out["k_scale"], (None, None, "kv_heads"))
+        out["v_scale"] = ctx.shard(out["v_scale"], (None, None, "kv_heads"))
+    return out
 
 
 def _attn_decode_paged(p, x, cache, cache_pos, cfg, ctx: Ctx, positions, kind):
@@ -298,6 +327,7 @@ def _attn_decode_paged(p, x, cache, cache_pos, cfg, ctx: Ctx, positions, kind):
             "k": paged_write(cache["k"], table, k_new[:, 0], cache_pos),
             "v": paged_write(cache["v"], table, v_new[:, 0], cache_pos),
             "table": table}
+    new_cache = _shard_paged(new_cache, ctx)
     backend = spec_backend(cfg.softmax)
     if getattr(backend, "fused_paged_decode", False):
         pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32),
@@ -314,12 +344,14 @@ def _attn_decode_paged(p, x, cache, cache_pos, cfg, ctx: Ctx, positions, kind):
     else:
         k = paged_gather(new_cache["k"], table)
         v = paged_gather(new_cache["v"], table)
+    k = ctx.shard(k, ("batch", None, "kv_heads", None))
+    v = ctx.shard(v, ("batch", None, "kv_heads", None))
     l_max = k.shape[1]
     valid = valid_upto(l_max, cache_pos,
                        cfg.window if kind == "window" else 0)
     mask = jnp.broadcast_to(valid[:, None, :], (b, 1, l_max))
     out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
-    y = dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+    y = dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, s, -1), ctx)
     return y, new_cache
 
 
@@ -339,7 +371,7 @@ def attn_prefill_tail(p, x, prefix_k, prefix_v, cfg, ctx: Ctx, positions,
     pos = positions[0] if cfg.rope_type == "mrope" else positions
     kv_pos = jnp.arange(prefix_len + t, dtype=jnp.int32)[None, :]
     out = attend_chunked(q, k, v, pos, kv_pos, "causal", cfg, ctx)
-    y = dense_apply(p["wo"], out.reshape(b, t, -1), ctx)
+    y = dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, t, -1), ctx)
     return y, {"k": k_t, "v": v_t}
 
 
@@ -364,21 +396,27 @@ def attn_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
         v_codes = cache_write(cache["v"], vq, cache_pos)
         k_sc = cache_write(cache["k_scale"], ks, cache_pos)
         v_sc = cache_write(cache["v_scale"], vs, cache_pos)
-        k = kv_dequantize(k_codes, k_sc, ctx.dtype)
-        v = kv_dequantize(v_codes, v_sc, ctx.dtype)
+        k = ctx.shard(kv_dequantize(k_codes, k_sc, ctx.dtype),
+                      ("batch", "kv_seq", "kv_heads", None))
+        v = ctx.shard(kv_dequantize(v_codes, v_sc, ctx.dtype),
+                      ("batch", "kv_seq", "kv_heads", None))
         new_cache = {"k": k_codes, "v": v_codes, "k_scale": k_sc, "v_scale": v_sc}
     else:
-        k = cache_write(cache["k"], k_new, cache_pos)
-        v = cache_write(cache["v"], v_new, cache_pos)
+        # the constraint lands on the carry itself: default rules give the
+        # split-KV layout (kv_heads dedups against the used model axis),
+        # serving rules unmap kv_seq so the donated carry stays head-sharded
+        # with ONE stable NamedSharding across every compiled step
+        k = ctx.shard(cache_write(cache["k"], k_new, cache_pos),
+                      ("batch", "kv_seq", "kv_heads", None))
+        v = ctx.shard(cache_write(cache["v"], v_new, cache_pos),
+                      ("batch", "kv_seq", "kv_heads", None))
         new_cache = {"k": k, "v": v}
-    k = ctx.shard(k, ("batch", "kv_seq", None, None))
-    v = ctx.shard(v, ("batch", "kv_seq", None, None))
     l_max = k.shape[1]
     valid = valid_upto(l_max, cache_pos,
                        cfg.window if kind == "window" else 0)
     mask = jnp.broadcast_to(valid[:, None, :], (b, 1, l_max))
     out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
-    y = dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+    y = dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, s, -1), ctx)
     return y, new_cache
 
 
@@ -409,6 +447,10 @@ def attn_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
             kp = paged_write_block(cache["k"], table, k_new, cache_pos)
             vp = paged_write_block(cache["v"], table, v_new, cache_pos)
             new_cache = {"k": kp, "v": vp, "table": table}
+        new_cache = _shard_paged(new_cache, ctx)
+        kp, vp = new_cache["k"], new_cache["v"]
+        if "k_scale" in cache:
+            ksp, vsp = new_cache["k_scale"], new_cache["v_scale"]
         backend = spec_backend(cfg.softmax)
         if getattr(backend, "fused_paged_decode", False):
             # verify rows are just decode rows at T positions: the same
@@ -423,6 +465,8 @@ def attn_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
                               paged_gather(vsp, table), ctx.dtype)
         else:
             k, v = paged_gather(kp, table), paged_gather(vp, table)
+        k = ctx.shard(k, ("batch", None, "kv_heads", None))
+        v = ctx.shard(v, ("batch", None, "kv_heads", None))
     elif "k_scale" in cache:
         kq, ks = kv_quantize(k_new)
         vq, vs = kv_quantize(v_new)
@@ -437,14 +481,14 @@ def attn_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
     else:
         k = cache_write_block(cache["k"], k_new, cache_pos)
         v = cache_write_block(cache["v"], v_new, cache_pos)
-        k = ctx.shard(k, ("batch", "kv_seq", None, None))
-        v = ctx.shard(v, ("batch", "kv_seq", None, None))
+        k = ctx.shard(k, ("batch", "kv_seq", "kv_heads", None))
+        v = ctx.shard(v, ("batch", "kv_seq", "kv_heads", None))
         new_cache = {"k": k, "v": v}
     l_max = k.shape[1]
     mask = verify_mask(l_max, positions,
                        cfg.window if kind == "window" else 0)
     out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
-    y = dense_apply(p["wo"], out.reshape(b, t, -1), ctx)
+    y = dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, t, -1), ctx)
     return y, new_cache
 
 
@@ -504,7 +548,7 @@ def attn_decode_ring(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
     valid = (pos_buf >= 0) & (pos_buf <= pos_col) & (pos_buf > pos_col - window)
     mask = jnp.broadcast_to(valid[:, None, :], (b, 1, w_cap))
     out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
-    y = dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+    y = dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, s, -1), ctx)
     return y, {"k": k, "v": v, "pos": pos_buf}
 
 

@@ -297,6 +297,53 @@ def commit_staged(staged, n_accept, cache_pos, t: int):
     return walk(staged)
 
 
+def serve_cache_axes(cfg, slots: int, cache_len: int):
+    """Logical axes tree matching ``cache_struct`` for the TENSOR-PARALLEL
+    serve path: contiguous per-slot caches shard by kv-heads (dense/GQA) or
+    the latent dim (MLA) under the serving rules, never by sequence — the
+    donated carry keeps one stable layout across every compiled step. Ring /
+    SSM leaves are replicated (sharded serving covers the attention-dominant
+    families; see serving/sharded.py validation)."""
+    def axes_for(shape, dtype):
+        rank = len(shape)
+        if rank == 5 and shape[3] == cfg.n_kv_heads:   # [L,S,C,KV,Dh]
+            return ("stacked", "batch", None, "kv_heads", None)
+        if rank == 4 and shape[-1] == cfg.n_kv_heads and \
+                getattr(cfg, "kv_quant", False):       # scales [L,S,C,KV]
+            return ("stacked", "batch", None, "kv_heads")
+        if rank == 4 and cfg.attention == "mla" and \
+                shape[-1] == cfg.kv_lora_rank:         # c_kv [L,S,C,r]
+            return ("stacked", "batch", None, "latent")
+        return ("stacked", "batch") + (None,) * (rank - 2)
+
+    struct = cache_struct(cfg, slots, cache_len)
+    return jax.tree.map(lambda s: axes_for(s.shape, s.dtype), struct)
+
+
+def paged_cache_axes(cfg, slots: int, cache_len: int, block_size: int,
+                     num_blocks: int):
+    """Logical axes tree matching ``paged_cache_struct`` for tensor-parallel
+    serving: pool leaves partition by kv-heads (dense/GQA) or the MLA latent
+    dim — each device holds its heads' pages, 1/N of the pool bytes — while
+    block tables (and the rope-key pool, whose dim is per-head-shared) stay
+    replicated so the host-side allocator's decisions apply symmetrically on
+    every shard."""
+    def axes_for(shape, dtype):
+        rank = len(shape)
+        if rank == 5 and shape[3] == cfg.n_kv_heads:   # pool [L,NB,BS,KV,Dh]
+            return ("stacked", None, None, "kv_heads", None)
+        if rank == 4 and shape[-1] == cfg.n_kv_heads and \
+                getattr(cfg, "kv_quant", False):       # scales [L,NB,BS,KV]
+            return ("stacked", None, None, "kv_heads")
+        if rank == 4 and cfg.attention == "mla" and \
+                shape[-1] == cfg.kv_lora_rank:         # c_kv [L,NB,BS,r]
+            return ("stacked", None, None, "latent")
+        return ("stacked",) + (None,) * (rank - 1)     # tables, k_rope, rings
+
+    struct = paged_cache_struct(cfg, slots, cache_len, block_size, num_blocks)
+    return jax.tree.map(lambda s: axes_for(s.shape, s.dtype), struct)
+
+
 def cache_axes(cfg, batch: int, cache_len: int, enc_len: int = 0):
     """Logical axes tree matching cache_struct (for dry-run in_shardings)."""
     def axes_for(shape, dtype):

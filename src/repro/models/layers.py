@@ -130,7 +130,9 @@ def mlp_init(key, d: int, d_ff: int, act: str = "silu"):
 
 def mlp_apply(p, x, act: str, ctx: Ctx):
     h = act_fn(act)(dense_apply(p["gate"], x, ctx)) * dense_apply(p["up"], x, ctx)
-    h = ctx.shard(h, ("batch", None, "mlp"))
+    # "tp_collect" == the "mlp" model-axis layout under the default rules
+    # (no-op); serving rules gather h so the down contraction is bitwise
+    h = ctx.shard(h, ("batch", None, "tp_collect"))
     return dense_apply(p["down"], h, ctx)
 
 

@@ -18,8 +18,8 @@ import jax.numpy as jnp
 from repro.backends import telemetry
 from repro.core.softmax_variants import spec_backend
 from repro.models.attention import (
-    attend_chunked, cache_write, cache_write_block, paged_gather, paged_write,
-    paged_write_block, valid_upto, verify_mask,
+    _collect_heads, attend_chunked, cache_write, cache_write_block,
+    paged_gather, paged_write, paged_write_block, valid_upto, verify_mask,
 )
 from repro.models.layers import Ctx, apply_rope, dense_apply, dense_init, norm_init, norm_apply
 
@@ -80,7 +80,8 @@ def mla_apply(p, x, cfg, ctx: Ctx, positions, kind: str = "causal"):
     v = ctx.shard(v, ("batch", None, "heads", None))
     scale = (dn + dr) ** -0.5
     out = attend_chunked(q, k, v, positions, positions, kind, cfg, ctx, scale)
-    return dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+    return dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, s, -1),
+                       ctx)
 
 
 def mla_prefill_tail(p, x, prefix_c, prefix_kr, cfg, ctx: Ctx, positions,
@@ -107,7 +108,7 @@ def mla_prefill_tail(p, x, prefix_c, prefix_kr, cfg, ctx: Ctx, positions,
     kv_pos = jnp.arange(s_all, dtype=jnp.int32)[None, :]
     out = attend_chunked(q, k, v, positions, kv_pos, "causal", cfg, ctx,
                          (dn + dr) ** -0.5)
-    y = dense_apply(p["wo"], out.reshape(b, t, -1), ctx)
+    y = dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, t, -1), ctx)
     return y, {"c_kv": c_t, "k_rope": kr_t[:, :, 0]}
 
 
@@ -120,7 +121,12 @@ def mla_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
     c_new, kr_new = _latents(p, x, cfg, ctx, positions)
     if "table" in cache:
         table = cache["table"]
-        c_pool = paged_write(cache["c_kv"], table, c_new[:, 0], cache_pos)
+        # latent pool partitions on r under the serving rules (each device
+        # holds a slice of every page); rope keys + table stay replicated —
+        # carry constraints keep the donated layout stable step to step
+        c_pool = ctx.shard(
+            paged_write(cache["c_kv"], table, c_new[:, 0], cache_pos),
+            (None, None, "latent"))
         kr_pool = paged_write(cache["k_rope"], table, kr_new[:, 0, 0], cache_pos)
         new_cache = {"c_kv": c_pool, "k_rope": kr_pool, "table": table}
         backend = spec_backend(cfg.softmax)
@@ -130,14 +136,17 @@ def mla_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
             return _mla_attend_paged_fused(p, q_nope, q_rope, new_cache,
                                            pos, cfg, ctx, backend, b,
                                            s), new_cache
-        c_kv = paged_gather(c_pool, table)
+        c_kv = ctx.shard(paged_gather(c_pool, table),
+                         ("batch", None, "latent"))
         k_rope = paged_gather(kr_pool, table)
         mask = valid_upto(c_kv.shape[1], cache_pos)[:, None, :]
         return _mla_attend(p, q_nope, q_rope, c_kv, k_rope, mask, cfg,
                            ctx, b, s), new_cache
     c_kv = cache_write(cache["c_kv"], c_new, cache_pos)
     k_rope = cache_write(cache["k_rope"], kr_new[:, :, 0], cache_pos)
-    c_kv = ctx.shard(c_kv, ("batch", "kv_seq", None))
+    # "latent" is None under default rules (split-KV layout unchanged) and the
+    # model axis under serving rules (r-sharded carry for head-TP serving)
+    c_kv = ctx.shard(c_kv, ("batch", "kv_seq", "latent"))
     k_rope = ctx.shard(k_rope, ("batch", "kv_seq", None))
     mask = valid_upto(c_kv.shape[1], cache_pos)[:, None, :]
     return _mla_attend(p, q_nope, q_rope, c_kv, k_rope, mask, cfg, ctx,
@@ -156,7 +165,9 @@ def mla_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
     c_new, kr_new = _latents(p, x, cfg, ctx, positions)
     if "table" in cache:
         table = cache["table"]
-        c_pool = paged_write_block(cache["c_kv"], table, c_new, cache_pos)
+        c_pool = ctx.shard(
+            paged_write_block(cache["c_kv"], table, c_new, cache_pos),
+            (None, None, "latent"))
         kr_pool = paged_write_block(cache["k_rope"], table, kr_new[:, :, 0],
                                     cache_pos)
         new_cache = {"c_kv": c_pool, "k_rope": kr_pool, "table": table}
@@ -165,12 +176,13 @@ def mla_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions):
             return _mla_attend_paged_fused(p, q_nope, q_rope, new_cache,
                                            positions, cfg, ctx, backend, b,
                                            t), new_cache
-        c_kv = paged_gather(c_pool, table)
+        c_kv = ctx.shard(paged_gather(c_pool, table),
+                         ("batch", None, "latent"))
         k_rope = paged_gather(kr_pool, table)
     else:
         c_kv = cache_write_block(cache["c_kv"], c_new, cache_pos)
         k_rope = cache_write_block(cache["k_rope"], kr_new[:, :, 0], cache_pos)
-        c_kv = ctx.shard(c_kv, ("batch", "kv_seq", None))
+        c_kv = ctx.shard(c_kv, ("batch", "kv_seq", "latent"))
         k_rope = ctx.shard(k_rope, ("batch", "kv_seq", None))
         new_cache = {"c_kv": c_kv, "k_rope": k_rope}
     mask = verify_mask(c_kv.shape[1], positions)
@@ -190,9 +202,14 @@ def _mla_output(p, o_lat, cfg, ctx: Ctx, b, s):
     """Up-project the latent attention output through W_uv and the output
     projection — shared tail of the reference and fused paths."""
     h, dv = cfg.n_heads, cfg.v_head_dim
+    # serving rules: gather the latent rank (sharded via the c_kv pool) so
+    # the wuv contraction over r is full-width per head, then gather heads
+    # before wo — both no-ops under the default rules
+    o_lat = ctx.shard(o_lat, ("batch", None, "heads", "tp_collect"))
     wuv = ctx.cast(p["wuv"]["w"]).reshape(cfg.kv_lora_rank, h, dv)
     out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wuv)
-    return dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+    return dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, s, -1),
+                       ctx)
 
 
 def _mla_attend_paged_fused(p, q_nope, q_rope, new_cache, positions, cfg,
@@ -223,7 +240,13 @@ def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, mask, cfg, ctx: Ctx,
     heads)."""
     h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
     q_lat = _absorb_queries(p, q_nope, cfg, ctx)
-    scores = jnp.einsum("bqhr,blr->bhql", q_lat, ctx.cast(c_kv))
+    # serving rules: the latent POOL is rank-sharded (the capacity win), but
+    # the attend view gathers the rank per device so the score contraction
+    # over r is full-width — bitwise per head, and still head-parallel
+    # (q_lat/scores shard on heads). Under the default rules this is the
+    # split-KV layout the carry already has.
+    c_kv = ctx.shard(ctx.cast(c_kv), ("batch", "kv_seq", "tp_collect"))
+    scores = jnp.einsum("bqhr,blr->bhql", q_lat, c_kv)
     scores = scores + jnp.einsum("bqhd,bld->bhql", q_rope, ctx.cast(k_rope))
     scores = scores.astype(jnp.float32) * ((dn + dr) ** -0.5)
     scores = ctx.shard(scores, ("batch", "heads", None, "kv_seq"))
@@ -231,5 +254,5 @@ def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, mask, cfg, ctx: Ctx,
     backend = spec_backend(cfg.softmax)
     telemetry.record_softmax(backend, scores.shape, heads=h)
     w = backend.apply(scores, mask=mask).astype(ctx.dtype)
-    o_lat = jnp.einsum("bhql,blr->bqhr", w, ctx.cast(c_kv))
+    o_lat = jnp.einsum("bhql,blr->bqhr", w, c_kv)
     return _mla_output(p, o_lat, cfg, ctx, b, s)

@@ -197,7 +197,8 @@ def attn_prefill(p, x, cfg, ctx: Ctx, positions, kind: str, cache_len: int):
     q, k, v = project_qkv(p, x, cfg, ctx, positions)
     pos = positions[0] if cfg.rope_type == "mrope" else positions
     out = attend_chunked(q, k, v, pos, pos, kind, cfg, ctx)
-    y = dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
+    from repro.models.attention import _collect_heads
+    y = dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, s, -1), ctx)
     if kind == "window":
         w_cap = min(cfg.window, cache_len)
         ring_k = jnp.zeros((b, w_cap) + k.shape[2:], k.dtype)
@@ -210,17 +211,23 @@ def attn_prefill(p, x, cfg, ctx: Ctx, positions, kind: str, cache_len: int):
         pos_buf = pos_buf.at[:, slots].set(jnp.arange(lo, s, dtype=jnp.int32))
         cache = {"k": ring_k, "v": ring_v, "pos": pos_buf}
     else:
+        # constrain the freshly built cache the same way decode constrains its
+        # carry, so prefill hands decode tensors already in the serving layout
+        # (head-sharded under serving rules, split-KV under default rules)
+        kv_ax = ("batch", "kv_seq", "kv_heads", None)
         if getattr(cfg, "kv_quant", False):
             from repro.models.attention import kv_quantize
             kq, ks = kv_quantize(k)
             vq, vs = kv_quantize(v)
-            cache = {"k": _pad_cache(kq, cache_len),
-                     "v": _pad_cache(vq, cache_len),
-                     "k_scale": _pad_cache(ks, cache_len),
-                     "v_scale": _pad_cache(vs, cache_len)}
+            cache = {"k": ctx.shard(_pad_cache(kq, cache_len), kv_ax),
+                     "v": ctx.shard(_pad_cache(vq, cache_len), kv_ax),
+                     "k_scale": ctx.shard(_pad_cache(ks, cache_len),
+                                          ("batch", "kv_seq", "kv_heads")),
+                     "v_scale": ctx.shard(_pad_cache(vs, cache_len),
+                                          ("batch", "kv_seq", "kv_heads"))}
         else:
-            cache = {"k": _pad_cache(k, cache_len),
-                     "v": _pad_cache(v, cache_len)}
+            cache = {"k": ctx.shard(_pad_cache(k, cache_len), kv_ax),
+                     "v": ctx.shard(_pad_cache(v, cache_len), kv_ax)}
     return y, cache
 
 
@@ -228,7 +235,8 @@ def mla_prefill(p, x, cfg, ctx: Ctx, positions, cache_len: int):
     from repro.models.mla import _latents
     y = mla_apply(p, x, cfg, ctx, positions)
     c_kv, k_rope = _latents(p, x, cfg, ctx, positions)
-    return y, {"c_kv": _pad_cache(c_kv, cache_len),
+    return y, {"c_kv": ctx.shard(_pad_cache(c_kv, cache_len),
+                                 ("batch", "kv_seq", "latent")),
                "k_rope": _pad_cache(k_rope[:, :, 0, :], cache_len)}
 
 

@@ -262,9 +262,11 @@ class Engine:
         # speculated against — their distribution is opaque)
         self._sampler_kind = sampler if isinstance(sampler, str) else None
         self._sampler_kw = dict(sampler_kw)
-        self._spec_jits: dict = {}   # (draft_k, kernel) -> jitted verify step
+        self._spec_jits: dict = {}   # (draft_k, kernel[, mesh]) -> verify step
         self._kernel_models: dict = {}   # kernel name -> Model variant
-        self._serve_jits: dict = {}      # kernel name -> jitted serve step
+        self._serve_jits: dict = {}      # kernel[, mesh] -> jitted serve step
+        self._mesh_models: dict = {}     # (kernel, mesh) -> serving Model
+        self._mesh_execs: dict = {}      # mesh -> placed params + per-mesh jits
         # donate the cache (arg 1): decode updates it in place; params (arg 0)
         # are reused across calls and must NOT be donated. Prefill donates
         # nothing: params are reused, the int32 token batch feeds a gather XLA
@@ -478,29 +480,76 @@ class Engine:
                 mesh=ctx.mesh, dtype=ctx.dtype)
         return self._kernel_models[kernel]
 
-    def _get_serve_step(self, kernel: str = "jnp"):
+    def _serving_model(self, kernel: str, mesh) -> Model:
+        """The Model variant decoding under ``kernel`` ON ``mesh``: same
+        config and params as :meth:`_kernel_model`, but built with the
+        serving rules (heads / MLA latents on the model axis, kv_seq
+        unsharded) so every ``ctx.shard`` carry constraint resolves to the
+        stable head-sharded layout. Memoized per (kernel, mesh) — a mesh is
+        hashable and serve() reuses one mesh object across calls."""
+        from repro.distributed.sharding import ShardingRules, serving_rules
+
+        key = (kernel, mesh)
+        if key not in self._mesh_models:
+            base = self._kernel_model(kernel)   # validates the kernel name
+            ctx = base.ctx
+            rules = serving_rules(
+                ctx.rules if ctx.rules is not None
+                else ShardingRules(base.cfg.sharding_overrides))
+            self._mesh_models[key] = Model(base.cfg, rules=rules, mesh=mesh,
+                                           dtype=ctx.dtype)
+        return self._mesh_models[key]
+
+    def _mesh_exec(self, mesh) -> dict:
+        """Per-mesh executor state: params placed ONCE (column/row-parallel
+        NamedShardings via the serving rules) plus the prefill jits bound to
+        the mesh-rules model. Committed-device arrays cannot mix with
+        single-device ones inside a jit, so every function that touches
+        params or cache gets a per-mesh instance; the cache-surgery jits
+        (scatter / copy / insert / prefix-gather) are placement-agnostic
+        pytree ops and are shared with the single-device path."""
+        if mesh not in self._mesh_execs:
+            from repro.serving.sharded import shard_params
+
+            m = self._serving_model("jnp", mesh)
+            self._mesh_execs[mesh] = {
+                "rules": m.ctx.rules,
+                "params": shard_params(self.params, self.model.param_axes(),
+                                       m.ctx.rules, mesh),
+                "prefill": jax.jit(m.prefill, static_argnames=("cache_len",)),
+                "prefill_tail": jax.jit(m.prefill_tail,
+                                        static_argnames=("prefix_len",)),
+            }
+        return self._mesh_execs[mesh]
+
+    def _get_serve_step(self, kernel: str = "jnp", mesh=None):
         """The compiled continuous-batching step for one decode kernel
-        (memoized; ``"jnp"`` aliases the step built in ``__init__``)."""
-        if kernel not in self._serve_jits:
-            self._serve_jits[kernel] = jax.jit(
-                make_serve_step_fn(self._kernel_model(kernel), self.sample,
+        (memoized; ``"jnp"`` aliases the step built in ``__init__``; with a
+        ``mesh`` the step closes over the serving-rules model variant)."""
+        key = kernel if mesh is None else (kernel, mesh)
+        if key not in self._serve_jits:
+            model = (self._kernel_model(kernel) if mesh is None
+                     else self._serving_model(kernel, mesh))
+            self._serve_jits[key] = jax.jit(
+                make_serve_step_fn(model, self.sample,
                                    self.eos_id, self.pad_id),
                 donate_argnums=(1,))
-        return self._serve_jits[kernel]
+        return self._serve_jits[key]
 
-    def _get_spec_step(self, draft_k: int, kernel: str = "jnp"):
-        """The compiled draft-verify step for one (draft depth, kernel) —
-        shapes are static per (slots, cache_len, K), so serving any number
-        of traces shares one compilation per geometry."""
-        key = (draft_k, kernel)
+    def _get_spec_step(self, draft_k: int, kernel: str = "jnp", mesh=None):
+        """The compiled draft-verify step for one (draft depth, kernel[,
+        mesh]) — shapes are static per (slots, cache_len, K), so serving any
+        number of traces shares one compilation per geometry."""
+        key = (draft_k, kernel) if mesh is None else (draft_k, kernel, mesh)
         if key not in self._spec_jits:
             verifier = make_spec_verifier(
                 self._sampler_kind,
                 pad_id=self.pad_id if self.pad_id is not None else 0,
                 **self._sampler_kw)
+            model = (self._kernel_model(kernel) if mesh is None
+                     else self._serving_model(kernel, mesh))
             self._spec_jits[key] = jax.jit(
-                make_spec_step_fn(self._kernel_model(kernel), verifier,
-                                  draft_k),
+                make_spec_step_fn(model, verifier, draft_k),
                 donate_argnums=(1,))
         return self._spec_jits[key]
 
@@ -536,7 +585,8 @@ class Engine:
               prefix_share: bool = False, speculative: bool = False,
               draft_k: int = 4, draft: str = "ngram", max_ngram: int = 3,
               draft_model=None, draft_params=None,
-              kernel: str = "jnp") -> ServeReport:
+              kernel: str = "jnp", mesh=None,
+              shards: Optional[int] = None) -> ServeReport:
         """Continuous-batching serving over a trace of timed arrivals.
 
         Runs ONE compiled decode step (``make_serve_step_fn``) in a host
@@ -589,6 +639,20 @@ class Engine:
         bit-identical outputs, one compiled step per geometry exactly like
         the default executor, and composes with ``prefix_share`` and
         ``speculative``.
+
+        ``mesh`` (or ``shards=N``, which builds a 1-D
+        :func:`repro.launch.mesh.make_serving_mesh`) serves tensor-parallel:
+        attention heads — the MLA latent rank for ``attention="mla"`` —
+        shard across the mesh's ``"model"`` axis and the paged block pool
+        partitions with them, so each device holds its heads' slice of every
+        block (~1/N pool bytes per device; block tables and allocator
+        metadata stay replicated/host-side and shard-agnostic). Params are
+        placed once per mesh and the loop still runs ONE compiled step with
+        the donated sharded carry. Head counts (or the latent rank) that do
+        not divide the shard count raise up front
+        (``serving.sharded.validate_serving_shards``); greedy outputs stay
+        token-identical to single-device serving and the path composes with
+        ``paged``/``prefix_share``/``speculative``/``kernel``.
         """
         cfg = self.model.cfg
         if cfg.family == "encdec" or cfg.rope_type == "mrope":
@@ -608,7 +672,19 @@ class Engine:
         if kernel != "jnp" and not paged:
             raise ValueError("kernel='pallas' requires paged=True (the "
                              "fused kernel walks the block table)")
-        serve_step = self._get_serve_step(kernel)
+        if shards is not None and mesh is None:
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh(shards)
+        if mesh is not None:
+            from repro.serving.sharded import validate_serving_mesh
+            validate_serving_mesh(cfg, mesh)
+            ex = self._mesh_exec(mesh)
+            params, prefill = ex["params"], ex["prefill"]
+            prefill_tail = ex["prefill_tail"]
+        else:
+            params, prefill = self.params, self._prefill
+            prefill_tail = self._prefill_tail
+        serve_step = self._get_serve_step(kernel, mesh)
         alloc = None
         shareable = False
         if paged:
@@ -638,6 +714,14 @@ class Engine:
         else:
             sched = SlotScheduler(reqs, slots, C, policy=policy)
             cache = kv_cache.cache_zeros(cfg, slots, C)
+        if mesh is not None:
+            # place the zeroed cache on the serving layout up front — the
+            # donated carry then keeps it there with zero relayouts
+            from repro.serving.sharded import place_cache
+            axes = (kv_cache.paged_cache_axes(cfg, slots, C, block_size,
+                                              num_blocks) if paged
+                    else kv_cache.serve_cache_axes(cfg, slots, C))
+            cache = place_cache(cache, axes, ex["rules"], mesh)
         proposer = None
         spec_step = None
         if speculative:
@@ -655,7 +739,7 @@ class Engine:
                     f"draft model vocab {proposer.model.cfg.vocab} != "
                     f"target vocab {cfg.vocab}")
             proposer.begin(slots, C)
-            spec_step = self._get_spec_step(draft_k, kernel)
+            spec_step = self._get_spec_step(draft_k, kernel, mesh)
         attr = telemetry.SlotCostAttributor() if report_cost else None
         geom = (block_size, num_blocks) if paged else None
         step_cost = (self._meter_serve_step(slots, C, geom)
@@ -732,15 +816,15 @@ class Engine:
             row = np.full((C // bs,), alloc.num_blocks, np.int32)
             row[:len(ids)] = id_arr
             if s == 0:
-                logits, slot_cache = self._prefill(
-                    self.params, {"tokens": jnp.asarray(req.prompt[None])},
+                logits, slot_cache = prefill(
+                    params, {"tokens": jnp.asarray(req.prompt[None])},
                     cache_len=C)
                 t0, t1 = 0, P
             else:
                 prefix = self._paged_prefix(cache, jnp.asarray(id_arr[:keep]),
                                             s=s)
-                logits, slot_cache = self._prefill_tail(
-                    self.params, {"tokens": jnp.asarray(req.prompt[None, s:])},
+                logits, slot_cache = prefill_tail(
+                    params, {"tokens": jnp.asarray(req.prompt[None, s:])},
                     prefix, prefix_len=s)
                 t0, t1 = 0, P - s
             wpos = np.arange(s, P)
@@ -773,8 +857,8 @@ class Engine:
                 if alloc is not None:
                     logits = install_paged(slot, req)
                 else:
-                    logits, slot_cache = self._prefill(
-                        self.params, {"tokens": jnp.asarray(req.prompt[None])},
+                    logits, slot_cache = prefill(
+                        params, {"tokens": jnp.asarray(req.prompt[None])},
                         cache_len=C)
                     cache = self._insert_slot(cache, slot_cache,
                                               jnp.int32(slot))
@@ -782,6 +866,10 @@ class Engine:
                     if attr is not None:
                         attr.record_request(
                             req.rid, self._meter_prefill(req.prompt_len, C))
+                if mesh is not None:
+                    # detach admission logits from the mesh: the eager
+                    # sampler should not dispatch an SPMD program per admit
+                    logits = jnp.asarray(np.asarray(logits))
                 k = jax.random.PRNGKey(req.seed)
                 k, sub = jax.random.split(k)
                 first = int(self.sample(logits[:, -1], sub)[0])
@@ -800,7 +888,7 @@ class Engine:
             if active and speculative:
                 drafts = proposer.propose(active, tok, pos)
                 cache, out_d, n_d, keys_d = spec_step(
-                    self.params, cache, jnp.asarray(tok), jnp.asarray(drafts),
+                    params, cache, jnp.asarray(tok), jnp.asarray(drafts),
                     jnp.asarray(pos), jnp.asarray(keys))
                 out_np = np.asarray(out_d)
                 n_np = np.asarray(n_d)
@@ -843,7 +931,7 @@ class Engine:
                 t += 1.0
             elif active:
                 cache, toks_d, keys_d, done_d = serve_step(
-                    self.params, cache, jnp.asarray(tok), jnp.asarray(pos),
+                    params, cache, jnp.asarray(tok), jnp.asarray(pos),
                     jnp.asarray(keys), jnp.asarray(done))
                 toks_np = np.asarray(toks_d)
                 keys = np.array(keys_d)      # copy: host arrays stay writable

@@ -263,6 +263,18 @@ class BlockAllocator:
 
     # ------------------------------------------------------------- accounting
 
+    def state_signature(self) -> tuple:
+        """The allocator's complete observable state as one hashable value:
+        free-list order, refcounts, registered keys, LRU order, and the
+        eviction/CoW/hit counters. Tensor-parallel serving relies on block
+        ids meaning the SAME thing on every device — the pool shards by
+        heads, never by block — so two allocators driven by the same op
+        sequence must stay signature-identical step for step; the sharded
+        scheduler property test asserts exactly that."""
+        return (tuple(self._free), tuple(self._ref), tuple(self._key_of),
+                tuple(sorted(self._by_key.items())), tuple(self._lru),
+                self.evictions, self.cow_copies, self.shared_hits)
+
     def available(self) -> int:
         """Blocks allocatable right now (free + evictable cached)."""
         return len(self._free) + len(self._lru)

@@ -257,6 +257,76 @@ def test_block_pool_partition_under_random_ops(num_blocks, ops, rnd):
     assert alloc.available() == alloc.num_blocks
 
 
+@given(st.integers(2, 12), st.lists(st.integers(0, 4), max_size=60),
+       st.randoms(use_true_random=False), st.integers(2, 4))
+@settings(**SETTINGS)
+def test_sharded_pool_mirrors_stay_in_lockstep(num_blocks, ops, rnd,
+                                               n_shards):
+    """Tensor-parallel serving shards the pool by HEADS, never by block: one
+    host-side allocator's decisions apply verbatim to every device's slice.
+    Model that as N mirror allocators driven by the identical admit / evict /
+    CoW / share op stream — after EVERY op their complete observable state
+    (``state_signature``: free-list order, refcounts, registry, LRU order,
+    counters) must equal the logical allocator's, and each mirror must hold
+    the pool partition invariant. Any drift would mean a block id that names
+    different storage on different shards — cache corruption."""
+    logical = BlockAllocator(num_blocks, block_size=4)
+    mirrors = [BlockAllocator(num_blocks, block_size=4)
+               for _ in range(n_shards)]
+    held = []
+    keyno = 0
+
+    def everywhere(fn):
+        """Apply one op to the logical allocator and every mirror; all must
+        agree on the outcome (same return / same exception class)."""
+        outs = []
+        for a in [logical] + mirrors:
+            try:
+                outs.append(("ok", fn(a)))
+            except (RuntimeError, AssertionError) as e:
+                outs.append((type(e).__name__, None))
+        assert all(o == outs[0] for o in outs[1:]), outs
+        if outs[0][0] != "ok":
+            raise RuntimeError(outs[0][0])
+        return outs[0][1]
+
+    for op in ops:
+        try:
+            if op == 0:
+                b = everywhere(lambda a: a.alloc())
+                held.append(b)
+            elif op == 1 and held:
+                b = rnd.choice(held)
+                held.remove(b)
+                everywhere(lambda a: a.release_block(b))
+            elif op == 2 and held:
+                b = rnd.choice(held)
+                if not logical.registered(b) and logical._ref[b] == 1:
+                    key = f"k{keyno}".encode()
+                    keyno += 1
+                    everywhere(lambda a: a.register(key, b))
+            elif op == 3 and logical._by_key:
+                key = rnd.choice(sorted(logical._by_key))
+                held.append(everywhere(lambda a: a.acquire_cached(key)))
+            elif op == 4 and held:
+                b = rnd.choice(held)
+                b2, copied = everywhere(lambda a: a.writable(b))
+                if copied:
+                    held.remove(b)
+                    held.append(b2)
+        except RuntimeError:
+            pass    # exhaustion — everywhere() already checked agreement
+        sig = logical.state_signature()
+        for m in mirrors:
+            assert m.state_signature() == sig
+            _check_pool(m)
+    for b in held:
+        everywhere(lambda a: a.release_block(b))
+    sig = logical.state_signature()
+    assert all(m.state_signature() == sig for m in mirrors)
+    assert logical.available() == num_blocks
+
+
 @given(st.integers(1, 3), st.integers(1, 6),
        st.lists(st.integers(0, 3), min_size=1, max_size=10))
 @settings(**SETTINGS)
