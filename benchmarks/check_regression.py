@@ -63,6 +63,25 @@ METRICS = {
     "sharded.capacity_ratio": ("det", None),
     # pure byte accounting, lower is better: growth = a pool layout leak
     "sharded.pool_bytes_per_device": ("det_low", None),
+    # SLA serve comparison (serve_bench --sla): chunked prefill + priority
+    # classes + preemption vs whole-prefill admission on the bursty trace
+    "sla.whole.tokens_per_s": ("abs", None),
+    "sla.chunked.tokens_per_s": ("abs", None),
+    # deterministic contracts: no token drift, no leaked blocks, every
+    # preemption resumed, per-step prompt work bounded by the chunk
+    "sla.token_parity": ("det", None),
+    "sla.resume_parity": ("det", None),
+    "sla.chunk_bound_ok": ("det", None),
+    # lower is better and deterministic: a leak is a leak on any runner;
+    # per-step prefill growth means the chunk budget stopped binding
+    "sla.leaked_blocks": ("det_low", None),
+    "sla.chunked.max_prefill_per_step": ("det_low", None),
+    # wall-clock payoff with an explicit floor: whole/chunked interactive
+    # p99 TBT — below 1.0 the chunking win itself is gone
+    "sla.tbt_p99_ratio": ("ratio", 1.0),
+    # per-class SLA attainment is wall-clock on a shared runner
+    "sla.whole.sla_attainment_c0": ("abs", None),
+    "sla.chunked.sla_attainment_c0": ("abs", None),
 }
 
 def _kind(name: str):
@@ -149,6 +168,21 @@ def _metrics(report: dict) -> dict:
                 "pool_bytes_per_device"):
         if key in sh:
             out[f"sharded.{key}"] = float(sh[key])
+    sl = report.get("sla", {}).get("results", {})
+    for mode in ("whole", "chunked"):
+        if mode in sl:
+            out[f"sla.{mode}.tokens_per_s"] = sl[mode]["tokens_per_s"]
+            att = sl[mode].get("classes", {}).get("0", {}).get(
+                "sla_attainment")
+            if att is not None:
+                out[f"sla.{mode}.sla_attainment_c0"] = float(att)
+    if "chunked" in sl:
+        out["sla.chunked.max_prefill_per_step"] = float(
+            sl["chunked"]["max_prefill_per_step"])
+    for key in ("token_parity", "resume_parity", "chunk_bound_ok",
+                "leaked_blocks", "tbt_p99_ratio"):
+        if key in sl:
+            out[f"sla.{key}"] = float(sl[key])
     return out
 
 
@@ -177,6 +211,11 @@ def main():
         b, fr = base[name], fresh[name]
         kind, floor = _kind(name)
         if b <= 0:
+            # a zero baseline on a lower-is-better metric is a hard floor:
+            # any fresh growth (e.g. leaked blocks 0 -> N) is a regression
+            if kind == "det_low" and fr > b:
+                failures.append(name)
+                print(f"REGRESSION {name:40s} {b:10.3f} -> {fr:10.3f}")
             continue
         change = fr / b - 1.0
         dropped = fr < (1.0 - args.max_regression) * b

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 import jax
@@ -29,7 +30,9 @@ from repro.core.softmax_variants import SoftmaxSpec
 from repro.data.synthetic import SyntheticCorpus
 from repro.models import build_model
 from repro.serving.engine import Engine
-from repro.serving.scheduler import Request, random_trace, shared_prefix_trace
+from repro.serving.scheduler import (Request, bursty_trace, random_trace,
+                                     shared_prefix_trace, trace_from_json,
+                                     trace_to_json)
 
 
 def bench(arch: str, n_requests: int, slots: int, seed: int,
@@ -438,6 +441,113 @@ def bench_sharded(arch: str, n_requests: int, slots: int, seed: int,
             "results": out}
 
 
+def bench_sla(arch: str, n_requests: int, slots: int, seed: int,
+              iters: int, block_size: int, prefill_chunk: int,
+              trace_path: str | None = None) -> dict:
+    """SLA behaviour under the adversarial bursty shape: a steady stream of
+    short interactive requests (class 0, tight deadlines) punctuated by
+    bursts of long-prompt batch jobs (class 1). ``whole`` admits each burst
+    prompt as one prefill — stalling every in-flight decode for the full
+    prompt — while ``chunked`` caps prompt work at ``prefill_chunk`` tokens
+    per engine step; both run the paged executor with priority admission and
+    preemption on. Per-request streams are pinned to eager generation, so
+    token parity across the two modes is a deterministic gate, as are zero
+    leaked blocks, resume==preemption bookkeeping, and the per-step prefill
+    bound; the interactive-class p99 TBT ratio (whole/chunked, medians over
+    interleaved iters) is the wall-clock payoff and gates via
+    ``--min-sla-ratio``. The trace replays byte-for-byte from ``--trace``
+    JSON (written on first run) so CI compares the very same arrivals."""
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    eng = Engine(model, params, max_new=8)
+    if trace_path and os.path.exists(trace_path):
+        with open(trace_path) as f:
+            reqs = trace_from_json(json.load(f))
+        print(f"replayed {len(reqs)}-request trace from {trace_path}",
+              file=sys.stderr)
+    else:
+        reqs = bursty_trace(n_requests, cfg.vocab, seed=seed,
+                            short_lens=(4, 8), short_max_new=(8, 16),
+                            short_spacing=1.0, burst_every=10.0,
+                            burst_size=2, long_prompt=64, long_max_new=4,
+                            deadline_slack=4.0)
+        if trace_path:
+            with open(trace_path, "w") as f:
+                json.dump(trace_to_json(reqs), f)
+            print(f"wrote trace to {trace_path}", file=sys.stderr)
+    # the JSON round-trip is part of the contract: a dumped trace replays
+    # to identical requests (exact prompts, floats preserved by json repr)
+    for a, b in zip(reqs, trace_from_json(
+            json.loads(json.dumps(trace_to_json(reqs))))):
+        assert (a.rid, a.max_new, a.arrival, a.seed, a.priority,
+                a.deadline) == (b.rid, b.max_new, b.arrival, b.seed,
+                                b.priority, b.deadline)
+        assert np.array_equal(a.prompt, b.prompt)
+    cache_len = max(r.prompt_len + r.max_new for r in reqs)
+
+    modes = {"whole": {}, "chunked": dict(prefill_chunk=prefill_chunk)}
+    base_kw = dict(slots=slots, cache_len=cache_len, paged=True,
+                   block_size=block_size, preemption=True)
+    for kw in modes.values():
+        eng.serve(reqs, **base_kw, **kw)       # warm / compile
+    walls = {m: [] for m in modes}
+    tbt99 = {m: [] for m in modes}
+    reports = {}
+    for _ in range(iters):
+        for mode, kw in modes.items():
+            rep = eng.serve(reqs, **base_kw, **kw)
+            walls[mode].append(rep.wall_s)
+            tbt99[mode].append(rep.class_latency[0]["tbt_p99"])
+            reports[mode] = rep
+    for a, b in zip(reports["whole"].results, reports["chunked"].results):
+        assert np.array_equal(a.tokens, b.tokens), \
+            f"chunked prefill parity broke on rid {a.rid}"
+    gen_tokens = sum(r.max_new for r in reqs)
+    out = {}
+    for mode in modes:
+        rep = reports[mode]
+        wall = float(np.median(walls[mode]))
+        out[mode] = {
+            "steps": rep.steps,
+            "wall_s": wall,
+            "wall_s_all": walls[mode],
+            "tokens_per_s": gen_tokens / wall,
+            "max_prefill_per_step": rep.max_prefill_per_step,
+            "preemptions": rep.preemptions,
+            "resumes": rep.resumes,
+            "leaked_blocks": rep.leaked_blocks,
+            "interactive_tbt_p99_s": float(np.median(tbt99[mode])),
+            "interactive_tbt_p99_all_s": tbt99[mode],
+            # per-class SLA rows straight off the report (the reference
+            # run; steps/outputs/counters are deterministic per mode)
+            "classes": {str(k): v for k, v in rep.class_latency.items()},
+        }
+        print(f"{mode:11s} steps={rep.steps:5d} "
+              f"tps={out[mode]['tokens_per_s']:8.0f} tok/s  "
+              f"tbt_p99(c0)={out[mode]['interactive_tbt_p99_s'] * 1e3:7.1f}"
+              f" ms  max_pf={rep.max_prefill_per_step:3d} "
+              f"preempt={rep.preemptions} leak={rep.leaked_blocks}",
+              file=sys.stderr)
+    out["token_parity"] = 1.0      # the zip/assert above would have raised
+    out["leaked_blocks"] = max(reports[m].leaked_blocks for m in modes)
+    out["resume_parity"] = float(all(
+        reports[m].resumes == reports[m].preemptions for m in modes))
+    out["chunk_bound_ok"] = float(
+        reports["chunked"].max_prefill_per_step <= prefill_chunk)
+    out["tbt_p99_ratio"] = (out["whole"]["interactive_tbt_p99_s"]
+                            / max(out["chunked"]["interactive_tbt_p99_s"],
+                                  1e-9))
+    print(f"chunked interactive p99 TBT {out['tbt_p99_ratio']:.2f}x better "
+          f"than whole prefill", file=sys.stderr)
+    return {"config": {"requests": n_requests, "slots": slots, "seed": seed,
+                       "iters": iters, "block_size": block_size,
+                       "prefill_chunk": prefill_chunk,
+                       "trace": trace_path, "long_prompt": 64,
+                       "burst_every": 10.0, "deadline_slack": 4.0},
+            "results": out}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -487,6 +597,23 @@ def main():
                          "N mesh shards vs single-device (needs N devices; "
                          "on CPU hosts set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--sla", action="store_true",
+                    help="also bench chunked prefill + priority classes + "
+                         "preemption vs whole-prefill admission on the "
+                         "bursty overload trace")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="--sla: prompt tokens committed per engine step "
+                         "in the chunked mode")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="--sla: replay the request trace from this JSON "
+                         "file (written on first run) so CI compares the "
+                         "exact same arrivals")
+    ap.add_argument("--min-sla-ratio", type=float, default=0.0,
+                    help="with --sla: exit nonzero unless interactive-class "
+                         "p99 TBT under chunked prefill beats whole prefill "
+                         "by this ratio (token parity, zero leaked blocks, "
+                         "the per-step prefill bound, and resume==preempt "
+                         "bookkeeping always gate)")
     args = ap.parse_args()
 
     report = bench(args.arch, args.requests, args.slots, args.seed, args.iters)
@@ -506,6 +633,10 @@ def main():
         report["sharded"] = bench_sharded(
             args.arch, args.requests, args.slots, args.seed, args.iters,
             args.shards, args.block_size)
+    if args.sla:
+        report["sla"] = bench_sla(
+            args.arch, args.requests, args.slots, args.seed, args.iters,
+            args.block_size, args.prefill_chunk, args.trace)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out}")
@@ -581,6 +712,33 @@ def main():
                 f"sharding did not shrink the per-device pool: "
                 f"{sh['pool_bytes_per_device']:.0f} >= "
                 f"{sh['pool_bytes_single']:.0f} bytes")
+    if args.sla:
+        sl = report["sla"]["results"]
+        print(f"sla (chunked vs whole prefill): interactive p99 TBT "
+              f"{sl['tbt_p99_ratio']:.2f}x better, "
+              f"max_prefill/step {sl['whole']['max_prefill_per_step']} -> "
+              f"{sl['chunked']['max_prefill_per_step']}, "
+              f"preemptions={sl['chunked']['preemptions']}, "
+              f"leaked_blocks={sl['leaked_blocks']}")
+        # deterministic gates first: the SLA machinery must never perturb
+        # a token, leak a block, or break its own bookkeeping
+        if sl["token_parity"] < 1.0:
+            raise SystemExit("chunked prefill broke token parity vs whole")
+        if sl["leaked_blocks"] > 0:
+            raise SystemExit(
+                f"serve leaked {sl['leaked_blocks']} blocks")
+        if sl["chunk_bound_ok"] < 1.0:
+            raise SystemExit(
+                "chunked mode exceeded the per-step prefill bound: "
+                f"{sl['chunked']['max_prefill_per_step']} > chunk")
+        if sl["resume_parity"] < 1.0:
+            raise SystemExit("preemptions without matching resumes")
+        if args.min_sla_ratio > 0 and \
+                sl["tbt_p99_ratio"] < args.min_sla_ratio:
+            raise SystemExit(
+                f"chunked prefill p99 TBT below gate: "
+                f"{sl['tbt_p99_ratio']:.2f}x < {args.min_sla_ratio}x "
+                f"vs whole prefill")
 
 
 if __name__ == "__main__":

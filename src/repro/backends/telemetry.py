@@ -194,3 +194,56 @@ class SlotCostAttributor:
     def total(self) -> CostReport:
         """The batch meter: everything recorded, before attribution."""
         return self._batch_total
+
+    def class_totals(self, class_of) -> dict:
+        """Partition the attributed cost by tenant class.
+
+        ``class_of`` maps a request id to its class label (e.g. the
+        request's priority). Because per-request shares already sum to the
+        batch meter, the returned per-class reports partition it too:
+        ``sum(class_totals(f).values()) == total()`` up to float rounding —
+        the multi-tenant fairness invariant the scheduler property suite
+        pins."""
+        out: dict = {}
+        for rid, rep in self._by_request.items():
+            c = class_of(rid)
+            out[c] = out.get(c, ZERO_COST) + rep
+        return out
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile without numpy (telemetry stays dependency-free
+    of the serving layer)."""
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    idx = min(len(ys) - 1, max(0, int(round(q / 100.0 * (len(ys) - 1)))))
+    return ys[idx]
+
+
+def class_latency_summary(results) -> dict:
+    """Per-priority-class latency rollup over finished serve results.
+
+    ``results`` is any sequence of objects with ``priority``, ``ttft_s``,
+    ``tbt_s`` (list of inter-token gaps), ``deadline_met`` (Optional[bool])
+    and ``preempts`` attributes — duck-typed so this module never imports
+    the serving layer. Returns ``{priority: {n, ttft_p50, ttft_p99,
+    tbt_p50, tbt_p99, sla_attainment, preemptions}}`` with latencies in
+    seconds; ``sla_attainment`` is None when no request in the class
+    carried a deadline."""
+    by_class: dict = {}
+    for r in results:
+        by_class.setdefault(int(r.priority), []).append(r)
+    out: dict = {}
+    for cls, rs in sorted(by_class.items()):
+        ttft = [r.ttft_s for r in rs]
+        tbt = [g for r in rs for g in r.tbt_s]
+        met = [r.deadline_met for r in rs if r.deadline_met is not None]
+        out[cls] = {
+            "n": len(rs),
+            "ttft_p50": _percentile(ttft, 50), "ttft_p99": _percentile(ttft, 99),
+            "tbt_p50": _percentile(tbt, 50), "tbt_p99": _percentile(tbt, 99),
+            "sla_attainment": (sum(met) / len(met)) if met else None,
+            "preemptions": sum(r.preempts for r in rs),
+        }
+    return out

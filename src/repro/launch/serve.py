@@ -99,6 +99,15 @@ def main():
                          "bit-identical to single-device). On CPU hosts "
                          "set XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N before launch")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="--continuous: cap prompt tokens committed per "
+                         "engine step — long prefills interleave with "
+                         "decode instead of stalling it (bit-identical "
+                         "output)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="--paged: premium arrivals may swap a lower-class "
+                         "request's blocks to host memory and resume it "
+                         "later, bit-identically")
     args = ap.parse_args()
     if (args.paged or args.prefix_share or args.speculative or args.shards) \
             and not args.continuous:
@@ -116,6 +125,12 @@ def main():
     if args.kernel != "jnp" and not args.paged:
         ap.error("--kernel pallas requires --paged (the fused kernel walks "
                  "the per-slot block table)")
+    if args.prefill_chunk is not None and not args.continuous:
+        ap.error("--prefill-chunk requires --continuous (it paces "
+                 "Engine.serve admissions)")
+    if args.preemption and not args.paged:
+        ap.error("--preemption requires --paged (swap-out releases and "
+                 "restores pool blocks)")
 
     metered = get_backend(args.softmax).metered
     spec = SoftmaxSpec(args.softmax, PrecisionConfig(M=args.M, N=args.N)) \
@@ -175,7 +190,9 @@ def main():
                         prefix_share=args.prefix_share,
                         speculative=args.speculative, draft_k=args.draft_k,
                         kernel=args.kernel,
-                        shards=args.shards if args.shards else None)
+                        shards=args.shards if args.shards else None,
+                        prefill_chunk=args.prefill_chunk,
+                        preemption=args.preemption)
         eng.serve(reqs, **serve_kw)  # compile
         rep = eng.serve(reqs, report_cost=True, **serve_kw)
         import numpy as np
@@ -194,6 +211,21 @@ def main():
               f"{paged_note}{spec_note}")
         print(f"request latency p50={np.percentile(lat, 50) * 1e3:.1f} ms "
               f"p99={np.percentile(lat, 99) * 1e3:.1f} ms")
+        if args.prefill_chunk is not None or args.preemption:
+            print(f"sla: prefill_chunk={rep.prefill_chunk or 'off'} "
+                  f"(max prefill/step {rep.max_prefill_per_step}), "
+                  f"preemptions={rep.preemptions} resumes={rep.resumes} "
+                  f"leaked_blocks={rep.leaked_blocks}")
+            for cls in sorted(rep.class_latency):
+                c = rep.class_latency[cls]
+                sla = ("" if c["sla_attainment"] is None
+                       else f"  sla={c['sla_attainment'] * 100:.0f}%")
+                print(f"  class {cls}: n={c['n']} "
+                      f"ttft p50={c['ttft_p50'] * 1e3:.1f}/"
+                      f"p99={c['ttft_p99'] * 1e3:.1f} ms  "
+                      f"tbt p50={c['tbt_p50'] * 1e3:.1f}/"
+                      f"p99={c['tbt_p99'] * 1e3:.1f} ms"
+                      f"{sla}  preempted={c['preemptions']}")
         for r in rep.results[:3]:
             cost = (f"  cost: {r.cost.describe()}"
                     if r.cost is not None and r.cost.cycles else "")

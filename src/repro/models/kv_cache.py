@@ -233,6 +233,73 @@ def paged_prefix_view(cache, ids, s: int):
     return out
 
 
+def slot_scatter(cache, values, slot, dst, t0: int, t1: int):
+    """Commit one chunk of prefilled cache entries into a CONTIGUOUS
+    slot-batched cache: positions ``[t0, t1)`` of the [L, 1, S, ...] chunk
+    output land at stripe positions ``[dst, dst + t1 - t0)`` of ``slot`` —
+    the contiguous counterpart of :func:`paged_scatter` for chunked prefill
+    (a whole-prefill first chunk passes ``dst == t0 == 0``; a tail chunk's
+    values are relative, so ``t0 == 0`` with ``dst`` at the committed
+    boundary). Only the families whose every leaf is positional
+    [L, B, C, ...] (dense/moe/mla — the chunkable families) use it; the
+    engine jits it with ``t0``/``t1`` static and the cache donated."""
+    def write(c, v):
+        vals = v[:, :, t0:t1].astype(c.dtype)         # [L, 1, t1-t0, ...]
+        start = (0, slot, dst) + (0,) * (c.ndim - 3)
+        return jax.lax.dynamic_update_slice(c, vals, start)
+    return jax.tree.map(write, cache, values)
+
+
+def slot_prefix_view(cache, slot, s: int):
+    """The first ``s`` committed positions of one slot's CONTIGUOUS cache as
+    [L, 1, s, ...] — the prefix input for the next ``prefill_tail`` chunk
+    (contiguous counterpart of :func:`paged_prefix_view`)."""
+    def read(c):
+        start = (0, slot, 0) + (0,) * (c.ndim - 3)
+        size = (c.shape[0], 1, s) + c.shape[3:]
+        return jax.lax.dynamic_slice(c, start, size)
+    return jax.tree.map(read, cache)
+
+
+def swap_read(cache, slot, ids):
+    """Snapshot one slot's paged device state for preemption swap-out: the
+    contents of pool blocks ``ids`` (the blocks NOT re-acquirable by content
+    key, [L, n, bs, ...] per pool leaf) plus every slot-resident stripe
+    (SSM state/conv, hybrid rings, [L, 1, ...]). Block tables are excluded —
+    the table row is host-known bookkeeping, rebuilt on resume. The engine
+    copies the result to host numpy; :func:`swap_write` restores it."""
+    def walk(c):
+        if isinstance(c, dict) and "table" in c:
+            return {k: jnp.take(leaf, ids, axis=1)
+                    for k, leaf in c.items() if k != "table"}
+        if isinstance(c, dict):
+            return {k: walk(leaf) for k, leaf in c.items()}
+        return jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)
+    return walk(cache)
+
+
+def swap_write(cache, payload, slot, ids, table_row):
+    """Restore a :func:`swap_read` payload on resume: copied pool blocks land
+    in the freshly allocated ``ids``, the slot's table row is rebuilt to
+    ``table_row`` (sentinel-padded logical map over shared + restored
+    blocks), and slot-resident stripes are re-inserted. Jitted by the engine
+    with the cache donated."""
+    def walk(c, v):
+        if isinstance(c, dict) and "table" in c:
+            out = {}
+            for k, leaf in c.items():
+                if k == "table":
+                    out[k] = leaf.at[:, slot, :].set(table_row)
+                else:
+                    out[k] = leaf.at[:, ids].set(v[k].astype(leaf.dtype))
+            return out
+        if isinstance(c, dict):
+            return {k: walk(leaf, v[k]) for k, leaf in c.items()}
+        return jax.lax.dynamic_update_slice_in_dim(
+            c, v.astype(c.dtype), slot, axis=1)
+    return walk(cache, payload)
+
+
 def commit_staged(staged, n_accept, cache_pos, t: int):
     """Resolve a staged speculative-verify cache at accepted depth
     ``n_accept`` [B] (see ``Model.verify_step`` for how the staged tree is

@@ -49,6 +49,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -90,6 +91,14 @@ class RequestResult:
     shared_prefix: int = 0      # prompt tokens served from shared blocks
     drafted: int = 0            # speculative: draft tokens proposed
     accepted: int = 0           # speculative: draft tokens accepted
+    # SLA telemetry (chunked prefill / priority classes / preemption)
+    priority: int = 0           # static class (0 = most urgent)
+    deadline: Optional[float] = None    # relative completion budget (steps)
+    deadline_met: Optional[bool] = None  # None when no deadline was set
+    first_token_at: float = 0.0  # serve-clock step time of the first token
+    ttft_s: float = 0.0         # wall seconds, queue entry -> first token
+    tbt_s: List[float] = dataclasses.field(default_factory=list)
+    preempts: int = 0           # times this request was swapped out
 
 
 @dataclasses.dataclass
@@ -113,6 +122,13 @@ class ServeReport:
     accepted_tokens: int = 0            # draft tokens the verifier accepted
     cost_draft: Optional[CostReport] = None    # batch meter, draft phase
     cost_verify: Optional[CostReport] = None   # batch meter, verify phase
+    # SLA-aware scheduling telemetry
+    prefill_chunk: int = 0              # 0: whole prefill per admission
+    max_prefill_per_step: int = 0       # worst prompt tokens in one step
+    preemptions: int = 0
+    resumes: int = 0
+    leaked_blocks: int = 0              # pool blocks unaccounted after drain
+    class_latency: Optional[dict] = None  # per-priority-class latency/SLA
 
     @property
     def acceptance_rate(self) -> float:
@@ -304,6 +320,18 @@ class Engine:
                                      static_argnames=("s",))
         self._prefill_tail = jax.jit(model.prefill_tail,
                                      static_argnames=("prefix_len",))
+        # chunked prefill (contiguous layout): commit one chunk into a slot
+        # stripe / gather the committed prefix back for the next tail chunk.
+        # Static per (chunk length) pair — as bounded as the prefill shapes.
+        self._slot_scatter = jax.jit(
+            kv_cache.slot_scatter, static_argnames=("t0", "t1"),
+            donate_argnums=(0,))
+        self._slot_prefix = jax.jit(kv_cache.slot_prefix_view,
+                                    static_argnames=("s",))
+        # preemption swap-out/-in: snapshot a victim's non-shared blocks +
+        # slot stripes to host, restore them on resume (cache donated)
+        self._swap_read = jax.jit(kv_cache.swap_read)
+        self._swap_write = jax.jit(kv_cache.swap_write, donate_argnums=(0,))
         self._meter_cache: dict = {}  # (batch shapes, cache_len) -> CostReport
 
     def _decode_inputs(self, nxt, b: int, p: int, t: int):
@@ -586,7 +614,10 @@ class Engine:
               draft_k: int = 4, draft: str = "ngram", max_ngram: int = 3,
               draft_model=None, draft_params=None,
               kernel: str = "jnp", mesh=None,
-              shards: Optional[int] = None) -> ServeReport:
+              shards: Optional[int] = None,
+              prefill_chunk: Optional[int] = None,
+              preemption: bool = False,
+              aging: float = 16.0, hol_grace: float = 32.0) -> ServeReport:
         """Continuous-batching serving over a trace of timed arrivals.
 
         Runs ONE compiled decode step (``make_serve_step_fn``) in a host
@@ -653,6 +684,32 @@ class Engine:
         (``serving.sharded.validate_serving_shards``); greedy outputs stay
         token-identical to single-device serving and the path composes with
         ``paged``/``prefix_share``/``speculative``/``kernel``.
+
+        ``prefill_chunk=N`` bounds the prompt tokens prefilled per engine
+        step: long prompts commit in N-token chunks INTERLEAVED with decode
+        steps (in-flight slots keep emitting while the newcomer prefills),
+        so one long prompt no longer spikes every other request's
+        time-between-tokens. Dense/moe (incl. MLA, fp KV) chunk truly
+        incrementally — each chunk is a ``prefill_tail`` against the chunks
+        committed so far, and the result is bit-identical to whole prefill;
+        SSM/hybrid recurrences and int8 KV are not chunk-resumable at exact
+        bit parity (the SSD scan grid and quantized prefix reads depend on
+        the whole prompt), so those families ACCRUE the same N-token budget
+        per step and run one whole prefill when it covers the prompt —
+        identical interleaving bounds, trivially identical bits. Composes
+        with every mode above; the compiled decode step is untouched
+        (zero retraces).
+
+        ``preemption=True`` (paged only) lets the scheduler swap out a
+        low-priority victim when a strictly higher-class request is blocked
+        on slots or pool blocks: registered prompt blocks are simply
+        released (resume re-acquires them by content key, or re-prefills an
+        evicted gap through the prefix-share path), private blocks and
+        slot-resident stripes are host-copied, and the resumed stream —
+        PRNG state included — continues bit-identical to an uninterrupted
+        run. ``Request.priority``/``aging``/``hol_grace`` tune the admission
+        order (see ``SlotScheduler``); per-class latency lands in
+        ``ServeReport.class_latency``.
         """
         cfg = self.model.cfg
         if cfg.family == "encdec" or cfg.rope_type == "mrope":
@@ -669,6 +726,11 @@ class Engine:
             C = max(C, cfg.window)
         if prefix_share and not paged:
             raise ValueError("prefix_share=True requires paged=True")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if preemption and not paged:
+            raise ValueError("preemption=True requires paged=True (swap-out "
+                             "releases pool blocks through the allocator)")
         if kernel != "jnp" and not paged:
             raise ValueError("kernel='pallas' requires paged=True (the "
                              "fused kernel walks the block table)")
@@ -708,12 +770,21 @@ class Engine:
             sched = SlotScheduler(
                 reqs, slots, C, policy=policy,
                 admit_ok=lambda r: alloc.available() >= alloc.blocks_needed(
-                    r.prompt_len, r.max_new))
+                    r.prompt_len, r.max_new),
+                aging=aging, hol_grace=hol_grace)
             cache = kv_cache.paged_cache_zeros(cfg, slots, C, block_size,
                                                num_blocks)
         else:
-            sched = SlotScheduler(reqs, slots, C, policy=policy)
+            sched = SlotScheduler(reqs, slots, C, policy=policy,
+                                  aging=aging, hol_grace=hol_grace)
             cache = kv_cache.cache_zeros(cfg, slots, C)
+        # chunked prefill: dense/moe (incl. MLA) with fp KV chunk truly
+        # incrementally (prefill_tail against the committed prefix, bit-
+        # identical); recurrent families / int8 KV accrue the same budget
+        # and prefill whole once it covers the prompt (see the docstring)
+        chunkable = (prefill_chunk is not None
+                     and cfg.family in ("dense", "moe")
+                     and not getattr(cfg, "kv_quant", False))
         if mesh is not None:
             # place the zeroed cache on the serving layout up front — the
             # donated carry then keeps it there with zero relayouts
@@ -758,8 +829,16 @@ class Engine:
 
         wall0 = time.perf_counter()
         queued_wall: Dict[int, float] = {}
+        emit_wall: Dict[int, List[float]] = {}    # rid -> wall per emission
+        first_at: Dict[int, float] = {}           # rid -> serve clock of TTFT
         results: Dict[int, RequestResult] = {}
+        # chunked prefill: slot -> in-flight prompt-commit job, processed one
+        # job-step per engine step (FIFO) so prefill work per step is bounded
+        chunk_jobs: "OrderedDict[int, dict]" = OrderedDict()
+        # preemption: rid -> host payload (copied blocks/stripes + PRNG key)
+        swap_store: Dict[int, dict] = {}
         t, steps = 0.0, 0
+        pf_this_step, max_pf = 0, 0
 
         def finish(slot: int) -> None:
             st = sched.release(slot)
@@ -775,19 +854,30 @@ class Engine:
                     alloc.release_block(b)
             if proposer is not None:
                 proposer.release(slot)
+            q0 = queued_wall.get(r.rid, wall0)
+            ew = emit_wall.pop(r.rid, [])
             results[r.rid] = RequestResult(
                 rid=r.rid, tokens=toks, prompt_len=r.prompt_len,
                 done=st.done, admitted_at=st.admitted_at, finished_at=t,
-                latency_s=time.perf_counter() - queued_wall.get(r.rid, wall0),
+                latency_s=time.perf_counter() - q0,
                 cost=attr.report_for(r.rid) if attr else None,
                 shared_prefix=shared_of.get(r.rid, 0),
-                drafted=st.drafted, accepted=st.accepted)
+                drafted=st.drafted, accepted=st.accepted,
+                priority=r.priority, deadline=r.deadline,
+                deadline_met=(None if r.deadline is None
+                              else (t - r.arrival) <= r.deadline),
+                first_token_at=first_at.pop(r.rid, st.admitted_at),
+                ttft_s=(ew[0] - q0) if ew else 0.0,
+                tbt_s=[b - a for a, b in zip(ew, ew[1:])],
+                preempts=st.preempts)
 
-        def install_paged(slot: int, req: Request):
-            """Admit one request into the paged cache: match + refcount the
-            shared prefix, copy-on-write a partial boundary block, prefill
-            only the unshared tail, scatter it through the block table."""
-            nonlocal cache, prefill_tok, shared_tok
+        def paged_admit(req: Request) -> dict:
+            """Reserve one request's paged residency: match + refcount the
+            shared prefix, copy-on-write a partial boundary block, allocate
+            the private blocks, build the table row. Prompt CONTENT lands
+            later — whole (paged_commit once) or chunked (one commit per
+            engine step) — against these same ids."""
+            nonlocal cache
             bs = block_size
             P = req.prompt_len
             pkeys = prefix_keys(req.prompt, bs) if shareable else []
@@ -812,78 +902,293 @@ class Engine:
             ids = shared + [alloc.alloc() for _ in
                             range(alloc.blocks_needed(P, req.max_new)
                                   - len(shared))]
-            id_arr = np.asarray(ids, np.int32)
             row = np.full((C // bs,), alloc.num_blocks, np.int32)
-            row[:len(ids)] = id_arr
-            if s == 0:
+            row[:len(ids)] = np.asarray(ids, np.int32)
+            return {"ids": ids, "row": row, "pkeys": pkeys, "keep": keep,
+                    "s": s, "cow": cow}
+
+        def paged_register(adm: dict) -> None:
+            """Publish the prompt's full blocks once their content is final
+            (whole install, or a chunked prompt's last commit)."""
+            for i, key in enumerate(adm["pkeys"]):
+                if i < adm["keep"] and not (adm["cow"]
+                                            and i == adm["keep"] - 1):
+                    continue    # still the registered original we acquired
+                alloc.register(key, adm["ids"][i])
+
+        def paged_commit(slot: int, req: Request, adm: dict,
+                         c0: int, c1: int):
+            """Prefill prompt positions [c0, c1) — ``c0 == 0`` whole-prefix,
+            else a tail against the committed/shared prefix — and scatter
+            them through the slot's table row. Returns the piece's logits
+            (the last piece's final position feeds first-token sampling)."""
+            nonlocal cache, prefill_tok, pf_this_step
+            bs = block_size
+            id_arr = np.asarray(adm["ids"], np.int32)
+            if c0 == 0:
+                logits, slot_cache = prefill(
+                    params, {"tokens": jnp.asarray(req.prompt[None, :c1])},
+                    cache_len=C)
+            else:
+                kp = -(-c0 // bs)
+                prefix = self._paged_prefix(cache, jnp.asarray(id_arr[:kp]),
+                                            s=c0)
+                logits, slot_cache = prefill_tail(
+                    params, {"tokens": jnp.asarray(req.prompt[None, c0:c1])},
+                    prefix, prefix_len=c0)
+            wpos = np.arange(c0, c1)
+            cache = self._paged_scatter(
+                cache, slot_cache, jnp.int32(slot), jnp.asarray(adm["row"]),
+                jnp.asarray(id_arr[wpos // bs]),
+                jnp.asarray((wpos % bs).astype(np.int32)), t0=0, t1=c1 - c0)
+            prefill_tok += c1 - c0
+            pf_this_step += c1 - c0
+            if attr is not None:
+                if c0 == 0:
+                    attr.record_request(req.rid, self._meter_prefill(c1, C))
+                elif c0 == adm["s"]:
+                    # first executed piece past a shared prefix: log the
+                    # sharing savings once
+                    attr.record_shared_prefill(
+                        req.rid, self._meter_prefill_tail(c0, c1 - c0),
+                        self._meter_prefill(c0, C), c0)
+                else:
+                    attr.record_request(
+                        req.rid, self._meter_prefill_tail(c0, c1 - c0))
+            return logits
+
+        def contig_commit(slot: int, req: Request, c0: int, c1: int):
+            """Contiguous-layout chunk commit: prefill [c0, c1) and write it
+            into the slot's cache stripe (chunkable families only — every
+            leaf is positional)."""
+            nonlocal cache, prefill_tok, pf_this_step
+            if c0 == 0:
+                logits, slot_cache = prefill(
+                    params, {"tokens": jnp.asarray(req.prompt[None, :c1])},
+                    cache_len=C)
+                if attr is not None:
+                    attr.record_request(req.rid, self._meter_prefill(c1, C))
+            else:
+                prefix = self._slot_prefix(cache, jnp.int32(slot), s=c0)
+                logits, slot_cache = prefill_tail(
+                    params, {"tokens": jnp.asarray(req.prompt[None, c0:c1])},
+                    prefix, prefix_len=c0)
+                if attr is not None:
+                    attr.record_request(
+                        req.rid, self._meter_prefill_tail(c0, c1 - c0))
+            cache = self._slot_scatter(cache, slot_cache, jnp.int32(slot),
+                                       jnp.int32(c0), t0=0, t1=c1 - c0)
+            prefill_tok += c1 - c0
+            pf_this_step += c1 - c0
+            return logits
+
+        def activate(slot: int, req: Request, logits) -> None:
+            """Sample the first token from the (last) prefill logits and turn
+            the reserved slot into a live decode lane."""
+            if mesh is not None:
+                # detach admission logits from the mesh: the eager sampler
+                # should not dispatch an SPMD program per admit
+                logits = jnp.asarray(np.asarray(logits))
+            k = jax.random.PRNGKey(req.seed)
+            k, sub = jax.random.split(k)
+            first = int(self.sample(logits[:, -1], sub)[0])
+            done0 = self.eos_id is not None and first == self.eos_id
+            if proposer is not None:
+                proposer.admit(slot, np.asarray(req.prompt, np.int32),
+                               first, req.prompt_len)
+            sched.slots[slot].prefilling = False
+            sched.install(slot, first, done0)
+            tok[slot, 0] = first
+            pos[slot] = req.prompt_len
+            keys[slot] = np.asarray(k, np.uint32)
+            done[slot] = done0
+            first_at[req.rid] = t
+            emit_wall.setdefault(req.rid, []).append(time.perf_counter())
+            if sched.slot_done(slot):
+                finish(slot)
+
+        def swap_out(slot: int) -> None:
+            """Preempt one victim: split its blocks into re-acquirable-by-key
+            (released — the prefix registry keeps them resident/evictable)
+            vs host-copied (private content), release everything through the
+            allocator, park the lane, and bank the request in the scheduler's
+            swapped set with its PRNG state."""
+            nonlocal cache
+            st = sched.slots[slot]
+            r = st.request
+            # the engine's host arrays are authoritative for lane position —
+            # sync it into the scheduler record the resume will restore
+            st.pos = int(pos[slot])
+            bs = block_size
+            ids = slot_blocks.pop(slot)
+            pk = prefix_keys(r.prompt, bs) if shareable else []
+            nwritten = -(-int(st.pos) // bs)     # blocks with live positions
+            nreg = 0
+            while nreg < min(len(pk), len(ids)) and \
+                    alloc.key_of(ids[nreg]) == pk[nreg]:
+                nreg += 1
+            copy_ids = np.asarray(ids[nreg:nwritten], np.int32)
+            payload = jax.tree.map(np.asarray, self._swap_read(
+                cache, jnp.int32(slot), jnp.asarray(copy_ids)))
+            for b in ids:
+                alloc.release_block(b)
+            sched.preempt(slot, t)
+            swap_store[r.rid] = {"payload": payload, "nreg": nreg,
+                                 "nwritten": nwritten,
+                                 "key": keys[slot].copy()}
+            if proposer is not None:
+                proposer.release(slot)
+            pos[slot] = C
+            done[slot] = True
+
+        def resume(slot: int, req: Request) -> None:
+            """Swap a preempted request back in: re-acquire registered prompt
+            blocks by content key, re-prefill any evicted gap through the
+            prefix-share path, restore the host-copied blocks/stripes, and
+            rebuild the decode lane (token, position, PRNG key) exactly —
+            the continued stream is bit-identical to an uninterrupted run."""
+            nonlocal cache
+            meta = swap_store.pop(req.rid)
+            st = sched.slots[slot]        # restored by admit()
+            bs = block_size
+            nblocks = alloc.blocks_needed(req.prompt_len, req.max_new)
+            pk = (prefix_keys(req.prompt, bs)[:meta["nreg"]]
+                  if shareable else [])
+            shared = alloc.match_prefix(pk)
+            got = len(shared)
+            ids = shared + [alloc.alloc() for _ in range(nblocks - got)]
+            row = np.full((C // bs,), alloc.num_blocks, np.int32)
+            row[:nblocks] = np.asarray(ids, np.int32)
+            slot_blocks[slot] = ids
+            copy_dst = np.asarray(ids[meta["nreg"]:meta["nwritten"]],
+                                  np.int32)
+            cache = self._swap_write(cache, meta["payload"], jnp.int32(slot),
+                                     jnp.asarray(copy_dst), jnp.asarray(row))
+            if got < meta["nreg"]:
+                # registered blocks evicted while swapped: their positions
+                # are pure prompt prefill — rebuild them bit-identically and
+                # re-publish ("s": -1 keeps the sharing meter untouched)
+                adm = {"ids": ids, "row": row, "s": -1}
+                paged_commit(slot, req, adm, got * bs, meta["nreg"] * bs)
+                for i in range(got, meta["nreg"]):
+                    alloc.register(pk[i], ids[i])
+            if proposer is not None:
+                proposer.admit(slot, np.asarray(req.prompt, np.int32),
+                               st.generated[0], req.prompt_len)
+                if len(st.generated) > 1:
+                    proposer.observe(slot, st.generated[1:])
+            tok[slot, 0] = st.generated[-1]
+            pos[slot] = st.pos
+            keys[slot] = meta["key"]
+            done[slot] = st.done
+
+        def handle_admission(slot: int, req: Request) -> None:
+            nonlocal cache, shared_tok, prefill_tok, pf_this_step
+            if req.rid in swap_store:
+                resume(slot, req)
+                return
+            P = req.prompt_len
+            if alloc is not None:
+                adm = paged_admit(req)
+                slot_blocks[slot] = adm["ids"]
+                shared_of[req.rid] = adm["s"]
+                shared_tok += adm["s"]
+                if prefill_chunk is not None and \
+                        pf_this_step + P - adm["s"] > prefill_chunk:
+                    sched.slots[slot].prefilling = True
+                    chunk_jobs[slot] = {
+                        "kind": "chunk" if chunkable else "staged",
+                        "req": req, "adm": adm, "committed": adm["s"],
+                        "budget": 0}
+                    return
+                logits = paged_commit(slot, req, adm, adm["s"], P)
+                paged_register(adm)
+            else:
+                if prefill_chunk is not None and \
+                        pf_this_step + P > prefill_chunk:
+                    sched.slots[slot].prefilling = True
+                    chunk_jobs[slot] = {
+                        "kind": "chunk" if chunkable else "staged",
+                        "req": req, "adm": None, "committed": 0, "budget": 0}
+                    return
                 logits, slot_cache = prefill(
                     params, {"tokens": jnp.asarray(req.prompt[None])},
                     cache_len=C)
-                t0, t1 = 0, P
-            else:
-                prefix = self._paged_prefix(cache, jnp.asarray(id_arr[:keep]),
-                                            s=s)
-                logits, slot_cache = prefill_tail(
-                    params, {"tokens": jnp.asarray(req.prompt[None, s:])},
-                    prefix, prefix_len=s)
-                t0, t1 = 0, P - s
-            wpos = np.arange(s, P)
-            cache = self._paged_scatter(
-                cache, slot_cache, jnp.int32(slot), jnp.asarray(row),
-                jnp.asarray(id_arr[wpos // bs]),
-                jnp.asarray((wpos % bs).astype(np.int32)), t0=t0, t1=t1)
-            for i, key in enumerate(pkeys):
-                if i < len(shared) and not (cow and i == len(shared) - 1):
-                    continue    # still the registered original we acquired
-                alloc.register(key, ids[i])
-            slot_blocks[slot] = ids
-            shared_of[req.rid] = s
-            prefill_tok += P - s
-            shared_tok += s
-            if attr is not None:
-                if s > 0:
-                    attr.record_shared_prefill(
-                        req.rid, self._meter_prefill_tail(s, P - s),
-                        self._meter_prefill(s, C), s)
-                else:
+                cache = self._insert_slot(cache, slot_cache, jnp.int32(slot))
+                prefill_tok += P
+                pf_this_step += P
+                if attr is not None:
                     attr.record_request(req.rid, self._meter_prefill(P, C))
-            return logits
+            activate(slot, req, logits)
 
-        while sched.unfinished:
-            sched.advance(t)
-            for r in sched.queue:
-                queued_wall.setdefault(r.rid, time.perf_counter())
-            for slot, req in sched.admit(t):
+        def advance_chunks() -> None:
+            """One engine step's worth of prompt-commit work: the OLDEST job
+            advances by ``prefill_chunk`` tokens (true chunk) or accrues that
+            budget (staged recurrent/quantized families, whole prefill once
+            covered) — so admission never stalls decode by more than one
+            bounded prefill piece per step."""
+            nonlocal cache, prefill_tok, pf_this_step
+            slot, job = next(iter(chunk_jobs.items()))
+            req = job["req"]
+            P = req.prompt_len
+            if job["kind"] == "staged":
+                job["budget"] += prefill_chunk
+                if job["budget"] < P - job["committed"]:
+                    return
                 if alloc is not None:
-                    logits = install_paged(slot, req)
+                    logits = paged_commit(slot, req, job["adm"],
+                                          job["committed"], P)
+                    paged_register(job["adm"])
                 else:
                     logits, slot_cache = prefill(
                         params, {"tokens": jnp.asarray(req.prompt[None])},
                         cache_len=C)
                     cache = self._insert_slot(cache, slot_cache,
                                               jnp.int32(slot))
-                    prefill_tok += req.prompt_len
+                    prefill_tok += P
+                    pf_this_step += P
                     if attr is not None:
-                        attr.record_request(
-                            req.rid, self._meter_prefill(req.prompt_len, C))
-                if mesh is not None:
-                    # detach admission logits from the mesh: the eager
-                    # sampler should not dispatch an SPMD program per admit
-                    logits = jnp.asarray(np.asarray(logits))
-                k = jax.random.PRNGKey(req.seed)
-                k, sub = jax.random.split(k)
-                first = int(self.sample(logits[:, -1], sub)[0])
-                done0 = self.eos_id is not None and first == self.eos_id
-                if proposer is not None:
-                    proposer.admit(slot, np.asarray(req.prompt, np.int32),
-                                   first, req.prompt_len)
-                sched.install(slot, first, done0)
-                tok[slot, 0] = first
-                pos[slot] = req.prompt_len
-                keys[slot] = np.asarray(k, np.uint32)
-                done[slot] = done0
-                if sched.slot_done(slot):
-                    finish(slot)
+                        attr.record_request(req.rid,
+                                            self._meter_prefill(P, C))
+                del chunk_jobs[slot]
+                activate(slot, req, logits)
+                return
+            c0 = job["committed"]
+            c1 = min(c0 + prefill_chunk, P)
+            if alloc is not None:
+                logits = paged_commit(slot, req, job["adm"], c0, c1)
+            else:
+                logits = contig_commit(slot, req, c0, c1)
+            job["committed"] = c1
+            if c1 == P:
+                if alloc is not None:
+                    paged_register(job["adm"])
+                del chunk_jobs[slot]
+                activate(slot, req, logits)
+
+        while sched.unfinished:
+            sched.advance(t)
+            pf_this_step = 0
+            for r in sched.queue:
+                queued_wall.setdefault(r.rid, time.perf_counter())
+            while True:
+                for slot, req in sched.admit(t):
+                    handle_admission(slot, req)
+                if not preemption:
+                    break
+                victim = sched.preempt_victim(t)
+                if victim is None:
+                    break
+                swap_out(victim)
+            progressed = False
+            if chunk_jobs and (pf_this_step == 0
+                               or not sched.active_slots()):
+                # one bounded prompt-commit piece per step — but never in a
+                # step that already spent its admission prefill budget while
+                # decode lanes are live (TBT protection); with no live lanes
+                # the step is prefill-only and chunk work proceeds regardless
+                advance_chunks()
+                progressed = True
             active = sched.active_slots()
             if active and speculative:
                 drafts = proposer.propose(active, tok, pos)
@@ -894,6 +1199,7 @@ class Engine:
                 n_np = np.asarray(n_d)
                 keys = np.array(keys_d)      # copy: host arrays stay writable
                 steps += 1
+                now = time.perf_counter()
                 if attr is not None:
                     rids = sched.active_requests()
                     attr.record_step(verify_cost, rids, kind="verify")
@@ -908,8 +1214,10 @@ class Engine:
                     # request budget — exactly where the non-speculative
                     # loop would have stopped stepping this slot
                     used = 0
+                    ew = emit_wall.setdefault(r.rid, [])
                     for tk in out_np[slot, :n_emit]:
                         st.generated.append(int(tk))
+                        ew.append(now)
                         used += 1
                         if self.eos_id is not None and int(tk) == self.eos_id:
                             st.done = True
@@ -937,11 +1245,13 @@ class Engine:
                 keys = np.array(keys_d)      # copy: host arrays stay writable
                 done_np = np.array(done_d)
                 steps += 1
+                now = time.perf_counter()
                 if attr is not None:
                     attr.record_step(step_cost, sched.active_requests())
                 for slot in active:
                     st = sched.slots[slot]
                     st.generated.append(int(toks_np[slot]))
+                    emit_wall.setdefault(st.request.rid, []).append(now)
                     if self.eos_id is not None:
                         st.done = bool(done_np[slot])
                         done[slot] = done_np[slot]
@@ -950,11 +1260,15 @@ class Engine:
                     if sched.slot_done(slot):
                         finish(slot)
                 t += 1.0
+            elif progressed:
+                t += 1.0    # chunk-only step: prompt commits still take time
             else:
                 nxt = sched.next_arrival()
                 if nxt is None:
+                    assert not sched.swapped, "swapped requests unreachable"
                     break   # defensive: nothing active, queued, or pending
                 t = max(t + 1.0, float(nxt))
+            max_pf = max(max_pf, pf_this_step)
 
         ordered = [results[r.rid] for r in sorted(reqs, key=lambda q: q.rid)]
         return ServeReport(
@@ -971,7 +1285,12 @@ class Engine:
             cost_draft=attr.total_kind("draft") if attr and speculative
             else None,
             cost_verify=attr.total_kind("verify") if attr and speculative
-            else None)
+            else None,
+            prefill_chunk=prefill_chunk or 0, max_prefill_per_step=max_pf,
+            preemptions=sched.preemptions, resumes=sched.resumes,
+            leaked_blocks=(alloc.num_blocks - alloc.available())
+            if alloc else 0,
+            class_latency=telemetry.class_latency_summary(ordered))
 
 
 def make_serve_step(model: Model, kind: str, max_new: int = 64,

@@ -19,13 +19,32 @@ are directly checkable by the hypothesis property suite
 
 Admission policies:
 
-  ``continuous``  admit the queue head whenever ANY slot is free — the
-                  continuous-batching mode; mixed-length traffic wastes no
+  ``continuous``  admit the best waiting request whenever ANY slot is free —
+                  the continuous-batching mode; mixed-length traffic wastes no
                   slot-steps.
   ``gang``        admit only when ALL slots are free, draining whole batches
                   — static batching reimplemented as a degenerate trace of
                   the same executor (the serve_bench baseline; with uniform
                   arrivals and lengths it degenerates to ``Engine.generate``).
+
+Priority classes and preemption (SLA-aware serving):
+
+  * ``Request.priority`` (0 = most urgent) selects between waiting requests:
+    admission orders candidates by EFFECTIVE class = priority minus one for
+    every ``aging`` clock units waited, so a starved low-priority request
+    eventually outranks fresh premium traffic (anti-starvation); within a
+    class, FIFO order is preserved exactly.
+  * a resource-deferred head (``admit_ok`` false — e.g. not enough KV
+    blocks) no longer stalls the whole queue: smaller candidates behind it
+    may admit, until the head has waited ``hol_grace`` clock units — then
+    admission turns strict again so freed blocks accumulate for the head
+    instead of being snatched by later arrivals.
+  * :meth:`SlotScheduler.preempt` swaps a victim OUT (its blocks go back
+    through the allocator; the engine host-copies what is not re-acquirable
+    by content key) into :class:`SwappedState`; swapped requests compete in
+    the same admission order (by their ORIGINAL arrival, so they age fast)
+    and resume with their generated stream intact — the engine restores
+    device state so the resumed output is bit-identical to uninterrupted.
 """
 
 from __future__ import annotations
@@ -46,6 +65,13 @@ class Request:
     ``t >= arrival``. ``seed`` names the request's private PRNG stream —
     per-request eager generation with ``key=PRNGKey(seed)`` is the parity
     reference for its output.
+
+    ``priority`` is the request's static class, 0 = most urgent (premium
+    interactive), larger = batch/background. ``deadline`` is an OPTIONAL
+    completion budget in clock units RELATIVE to arrival (finish by
+    ``arrival + deadline``); it is SLA *reporting* metadata — per-class
+    attainment in ``ServeReport.class_latency`` — not a scheduling input
+    (EDF ordering is a noted follow-up).
     """
 
     rid: int
@@ -53,6 +79,8 @@ class Request:
     max_new: int
     arrival: float = 0.0
     seed: int = 0
+    priority: int = 0
+    deadline: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
@@ -68,10 +96,35 @@ class SlotState:
     generated: List[int]          # tokens emitted so far (incl. first)
     done: bool = False            # EOS hit (emissions are pad from now on)
     admitted_at: float = 0.0
+    # chunked prefill: the slot is reserved but its prompt is still being
+    # committed in prefill_chunk-token pieces — NOT a decode lane yet
+    prefilling: bool = False
+    preempts: int = 0             # times this request was swapped out
     # speculative-decoding bookkeeping (zero when serving non-speculatively)
     drafted: int = 0              # draft tokens proposed for this slot
     accepted: int = 0             # draft tokens the verifier accepted
     draft_depth: int = 0          # depth of the most recent draft round
+
+
+@dataclasses.dataclass
+class SwappedState:
+    """A preempted request: off-slot, off-device, waiting to resume.
+
+    Everything the scheduler must restore exactly on re-admission so the
+    resumed stream is bit-identical to an uninterrupted run: the generated
+    tokens so far, the EOS flag, and the next cache write position. The
+    ENGINE separately stashes the device payload (host copies of blocks it
+    could not just release back to the allocator) keyed by rid."""
+
+    request: Request
+    generated: List[int]
+    done: bool
+    pos: int
+    admitted_at: float            # first admission (for latency accounting)
+    swapped_at: float
+    preempts: int
+    drafted: int = 0
+    accepted: int = 0
 
 
 class SlotScheduler:
@@ -89,20 +142,30 @@ class SlotScheduler:
 
     def __init__(self, requests: Sequence[Request], n_slots: int,
                  cache_len: int, policy: str = "continuous",
-                 admit_ok: Optional[Callable[[Request], bool]] = None):
+                 admit_ok: Optional[Callable[[Request], bool]] = None,
+                 aging: float = 16.0, hol_grace: float = 32.0):
         if n_slots < 1:
             raise ValueError(f"need at least one slot, got {n_slots}")
         if policy not in ("continuous", "gang"):
             raise ValueError(f"unknown admission policy {policy!r}")
+        if aging < 0 or hol_grace < 0:
+            raise ValueError(f"aging/hol_grace must be >= 0, got "
+                             f"({aging}, {hol_grace})")
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.policy = policy
         # resource gate (paged serving): admission additionally requires
-        # admit_ok(queue head) — e.g. "enough free/evictable KV blocks for
-        # the request's worst case". Head-of-line blocking keeps FIFO order;
-        # a deferred head is retried on every later admit() call, and blocks
-        # freed by completing requests guarantee progress.
+        # admit_ok(request) — e.g. "enough free/evictable KV blocks for the
+        # request's worst case". A deferred candidate no longer blocks the
+        # queue outright (see admit()): smaller requests behind it may admit
+        # until the deferral exceeds hol_grace, then admission turns strict
+        # so blocks freed by completing requests reach the starved head.
         self._admit_ok = admit_ok
+        # anti-starvation: effective class = priority - waited // aging.
+        # aging=0 disables (pure strict classes — background traffic can
+        # starve under sustained premium overload).
+        self.aging = float(aging)
+        self.hol_grace = float(hol_grace)
         for r in requests:
             if r.max_new < 1:
                 raise ValueError(f"request {r.rid}: max_new must be >= 1")
@@ -113,6 +176,9 @@ class SlotScheduler:
         ids = [r.rid for r in requests]
         if len(set(ids)) != len(ids):
             raise ValueError("duplicate request ids in trace")
+        # submission index: the tie-break of last resort, so equal
+        # (class, arrival) candidates admit in trace order
+        self._submit_idx = {r.rid: i for i, r in enumerate(requests)}
         # stable sort: ties on arrival keep submission order (FIFO)
         self._pending = deque(sorted(requests, key=lambda r: r.arrival))
         self.queue: deque = deque()
@@ -120,6 +186,10 @@ class SlotScheduler:
         self._free: deque = deque(range(n_slots))
         self.admitted_order: List[int] = []   # rids, in admission order
         self.finished: Dict[int, SlotState] = {}
+        # preempted requests waiting to swap back in, rid -> SwappedState
+        self.swapped: "OrderedDict[int, SwappedState]" = OrderedDict()
+        self.preemptions = 0
+        self.resumes = 0
 
     # ------------------------------------------------------------- time flow
 
@@ -133,34 +203,82 @@ class SlotScheduler:
 
     # ------------------------------------------------------------- admission
 
+    def effective_class(self, req: Request, t: float) -> int:
+        """Priority class after anti-starvation aging: drops by one for every
+        ``aging`` clock units waited, so ANY request eventually outranks
+        fresh arrivals of every static class (unbounded below)."""
+        if self.aging <= 0:
+            return req.priority
+        return req.priority - int(max(0.0, t - req.arrival) // self.aging)
+
+    def _admission_key(self, req: Request, t: float) -> tuple:
+        # (aged class, static class, arrival, submission) — strict classes
+        # first; within a class aging preserves arrival order (older waited
+        # longer, so its effective class is never worse), giving exact FIFO
+        return (self.effective_class(req, t), req.priority, req.arrival,
+                self._submit_idx[req.rid])
+
+    def _candidates(self, t: float) -> List[Request]:
+        """Every waiting request — queued and swapped-out — in admission
+        order. Swapped requests compete by their ORIGINAL arrival, so a
+        preempted victim ages fast and swaps back in early."""
+        cands = list(self.queue) + [sw.request for sw in self.swapped.values()]
+        return sorted(cands, key=lambda r: self._admission_key(r, t))
+
     def admit(self, t: float = 0.0) -> Iterator[Tuple[int, Request]]:
         """Yield (slot, request) admissions under the active policy. The
         caller must install each admission (prefill + first token) and set
-        the slot state via :meth:`install` before the next decode step.
+        the slot state via :meth:`install` before the next decode step; a
+        resumed request (``request.rid in scheduler.swapped`` beforehand)
+        comes back with its SlotState already carrying the generated stream
+        and must NOT be re-installed — the engine restores device state.
 
         The caller MAY release a slot mid-iteration (a request whose budget
         is spent at admission, e.g. ``max_new == 1`` or first-token EOS).
         Under ``continuous`` the freed slot is immediately reusable; under
         ``gang`` the round is capped at ``n_slots`` admissions, so a
         mid-round release never lets a fresh request join the still-running
-        batch — static batching stays static."""
+        batch — static batching stays static.
+
+        Head-of-line behavior under the ``admit_ok`` resource gate: a
+        deferred candidate is SKIPPED (later, smaller candidates may admit
+        into free slots — the fix for chunked prefill, where a long prompt
+        waiting for blocks used to stall every decode slot behind it) until
+        it has waited ``hol_grace`` clock units; after that the round stops
+        at it, so freed blocks accumulate for the starved head instead of
+        being snatched forever by fresh small arrivals."""
         budget = None
         if self.policy == "gang":
             if any(s is not None for s in self.slots):
                 return
             budget = self.n_slots
-        while self._free and self.queue and budget != 0:
-            if self._admit_ok is not None and not self._admit_ok(self.queue[0]):
+        for req in self._candidates(t):
+            if not self._free or budget == 0:
                 break
+            if self._admit_ok is not None and not self._admit_ok(req):
+                waited = t - req.arrival
+                if waited >= self.hol_grace:
+                    break                     # strict: conserve blocks for it
+                continue                      # skip-ahead within grace
             if budget is not None:
                 budget -= 1
             slot = self._free.popleft()
-            req = self.queue.popleft()
+            sw = self.swapped.pop(req.rid, None)
+            if sw is None:
+                self.queue.remove(req)
+                st = SlotState(request=req, pos=req.prompt_len,
+                               generated=[], admitted_at=t)
+            else:
+                st = SlotState(request=req, pos=sw.pos,
+                               generated=sw.generated, done=sw.done,
+                               admitted_at=sw.admitted_at,
+                               preempts=sw.preempts,
+                               drafted=sw.drafted, accepted=sw.accepted)
+                self.resumes += 1
             assert self.slots[slot] is None, "slot double-assignment"
             # reserve: installed by the caller, but mark occupied NOW so a
             # nested admit cannot hand the slot out twice
-            self.slots[slot] = SlotState(request=req, pos=req.prompt_len,
-                                         generated=[], admitted_at=t)
+            self.slots[slot] = st
             self.admitted_order.append(req.rid)
             yield slot, req
 
@@ -183,15 +301,71 @@ class SlotScheduler:
         return st
 
     def active_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if s is not None]
+        """Slots that decode this step — occupied AND fully installed. A
+        slot whose prompt is still chunk-prefilling is occupied but not a
+        decode lane yet (its row rides parked, writes dropped)."""
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and not s.prefilling]
 
     def active_requests(self) -> List[int]:
-        return [s.request.rid for s in self.slots if s is not None]
+        return [s.request.rid for s in self.slots
+                if s is not None and not s.prefilling]
 
     @property
     def unfinished(self) -> bool:
-        return bool(self._pending or self.queue
+        return bool(self._pending or self.queue or self.swapped
                     or any(s is not None for s in self.slots))
+
+    # ------------------------------------------------------------ preemption
+
+    def preempt_victim(self, t: float) -> Optional[int]:
+        """The slot to swap out for the best blocked waiter, or None.
+
+        Preemption triggers only on STATIC class: the best waiting candidate
+        must be blocked (no free slot, or ``admit_ok`` fails) and some
+        installed slot must run a strictly worse static class. Aging never
+        enables preemption (an aged background request outranks premium for
+        ADMISSION order but cannot evict it) — strictness is what makes the
+        preemption relation acyclic, so two classes can never thrash
+        swapping each other. Victim choice: worst class first, then most
+        recently admitted (it has the least sunk decode work). Slots still
+        chunk-prefilling are never victims — nothing committed to resume."""
+        cands = self._candidates(t)
+        if not cands:
+            return None
+        cand = cands[0]
+        blocked = not self._free or (
+            self._admit_ok is not None and not self._admit_ok(cand))
+        if not blocked:
+            return None
+        victims = [
+            (s.request.priority, s.admitted_at, i)
+            for i, s in enumerate(self.slots)
+            if s is not None and not s.prefilling and s.generated
+            and s.request.priority > cand.priority]
+        if not victims:
+            return None
+        return max(victims)[2]
+
+    def preempt(self, slot: int, t: float) -> SwappedState:
+        """Swap a victim out: free its slot and park the request (with its
+        generated stream, EOS flag, and cache position) in ``swapped``,
+        where it competes for re-admission by its original arrival. The
+        ENGINE owns the device side — releasing/copying blocks before this
+        call and restoring them when :meth:`admit` yields the resume."""
+        st = self.slots[slot]
+        assert st is not None and st.generated and not st.prefilling, \
+            f"preempting slot {slot} in state {st}"
+        self.slots[slot] = None
+        self._free.append(slot)
+        sw = SwappedState(request=st.request, generated=st.generated,
+                          done=st.done, pos=st.pos,
+                          admitted_at=st.admitted_at, swapped_at=t,
+                          preempts=st.preempts + 1,
+                          drafted=st.drafted, accepted=st.accepted)
+        self.swapped[st.request.rid] = sw
+        self.preemptions += 1
+        return sw
 
     def record_draft(self, slot: int, proposed: int, accepted: int) -> None:
         """Track one speculative round's per-slot draft depth and acceptance
@@ -284,6 +458,13 @@ class BlockAllocator:
 
     def registered(self, block: int) -> bool:
         return self._key_of[block] is not None
+
+    def key_of(self, block: int) -> Optional[bytes]:
+        """The content key this block is registered under (None: private).
+        Preemption swap-out uses it to split a victim's blocks into
+        re-acquirable-by-key (just release — resume matches the prefix
+        registry) vs host-copy (private content only this request holds)."""
+        return self._key_of[block]
 
     def blocks_needed(self, prompt_len: int, max_new: int) -> int:
         """Worst-case private blocks for a request (no sharing assumed)."""
@@ -412,3 +593,110 @@ def shared_prefix_trace(n_requests: int, vocab: int, *, prefix_len: int = 32,
             arrival=float(rng.integers(0, int(arrival_spacing * n_requests) + 1)),
             seed=2000 + rid))
     return reqs
+
+
+def poisson_trace(n_requests: int, vocab: int, *, seed: int = 0,
+                  rate: float = 0.5,
+                  prompt_lens: Sequence[int] = (4, 8, 16, 32),
+                  max_new_range: Tuple[int, int] = (8, 32),
+                  classes: Sequence[int] = (0,),
+                  class_weights: Optional[Sequence[float]] = None,
+                  deadline_slack: Optional[float] = None) -> List[Request]:
+    """Memoryless arrivals: inter-arrival gaps exponential at ``rate``
+    requests per decode step — the standard open-loop traffic model. Each
+    request draws a priority class from ``classes`` (probabilities
+    ``class_weights``, uniform when None); with ``deadline_slack`` set, a
+    request's deadline is ``slack * max_new`` clock units after arrival (a
+    perfectly scheduled request finishes in about ``max_new`` steps, so
+    slack is the overload headroom the SLA grants).
+
+    Deterministic: everything comes from ``np.random.default_rng(seed)``
+    (the seeded PCG64 stream — no global numpy state), so the same
+    (seed, args) reproduce the trace byte-for-byte across runs and xdist
+    workers; the determinism test pins this."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    weights = None if class_weights is None else \
+        np.asarray(class_weights, np.float64) / np.sum(class_weights)
+    reqs = []
+    for rid in range(n_requests):
+        p = int(rng.choice(list(prompt_lens)))
+        max_new = int(rng.integers(max_new_range[0], max_new_range[1] + 1))
+        reqs.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, vocab, size=(p,), dtype=np.int32),
+            max_new=max_new,
+            arrival=float(arrivals[rid]),
+            seed=3000 + rid,
+            priority=int(rng.choice(list(classes), p=weights)),
+            deadline=(None if deadline_slack is None
+                      else float(deadline_slack * max_new))))
+    return reqs
+
+
+def bursty_trace(n_requests: int, vocab: int, *, seed: int = 0,
+                 short_lens: Sequence[int] = (4, 8),
+                 short_max_new: Tuple[int, int] = (8, 24),
+                 short_spacing: float = 1.0,
+                 burst_every: float = 12.0, burst_size: int = 4,
+                 long_prompt: int = 96, long_max_new: int = 4,
+                 deadline_slack: float = 4.0) -> List[Request]:
+    """The adversarial shape chunked prefill exists for: a steady stream of
+    short interactive requests (class 0, tight deadlines) with periodic
+    bursts of ``burst_size`` long-prompt batch jobs (class 1, loose
+    deadlines) landing together every ``burst_every`` steps. Under whole
+    prefill each ``long_prompt``-token prompt stalls every in-flight decode
+    for its full prefill, spiking interactive TBT/p99; chunked prefill
+    bounds the stall at ``prefill_chunk`` tokens per step. Deterministic
+    per (seed, args) exactly like :func:`poisson_trace`."""
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    t_short, t_burst = 0.0, float(burst_every)
+    while len(reqs) < n_requests:
+        rid = len(reqs)
+        if t_burst <= t_short and n_requests - len(reqs) >= burst_size:
+            for _ in range(min(burst_size, n_requests - len(reqs))):
+                reqs.append(Request(
+                    rid=len(reqs),
+                    prompt=rng.integers(0, vocab, size=(long_prompt,),
+                                        dtype=np.int32),
+                    max_new=long_max_new, arrival=t_burst,
+                    seed=4000 + len(reqs), priority=1,
+                    deadline=float(deadline_slack
+                                   * (long_max_new + long_prompt))))
+            t_burst += burst_every
+            continue
+        p = int(rng.choice(list(short_lens)))
+        max_new = int(rng.integers(short_max_new[0], short_max_new[1] + 1))
+        reqs.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, vocab, size=(p,), dtype=np.int32),
+            max_new=max_new, arrival=t_short,
+            seed=4000 + rid, priority=0,
+            deadline=float(deadline_slack * max_new)))
+        t_short += short_spacing * float(rng.integers(1, 3))
+    return reqs
+
+
+def trace_to_json(requests: Sequence[Request]) -> List[dict]:
+    """A trace as plain JSON-serializable data — ``json.dumps`` of this
+    round-trips through :func:`trace_from_json` to an identical trace
+    (prompts exact int lists, floats preserved exactly by JSON repr), so
+    CI overload gates can replay the very same arrivals from a file."""
+    return [{"rid": r.rid, "prompt": np.asarray(r.prompt).tolist(),
+             "max_new": r.max_new, "arrival": r.arrival, "seed": r.seed,
+             "priority": r.priority, "deadline": r.deadline}
+            for r in requests]
+
+
+def trace_from_json(data: Sequence[dict]) -> List[Request]:
+    """Inverse of :func:`trace_to_json`."""
+    return [Request(rid=int(d["rid"]),
+                    prompt=np.asarray(d["prompt"], np.int32),
+                    max_new=int(d["max_new"]),
+                    arrival=float(d["arrival"]),
+                    seed=int(d.get("seed", 0)),
+                    priority=int(d.get("priority", 0)),
+                    deadline=(None if d.get("deadline") is None
+                              else float(d["deadline"])))
+            for d in data]

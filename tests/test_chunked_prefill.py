@@ -1,0 +1,254 @@
+"""Chunked prefill + preemption: bit-exact parity with whole-prefill serving.
+
+The SLA machinery (PR 8) changes WHEN prompt tokens are committed — a long
+prompt lands in ``prefill_chunk``-token pieces interleaved with decode steps,
+and a preempted request's blocks round-trip through host memory — but must
+never change WHAT is computed. The bar mirrors tests/test_paged.py: every
+serve below must produce exactly the tokens of the plain whole-prefill serve
+(itself pinned to per-request eager generation by tests/test_scheduler.py),
+across the dense / MLA-latent / SSM-state / hybrid-ring cache families, both
+cache layouts, and composed with prefix sharing, speculative decoding, the
+Pallas kernel, and tensor-parallel sharding.
+
+Model-level: a prefill split into ``prefill_tail`` chunks must commit the
+SAME cache bytes and final logits as one whole prefill — asserted directly
+on the cache pytree for the families that chunk incrementally (dense GQA +
+MLA latent; the recurrent families accrue budget and prefill whole, which is
+parity-trivial and asserted at serve level).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.core.precision import PrecisionConfig
+from repro.core.softmax_variants import SoftmaxSpec
+from repro.models import build_model
+from repro.models import kv_cache
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Request
+
+FAMILY_ARCHS = ["olmo-1b", "minicpm3-4b", "mamba2-780m", "hymba-1.5b"]
+CHUNKABLE_ARCHS = ["olmo-1b", "minicpm3-4b"]   # dense GQA + MLA latent
+NDEV = len(jax.devices())
+
+_CACHE = {}
+
+
+def _setup(arch, softmax=None, **engine_kw):
+    key = (arch, softmax, tuple(sorted(engine_kw.items())))
+    if key not in _CACHE:
+        cfg = (smoke_config(arch) if softmax is None
+               else smoke_config(arch, softmax=softmax))
+        m = build_model(cfg)
+        params, _ = m.init_split(jax.random.PRNGKey(0))
+        _CACHE[key] = (cfg, m, Engine(m, params, **engine_kw))
+    return _CACHE[key]
+
+
+def _trace(vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    shapes = [(4, 5, 0.0), (9, 3, 0.0), (12, 4, 1.0), (5, 4, 3.0)]
+    return [Request(rid=i, prompt=rng.integers(0, vocab, (p,), dtype=np.int32),
+                    max_new=mn, arrival=a, seed=100 + i)
+            for i, (p, mn, a) in enumerate(shapes)]
+
+
+def _assert_same_tokens(rep_a, rep_b, ctx=()):
+    for a, b in zip(rep_a.results, rep_b.results):
+        assert np.array_equal(a.tokens, b.tokens), (ctx, a.rid)
+        assert a.done == b.done
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_chunked_parity_per_cache_family(arch):
+    """Chunked == whole prefill for every cache family, both layouts, chunk
+    sizes {1, 7, block_size, > any prompt} — plus no leaked blocks, the
+    per-step prefill bound, and zero serve-step retraces while chunks
+    interleave with decode."""
+    cfg, m, eng = _setup(arch, max_new=6)
+    reqs = _trace(cfg.vocab)
+    max_p = max(r.prompt_len for r in reqs)
+    for paged in (False, True):
+        kw = dict(slots=2, cache_len=16, paged=paged, block_size=4)
+        base = eng.serve(reqs, **kw)
+        for ck in (1, 7, 4, 64):
+            rep = eng.serve(reqs, prefill_chunk=ck, **kw)
+            _assert_same_tokens(base, rep, (arch, paged, ck))
+            assert rep.prefill_chunk == ck
+            assert rep.leaked_blocks == 0
+            if arch in CHUNKABLE_ARCHS:
+                # incremental chunking: per-step prompt work is capped
+                assert rep.max_prefill_per_step <= max(ck, 1)
+            else:
+                # staged accrual: the finalizing whole prefill is one step
+                assert rep.max_prefill_per_step <= max(ck, max_p)
+    # one compiled decode step per cache LAYOUT (contiguous + paged) served
+    # every chunk size above — chunking added zero serve-step retraces
+    assert eng._get_serve_step("jnp")._cache_size() <= 2
+
+
+@pytest.mark.parametrize("arch", CHUNKABLE_ARCHS)
+def test_chunked_cache_bytes_match_whole_prefill(arch):
+    """Model-level: committing a prompt in prefill_tail chunks writes the
+    SAME cache bytes and produces the same final logits as one whole
+    prefill (contiguous layout, slot 0)."""
+    cfg, m, _ = _setup(arch, max_new=4)
+    params, _ = m.init_split(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    P, C = 11, 16
+    x = rng.integers(0, cfg.vocab, (1, P), dtype=np.int32)
+
+    logits_w, cache_w = m.prefill(params, {"tokens": jnp.asarray(x)},
+                                  cache_len=C)
+
+    committed = None
+    logits_c = None
+    c0 = 0
+    for ck in (3, 5, 2, 1):
+        c1 = min(c0 + ck, P)
+        if c0 == 0:
+            logits_c, committed = m.prefill(
+                params, {"tokens": jnp.asarray(x[:, :c1])}, cache_len=C)
+        else:
+            prefix = kv_cache.slot_prefix_view(committed, 0, s=c0)
+            logits_c, piece = m.prefill_tail(
+                params, {"tokens": jnp.asarray(x[:, c0:c1])}, prefix,
+                prefix_len=c0)
+            committed = kv_cache.slot_scatter(committed, piece, 0, c0,
+                                              t0=0, t1=c1 - c0)
+        c0 = c1
+    np.testing.assert_array_equal(np.asarray(logits_c[:, -1]),
+                                  np.asarray(logits_w[:, -1]))
+    for lw, lc in zip(jax.tree.leaves(cache_w), jax.tree.leaves(committed)):
+        # compare the P committed positions (seq axis 2); beyond P the
+        # whole-prefill buffer holds padding the chunked path never wrote
+        np.testing.assert_array_equal(np.asarray(lw[:, :, :P]),
+                                      np.asarray(lc[:, :, :P]))
+
+
+def test_chunked_composes_with_prefix_share():
+    """Shared-prefix admissions chunk only their private tail; token stream
+    and sharing accounting are unchanged. Followers arrive after the first
+    request's chunked prefill has fully committed (prefix blocks register
+    only once the LAST chunk lands), so both runs see the same share hits."""
+    cfg, m, eng = _setup("olmo-1b", max_new=6)
+    rng = np.random.default_rng(3)
+    pre = rng.integers(0, cfg.vocab, (8,), dtype=np.int32)
+    arrivals = (0.0, 8.0, 9.0, 10.0)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [pre, rng.integers(0, cfg.vocab, (4,),
+                                           dtype=np.int32)]),
+                    max_new=4, arrival=arrivals[i], seed=200 + i)
+            for i in range(4)]
+    kw = dict(slots=2, cache_len=16, paged=True, block_size=4,
+              prefix_share=True)
+    base = eng.serve(reqs, **kw)
+    rep = eng.serve(reqs, prefill_chunk=3, **kw)
+    _assert_same_tokens(base, rep, ("share",))
+    assert rep.shared_prefill_tokens == base.shared_prefill_tokens
+    assert rep.prefill_tokens == base.prefill_tokens
+    assert rep.leaked_blocks == 0
+
+
+def test_chunked_composes_with_speculative():
+    cfg, m, eng = _setup("olmo-1b", max_new=6)
+    reqs = _trace(cfg.vocab, seed=5)
+    kw = dict(slots=2, cache_len=16, paged=True, block_size=4,
+              speculative=True)
+    base = eng.serve(reqs, **kw)
+    rep = eng.serve(reqs, prefill_chunk=5, **kw)
+    _assert_same_tokens(base, rep, ("spec",))
+    assert rep.leaked_blocks == 0
+
+
+def test_chunked_composes_with_pallas_kernel():
+    spec = SoftmaxSpec("int", PrecisionConfig(M=6, N=16))
+    cfg, m, eng = _setup("olmo-1b", softmax=spec, max_new=5)
+    reqs = _trace(cfg.vocab, seed=9)
+    kw = dict(slots=2, cache_len=16, paged=True, block_size=4,
+              kernel="pallas")
+    base = eng.serve(reqs, **kw)
+    rep = eng.serve(reqs, prefill_chunk=5, **kw)
+    _assert_same_tokens(base, rep, ("pallas",))
+
+
+@pytest.mark.skipif(NDEV < 2, reason="needs >= 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+def test_chunked_composes_with_sharding():
+    cfg, m, eng = _setup("olmo-1b", max_new=5)
+    reqs = _trace(cfg.vocab, seed=11)
+    kw = dict(slots=2, cache_len=16, paged=True, block_size=4, shards=2)
+    base = eng.serve(reqs, **kw)
+    rep = eng.serve(reqs, prefill_chunk=5, **kw)
+    _assert_same_tokens(base, rep, ("shards",))
+
+
+def _priority_pressure_trace(vocab, seed=0):
+    """Two early low-priority requests that fill a tight pool, then one
+    premium arrival that must preempt to get in."""
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, vocab, (12,), dtype=np.int32),
+                    max_new=12, arrival=0.0, seed=300 + i, priority=1)
+            for i in range(2)]
+    reqs.append(Request(rid=2,
+                        prompt=rng.integers(0, vocab, (12,), dtype=np.int32),
+                        max_new=12, arrival=4.0, seed=302, priority=0))
+    return reqs
+
+
+def test_preempt_resume_bit_parity():
+    """A preempted-then-resumed request's full stream equals its solo eager
+    run: swap-out copies exactly the private written blocks, resume restores
+    them (plus the PRNG lane state) bit-for-bit. The pool drains to zero
+    leaked blocks and every preemption has a matching resume."""
+    cfg, m, eng = _setup("olmo-1b", max_new=12)
+    reqs = _priority_pressure_trace(cfg.vocab)
+    rep = eng.serve(reqs, slots=3, paged=True, block_size=4, num_blocks=16,
+                    preemption=True)
+    assert rep.preemptions >= 1
+    assert rep.resumes == rep.preemptions
+    assert rep.leaked_blocks == 0
+    assert sum(r.preempts for r in rep.results) == rep.preemptions
+    for r, req in zip(rep.results, reqs):
+        solo = eng.generate(np.asarray(req.prompt)[None],
+                            key=jax.random.PRNGKey(req.seed), mode="eager",
+                            cache_len=rep.cache_len, max_new=req.max_new)
+        assert np.array_equal(r.tokens, solo.tokens[0]), r.rid
+    # the premium request got in strictly before the victim finished
+    lat = {r.rid: r.finished_at for r in rep.results}
+    assert rep.results[2].first_token_at < max(lat[0], lat[1])
+
+
+def test_preempt_resume_with_prefix_share():
+    """Registered prefix blocks are NOT host-copied on swap-out — they are
+    released by content key and re-acquired (or re-prefilled if evicted)
+    on resume; the stream stays bit-identical."""
+    cfg, m, eng = _setup("olmo-1b", max_new=12)
+    rng = np.random.default_rng(1)
+    pre = rng.integers(0, cfg.vocab, (8,), dtype=np.int32)
+    mk = lambda rid, arr, pr: Request(
+        rid=rid, prompt=np.concatenate(
+            [pre, rng.integers(0, cfg.vocab, (4,), dtype=np.int32)]),
+        max_new=12, arrival=arr, seed=400 + rid, priority=pr)
+    reqs = [mk(0, 0.0, 1), mk(1, 0.0, 1), mk(2, 4.0, 0)]
+    rep = eng.serve(reqs, slots=3, paged=True, block_size=4, num_blocks=14,
+                    preemption=True, prefix_share=True)
+    assert rep.preemptions >= 1 and rep.leaked_blocks == 0
+    for r, req in zip(rep.results, reqs):
+        solo = eng.generate(np.asarray(req.prompt)[None],
+                            key=jax.random.PRNGKey(req.seed), mode="eager",
+                            cache_len=rep.cache_len, max_new=req.max_new)
+        assert np.array_equal(r.tokens, solo.tokens[0]), r.rid
+
+
+def test_preemption_requires_paged():
+    cfg, m, eng = _setup("olmo-1b", max_new=4)
+    with pytest.raises(ValueError, match="preemption"):
+        eng.serve(_trace(cfg.vocab), slots=2, preemption=True)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        eng.serve(_trace(cfg.vocab), slots=2, prefill_chunk=0)

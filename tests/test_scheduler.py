@@ -211,3 +211,164 @@ def test_scheduler_rejects_oversized_request():
         eng.serve([big], slots=2, cache_len=16)
     with pytest.raises(ValueError):
         SlotScheduler([big], 2, 16)
+
+
+# ------------------------------------------------- priority / HOL / traces
+# Pure-scheduler tests (fake clock, no engine): strict classes, aging,
+# head-of-line skip-ahead, preemption bookkeeping, and deterministic trace
+# generators. The randomized versions live in test_scheduler_properties.py;
+# these pin the exact behaviors tier-1 must hold without hypothesis.
+
+
+def _req(rid, arrival=0.0, priority=0, p=4, mn=4):
+    return Request(rid=rid, prompt=np.zeros((p,), np.int32), max_new=mn,
+                   arrival=arrival, seed=rid, priority=priority)
+
+
+def _drain_admissions(sched, t):
+    return [req.rid for _, req in sched.admit(t)]
+
+
+def test_strict_priority_admission_order():
+    """At equal arrival, class 0 admits strictly before class 1 regardless
+    of submission order; FIFO holds within a class."""
+    reqs = [_req(0, priority=1), _req(1, priority=0),
+            _req(2, priority=1), _req(3, priority=0)]
+    sched = SlotScheduler(reqs, 2, 16)
+    sched.advance(0.0)
+    assert _drain_admissions(sched, 0.0) == [1, 3]
+
+
+def test_aging_promotes_waiting_background_request():
+    """A class-1 request that has waited long enough outranks a fresh
+    class-0 arrival — eventual admission under premium overload. One aging
+    period only TIES the effective class (the static-class tiebreak still
+    favors premium); a second period wins outright."""
+    old_bg = _req(0, arrival=0.0, priority=1)
+    fresh_prem = _req(1, arrival=33.0, priority=0)
+    sched = SlotScheduler([old_bg, fresh_prem], 1, 16, aging=16.0)
+    sched.advance(33.0)
+    assert _drain_admissions(sched, 33.0)[0] == 0
+    # with aging disabled the premium request wins the only slot
+    sched2 = SlotScheduler([_req(0, arrival=0.0, priority=1),
+                            _req(1, arrival=33.0, priority=0)],
+                           1, 16, aging=0.0)
+    sched2.advance(33.0)
+    assert _drain_admissions(sched2, 33.0)[0] == 1
+
+
+def test_aging_never_inverts_fifo_within_class():
+    """Aging promotes by waiting time, and within one class the older
+    request has always waited at least as long — admission order inside a
+    class stays submission order at every clock value."""
+    reqs = [_req(i, arrival=float(i), priority=1) for i in range(4)]
+    sched = SlotScheduler(reqs, 4, 16, aging=2.0)
+    sched.advance(50.0)
+    assert _drain_admissions(sched, 50.0) == [0, 1, 2, 3]
+
+
+def test_admit_ok_head_of_line_skip_ahead():
+    """Regression for the PR-8 head-of-line fix: a blocked head candidate
+    (admit_ok False — e.g. a long prompt waiting for blocks) must NOT stall
+    smaller admissible requests behind it. Pre-fix, admit() broke at the
+    first admit_ok failure and rid=1 starved behind rid=0."""
+    blocked = {0}
+    reqs = [_req(0, arrival=0.0, p=8), _req(1, arrival=0.0, p=4)]
+    sched = SlotScheduler(reqs, 2, 16,
+                          admit_ok=lambda r: r.rid not in blocked)
+    sched.advance(0.0)
+    assert _drain_admissions(sched, 0.0) == [1]
+    # past the grace window the starved head becomes strict again: nothing
+    # admits past it, so freed resources accumulate for it
+    sched2 = SlotScheduler([_req(0, arrival=0.0, p=8),
+                            _req(1, arrival=40.0, p=4)],
+                           2, 16, admit_ok=lambda r: r.rid not in blocked,
+                           hol_grace=32.0)
+    sched2.advance(40.0)
+    assert _drain_admissions(sched2, 40.0) == []
+
+
+def test_preempt_victim_selection_and_bookkeeping():
+    """The victim is the worst-class most-recently-admitted decoding slot;
+    preemption is strict-class only (aging cannot evict); the swapped
+    request re-admits with its stream intact."""
+    reqs = [_req(0, priority=1, mn=8), _req(1, priority=1, mn=8),
+            _req(2, arrival=5.0, priority=0, mn=8)]
+    sched = SlotScheduler(reqs, 2, 32)
+    sched.advance(0.0)
+    for slot, req in sched.admit(0.0):
+        sched.install(slot, 7, False)
+    sched.slots[0].admitted_at = 0.0
+    sched.slots[1].admitted_at = 1.0
+    sched.slots[0].pos = sched.slots[1].pos = 5
+    sched.advance(5.0)
+    # rid=2 (class 0) waits; both slots are class 1 -> victim is slot 1
+    # (most recently admitted, least sunk work)
+    assert sched.preempt_victim(5.0) == 1
+    sw = sched.preempt(1, 5.0)
+    assert sw.request.rid == 1 and sw.generated == [7] and sw.pos == 5
+    assert sched.preemptions == 1
+    # the freed slot goes to the premium candidate, not back to the victim
+    admitted = list(sched.admit(5.0))
+    assert [r.rid for _, r in admitted] == [2]
+    for slot, req in admitted:
+        sched.install(slot, 9, False)
+    # no strict-worse class remains -> no further preemption
+    assert sched.preempt_victim(5.0) is None
+    # when a slot frees, the swapped request resumes with state preserved
+    sched.release(0)
+    resumed = list(sched.admit(6.0))
+    assert [r.rid for _, r in resumed] == [1]
+    st = sched.slots[resumed[0][0]]
+    assert st.generated == [7] and st.pos == 5 and st.preempts == 1
+    assert sched.resumes == 1
+    assert not sched.swapped
+
+
+def test_aging_cannot_preempt():
+    """An aged background candidate may outrank premium for ADMISSION order
+    but never evicts an installed premium slot — strictness keeps the
+    preemption relation acyclic (no swap thrash)."""
+    reqs = [_req(0, priority=0, mn=8), _req(1, arrival=0.0, priority=1)]
+    sched = SlotScheduler(reqs, 1, 16, aging=1.0)
+    sched.advance(0.0)
+    for slot, req in sched.admit(0.0):
+        sched.install(slot, 3, False)
+    sched.advance(99.0)   # rid=1 now far outranks class 0 by aging
+    assert sched.preempt_victim(99.0) is None
+
+
+def test_poisson_trace_deterministic():
+    from repro.serving.scheduler import poisson_trace, trace_from_json, \
+        trace_to_json
+    a = poisson_trace(12, 64, seed=5, classes=(0, 1),
+                      class_weights=(0.3, 0.7), deadline_slack=4.0)
+    b = poisson_trace(12, 64, seed=5, classes=(0, 1),
+                      class_weights=(0.3, 0.7), deadline_slack=4.0)
+    assert trace_to_json(a) == trace_to_json(b)
+    c = poisson_trace(12, 64, seed=6, classes=(0, 1),
+                      class_weights=(0.3, 0.7), deadline_slack=4.0)
+    assert trace_to_json(a) != trace_to_json(c)
+    # arrivals are sorted and priorities drawn from the class set
+    assert all(x.arrival <= y.arrival for x, y in zip(a, a[1:]))
+    assert {r.priority for r in a} <= {0, 1}
+
+
+def test_bursty_trace_deterministic_and_round_trips():
+    from repro.serving.scheduler import bursty_trace, trace_from_json, \
+        trace_to_json
+    a = bursty_trace(16, 64, seed=9)
+    b = bursty_trace(16, 64, seed=9)
+    blob = trace_to_json(a)
+    assert blob == trace_to_json(b)
+    back = trace_from_json(blob)
+    assert len(back) == len(a)
+    for x, y in zip(a, back):
+        assert x.rid == y.rid and x.max_new == y.max_new
+        assert x.arrival == y.arrival and x.seed == y.seed
+        assert x.priority == y.priority and x.deadline == y.deadline
+        assert np.array_equal(x.prompt, y.prompt)
+    # the burst class exists and carries the long prompts
+    longs = [r for r in a if r.priority == 1]
+    assert longs and all(r.prompt_len > max(
+        q.prompt_len for q in a if q.priority == 0) for r in longs)

@@ -373,3 +373,213 @@ def test_trace_validation():
         SlotScheduler([], 0, CACHE_LEN)
     with pytest.raises(ValueError):
         SlotScheduler([], 2, CACHE_LEN, policy="lifo")
+
+
+# ------------------------------------------ preemption / priority invariants
+
+
+@st.composite
+def priority_traces(draw, max_requests=12, classes=3):
+    n = draw(st.integers(1, max_requests))
+    reqs = []
+    for rid in range(n):
+        p = draw(st.integers(1, 8))
+        reqs.append(Request(
+            rid=rid,
+            prompt=np.zeros((p,), np.int32),
+            max_new=draw(st.integers(1, CACHE_LEN - p)),
+            arrival=float(draw(st.integers(0, 3 * n))),
+            seed=rid,
+            priority=draw(st.integers(0, classes - 1))))
+    return reqs
+
+
+def drive_preempting(reqs, n_slots, rnd, step_cost=None, aging=16.0):
+    """The fake-executor loop of :func:`drive`, with random preemptions
+    injected: at random steps a random decoding slot is swapped out through
+    ``sched.preempt`` and later resumed through the normal ``admit`` path
+    (its SlotState comes back carrying the generated stream, so the driver
+    must not re-install it — exactly the engine's contract). Each slot's
+    emission at step k is its stream length, so a lost or duplicated token
+    after a swap round-trip breaks the arithmetic sequence check."""
+    sched = SlotScheduler(reqs, n_slots, CACHE_LEN, aging=aging)
+    attr = SlotCostAttributor()
+    steps = 0
+    guard = 0
+    while sched.unfinished:
+        guard += 1
+        assert guard < 20_000, "scheduler loop did not terminate"
+        sched.advance(float(steps))
+        for slot, req in sched.admit(float(steps)):
+            st_ = sched.slots[slot]
+            if not st_.generated:            # fresh admission, not a resume
+                sched.install(slot, first_token=0, done=False)
+                if step_cost is not None:
+                    attr.record_request(req.rid, step_cost.scaled(2))
+            if sched.slot_done(slot):
+                sched.release(slot)
+        if rnd.random() < 0.3:
+            victims = [i for i, s in enumerate(sched.slots)
+                       if s is not None and s.generated and not s.prefilling]
+            if victims:
+                sched.preempt(rnd.choice(victims), float(steps))
+        active = sched.active_slots()
+        if active:
+            if step_cost is not None:
+                attr.record_step(step_cost, sched.active_requests())
+            for slot in active:
+                st_ = sched.slots[slot]
+                st_.generated.append(len(st_.generated))
+                if sched.slot_done(slot):
+                    sched.release(slot)
+        steps += 1
+    return sched, attr, steps
+
+
+@given(priority_traces(), st.integers(1, 4),
+       st.randoms(use_true_random=False))
+@settings(**SETTINGS)
+def test_preempted_streams_survive_swap_round_trips(reqs, n_slots, rnd):
+    """Arbitrary preempt/resume sequences lose no progress: every request
+    completes with its FULL arithmetic token stream (install emits 0, step
+    k appends k), every preemption has a matching resume, and the swapped
+    set drains."""
+    sched, _, _ = drive_preempting(reqs, n_slots, rnd)
+    assert sorted(sched.finished) == sorted(r.rid for r in reqs)
+    for r in reqs:
+        st_ = sched.finished[r.rid]
+        assert st_.generated == list(range(r.max_new)), (
+            "stream corrupted across preemption", r.rid, st_.generated)
+    assert not sched.swapped
+    assert sched.resumes == sched.preemptions  # nothing stranded off-slot
+
+
+@given(priority_traces(), st.integers(1, 4),
+       st.randoms(use_true_random=False))
+@settings(**SETTINGS)
+def test_priority_never_inverts_within_class(reqs, n_slots, rnd):
+    """Within one priority class, FIRST admission order is (arrival,
+    submission) order — aging shifts requests relative to OTHER classes
+    only, and preemption round-trips re-queue by original arrival."""
+    sched, _, _ = drive_preempting(reqs, n_slots, rnd)
+    first_admission = {}
+    for i, rid in enumerate(sched.admitted_order):
+        first_admission.setdefault(rid, i)
+    by_class = {}
+    for i, r in enumerate(reqs):
+        by_class.setdefault(r.priority, []).append(r)
+    for cls, members in by_class.items():
+        expected = [r.rid for r in sorted(members, key=lambda r: r.arrival)]
+        got = sorted((r.rid for r in members),
+                     key=lambda rid: first_admission[rid])
+        assert list(got) == expected, (cls, got, expected)
+
+
+@given(priority_traces(max_requests=10), st.integers(1, 3),
+       st.randoms(use_true_random=False))
+@settings(**SETTINGS)
+def test_aging_guarantees_eventual_admission(reqs, n_slots, rnd):
+    """No starvation: with aging on, every request — whatever its class —
+    is admitted and completes even under preemption pressure (the loop
+    guard bounds the clock, so an unadmittable request would fail there)."""
+    sched, _, steps = drive_preempting(reqs, n_slots, rnd, aging=4.0)
+    assert sorted(sched.finished) == sorted(r.rid for r in reqs)
+    # the worst-class request was admitted within the aging horizon of the
+    # point where it outranks everything: bounded by classes * aging plus
+    # the time to drain what was already running
+    assert steps < 20_000
+
+
+@given(priority_traces(), st.integers(1, 4),
+       st.randoms(use_true_random=False))
+@settings(**SETTINGS)
+def test_cost_conservation_partitions_per_class(reqs, n_slots, rnd):
+    """Per-class cost totals partition the batch meter exactly — preemption
+    moves WHEN a request's steps run, never who pays for them."""
+    unit = CostReport(backend="int_jax", vectors=48, cycles=1893 * 48,
+                      latency_s=1.893e-06 * 48, energy_j=4.17e-09 * 48)
+    sched, attr, _ = drive_preempting(reqs, n_slots, rnd, step_cost=unit)
+    cls_of = {r.rid: r.priority for r in reqs}
+    per_class = attr.class_totals(lambda rid: cls_of[rid])
+    summed = ZERO_COST
+    for rep in per_class.values():
+        summed = summed + rep
+    total = attr.total()
+    assert math.isclose(summed.cycles, total.cycles, rel_tol=1e-9)
+    assert math.isclose(summed.energy_j, total.energy_j, rel_tol=1e-9)
+    assert math.isclose(summed.vectors, total.vectors, rel_tol=1e-9)
+
+
+@given(st.integers(4, 16), st.lists(st.integers(0, 3), min_size=1,
+                                    max_size=50),
+       st.randoms(use_true_random=False))
+@settings(**SETTINGS)
+def test_swap_out_resume_no_block_leak_or_refcount_drift(num_blocks, ops,
+                                                         rnd):
+    """The engine's swap-out/resume block protocol against a live pool:
+    jobs hold blocks (some registered under prefix keys); swap-out releases
+    everything (registered blocks stay acquirable by key); resume
+    re-acquires by key or allocates fresh. After every op the pool
+    partition invariant holds, and the drained pool reclaims completely —
+    no leak, no refcount drift, across arbitrary interleavings."""
+    alloc = BlockAllocator(num_blocks, block_size=4)
+    running = {}     # rid -> (blocks, keys registered under)
+    swapped = {}     # rid -> keys (what resume may re-acquire)
+    next_rid = 0
+    keyno = 0
+    for op in ops:
+        if op == 0 and alloc.available() >= 2:       # admit a 2-block job
+            try:
+                blocks = [alloc.alloc(), alloc.alloc()]
+            except RuntimeError:
+                continue
+            keys = []
+            if rnd.random() < 0.5:                   # register the prefix
+                key = f"pfx{keyno}".encode()
+                keyno += 1
+                if alloc.register(key, blocks[0]):
+                    keys = [key]
+            running[next_rid] = (blocks, keys)
+            next_rid += 1
+        elif op == 1 and running:                    # swap a victim out
+            rid = rnd.choice(sorted(running))
+            blocks, keys = running.pop(rid)
+            for b in blocks:
+                alloc.release_block(b)
+            swapped[rid] = keys
+        elif op == 2 and swapped:                    # resume
+            rid = rnd.choice(sorted(swapped))
+            keys = swapped.pop(rid)
+            blocks = []
+            for key in keys:
+                b = alloc.acquire_cached(key)
+                if b is None:                        # evicted while swapped
+                    try:
+                        b = alloc.alloc()
+                    except RuntimeError:
+                        break
+                    alloc.register(key, b)
+                blocks.append(b)
+            while len(blocks) < 2:
+                try:
+                    blocks.append(alloc.alloc())
+                except RuntimeError:
+                    break
+            if len(blocks) == 2:
+                running[rid] = (blocks, keys)
+            else:                                    # pool too tight: abort
+                for b in blocks:
+                    alloc.release_block(b)
+                swapped[rid] = keys
+        elif op == 3 and running:                    # finish
+            rid = rnd.choice(sorted(running))
+            blocks, _ = running.pop(rid)
+            for b in blocks:
+                alloc.release_block(b)
+        _check_pool(alloc)
+    for rid in sorted(running):
+        blocks, _ = running.pop(rid)
+        for b in blocks:
+            alloc.release_block(b)
+    _check_pool(alloc)
+    assert alloc.available() == num_blocks, "leaked blocks after drain"
