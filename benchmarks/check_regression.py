@@ -82,6 +82,23 @@ METRICS = {
     # per-class SLA attainment is wall-clock on a shared runner
     "sla.whole.sla_attainment_c0": ("abs", None),
     "sla.chunked.sla_attainment_c0": ("abs", None),
+    # quantized KV pool comparison (serve_bench --kv-quant): matched-byte
+    # eviction pressure, so everything but tokens/sec is pure accounting
+    "kv_quant.fp.tokens_per_s": ("abs", None),
+    "kv_quant.int8.tokens_per_s": ("abs", None),
+    # deterministic contracts: int8 sharing is bit-identical to private
+    # int8 blocks, no block leaks, both pools actually hit eviction
+    "kv_quant.token_parity": ("det", None),
+    "kv_quant.leaked_blocks": ("det_low", None),
+    "kv_quant.both_pools_saturated": ("det", None),
+    # the capacity story, deterministic byte/count accounting: int8 keeps
+    # ~2x more prefix blocks resident per pool byte (gate keeps it there)
+    "kv_quant.capacity_per_byte_ratio": ("det", None),
+    "kv_quant.bytes_per_block_ratio": ("det", None),
+    "kv_quant.int8.resident_prefix_blocks": ("det", None),
+    # lower is better: growth means scale metadata (or layout bloat) is
+    # eating the bytes the int8 codes saved
+    "kv_quant.int8.pool_bytes_per_resident_prefix": ("det_low", None),
 }
 
 def _kind(name: str):
@@ -183,6 +200,19 @@ def _metrics(report: dict) -> dict:
                 "leaked_blocks", "tbt_p99_ratio"):
         if key in sl:
             out[f"sla.{key}"] = float(sl[key])
+    kq = report.get("kv_quant", {}).get("results", {})
+    for mode in ("fp", "int8"):
+        if mode in kq:
+            out[f"kv_quant.{mode}.tokens_per_s"] = kq[mode]["tokens_per_s"]
+    if "int8" in kq:
+        out["kv_quant.int8.resident_prefix_blocks"] = float(
+            kq["int8"]["resident_prefix_blocks"])
+        out["kv_quant.int8.pool_bytes_per_resident_prefix"] = float(
+            kq["int8"]["pool_bytes_per_resident_prefix"])
+    for key in ("token_parity", "leaked_blocks", "both_pools_saturated",
+                "capacity_per_byte_ratio", "bytes_per_block_ratio"):
+        if key in kq:
+            out[f"kv_quant.{key}"] = float(kq[key])
     return out
 
 

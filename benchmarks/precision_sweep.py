@@ -83,6 +83,48 @@ def run() -> list:
     rows.append(("table3.finding2b.N16_eq_N20", 0.0, f"delta={f2b:.6f}"))
     rows.append(("table3.finding3.vcorr_irrelevant", 0.0, f"maxdelta={f3:.6f}"))
     rows.append(("table3.finding4.M8_le_M6_KL", 0.0, str(bool(f4))))
+    rows.extend(kv_quant_rows())
+    return rows
+
+
+def kv_quant_rows() -> list:
+    """EXAQ exponent-bits sweep for the int8 KV pool (arxiv 2410.03185):
+    per-position dequantization error of absmax scales vs power-of-two EXAQ
+    scales, unclamped and with the exponent clamped to a signed ``exp_bits``
+    field. KV-like inputs: per-position head vectors whose magnitudes span
+    ~2^12 across positions — the dynamic range the pow2 exponent chases.
+    Expected shape of the table: pow2 rounding costs < 2x absmax (the scale
+    is at most one octave too coarse), a 5-bit exponent field already covers
+    the whole range (clamped == unclamped bit for bit), and 3 bits visibly
+    clips the quiet positions."""
+    from repro.core.quantization import exaq_scale, exaq_scale_clamped
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((256, 64)).astype(np.float32)
+    x *= np.exp2(rng.uniform(-6.0, 6.0, (256, 1))).astype(np.float32)
+    xj = jnp.asarray(x)
+    amax = jnp.max(jnp.abs(xj), axis=-1, keepdims=True)
+
+    def rel_err(scale):
+        codes = jnp.clip(jnp.round(xj / scale), -127, 127)
+        deq = codes.astype(jnp.float32) * scale
+        # mean of PER-POSITION relative error: a global mean would let the
+        # loud positions mask the quiet ones the clamp destroys
+        per_pos = (jnp.mean(jnp.abs(deq - xj), -1)
+                   / jnp.maximum(jnp.mean(jnp.abs(xj), -1), 1e-12))
+        return float(jnp.mean(per_pos))
+
+    errs = {"absmax": rel_err(jnp.maximum(amax / 127.0, 1e-8)),
+            "exaq": rel_err(exaq_scale(amax))}
+    for eb in (3, 4, 5):
+        errs[f"exaq_eb{eb}"] = rel_err(exaq_scale_clamped(amax, eb))
+    rows: list = [(f"table4.kv_quant.{k}.rel_err", 0.0, f"err={v:.5f}")
+                  for k, v in errs.items()]
+    rows.append(("table4.kv_quant.exaq_vs_absmax_ratio", 0.0,
+                 f"{errs['exaq'] / max(errs['absmax'], 1e-12):.2f}x(<2x)"))
+    rows.append(("table4.kv_quant.eb5_matches_unclamped", 0.0,
+                 str(bool(abs(errs["exaq_eb5"] - errs["exaq"]) < 1e-9))))
+    rows.append(("table4.kv_quant.eb3_clips_quiet_positions", 0.0,
+                 f"{errs['exaq_eb3'] / max(errs['exaq'], 1e-12):.1f}x_worse"))
     return rows
 
 

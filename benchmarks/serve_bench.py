@@ -17,6 +17,7 @@ counterpart of ``BENCH_decode.json``) and can gate the ratio for CI.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -28,7 +29,8 @@ import numpy as np
 from repro.configs.registry import smoke_config
 from repro.core.softmax_variants import SoftmaxSpec
 from repro.data.synthetic import SyntheticCorpus
-from repro.models import build_model
+from repro.models import build_model, kv_cache
+from repro.serving import ServeOptions
 from repro.serving.engine import Engine
 from repro.serving.scheduler import (Request, bursty_trace, random_trace,
                                      shared_prefix_trace, trace_from_json,
@@ -48,8 +50,9 @@ def bench(arch: str, n_requests: int, slots: int, seed: int,
                         max_new_range=(4, 48), arrival_spacing=0.0)
 
     policies = ("gang", "continuous")
+    opts = {p: ServeOptions(slots=slots, policy=p) for p in policies}
     for policy in policies:
-        eng.serve(reqs, slots=slots, policy=policy)      # warm / compile
+        eng.serve(reqs, options=opts[policy])            # warm / compile
     walls = {p: [] for p in policies}
     lats = {p: [] for p in policies}
     reports = {}
@@ -59,7 +62,7 @@ def bench(arch: str, n_requests: int, slots: int, seed: int,
     # reward one lucky scheduling window, aggregates do not)
     for _ in range(iters):
         for policy in policies:
-            rep = eng.serve(reqs, slots=slots, policy=policy)
+            rep = eng.serve(reqs, options=opts[policy])
             walls[policy].append(rep.wall_s)
             lats[policy].extend(r.latency_s for r in rep.results)
             reports[policy] = rep    # steps/outputs are deterministic
@@ -120,17 +123,18 @@ def bench_prefix_share(arch: str, n_requests: int, slots: int, seed: int,
                                max_new_range=(4, 8), arrival_spacing=0.0)
     cache_len = max(r.prompt_len + r.max_new for r in reqs)
 
-    modes = {"private": dict(paged=True, block_size=block_size),
-             "shared": dict(paged=True, block_size=block_size,
-                            prefix_share=True)}
-    for kw in modes.values():
-        eng.serve(reqs, slots=slots, cache_len=cache_len, **kw)  # warm
+    base = ServeOptions(slots=slots, cache_len=cache_len, paged=True,
+                        block_size=block_size)
+    modes = {"private": base,
+             "shared": dataclasses.replace(base, prefix_share=True)}
+    for o in modes.values():
+        eng.serve(reqs, options=o)                       # warm / compile
     walls = {m: [] for m in modes}
     lats = {m: [] for m in modes}
     reports = {}
     for _ in range(iters):
-        for mode, kw in modes.items():
-            rep = eng.serve(reqs, slots=slots, cache_len=cache_len, **kw)
+        for mode, o in modes.items():
+            rep = eng.serve(reqs, options=o)
             walls[mode].append(rep.wall_s)
             lats[mode].extend(r.latency_s for r in rep.results)
             reports[mode] = rep
@@ -225,16 +229,18 @@ def bench_speculative(arch: str, n_requests: int, slots: int, seed: int,
     reqs = lookup_trace(corpus, n_requests, seed=seed)
     cache_len = max(r.prompt_len + r.max_new for r in reqs)
 
-    modes = {"baseline": {}, "speculative": dict(speculative=True,
-                                                 draft_k=draft_k)}
-    for kw in modes.values():
-        eng.serve(reqs, slots=slots, cache_len=cache_len, **kw)    # warm
+    base = ServeOptions(slots=slots, cache_len=cache_len)
+    modes = {"baseline": base,
+             "speculative": dataclasses.replace(base, speculative=True,
+                                                draft_k=draft_k)}
+    for o in modes.values():
+        eng.serve(reqs, options=o)                       # warm / compile
     walls = {m: [] for m in modes}
     lats = {m: [] for m in modes}
     reports = {}
     for _ in range(iters):
-        for mode, kw in modes.items():
-            rep = eng.serve(reqs, slots=slots, cache_len=cache_len, **kw)
+        for mode, o in modes.items():
+            rep = eng.serve(reqs, options=o)
             walls[mode].append(rep.wall_s)
             lats[mode].extend(r.latency_s for r in rep.results)
             reports[mode] = rep
@@ -298,17 +304,18 @@ def bench_paged_kernel(arch: str, n_requests: int, slots: int, seed: int,
                         max_new_range=(4, 16), arrival_spacing=0.0)
     cache_len = max(r.prompt_len + r.max_new for r in reqs)
 
-    modes = {"gather": {}, "pallas": dict(kernel="pallas")}
-    base_kw = dict(slots=slots, cache_len=cache_len, paged=True,
-                   block_size=block_size)
-    for kw in modes.values():
-        eng.serve(reqs, **base_kw, **kw)       # warm / compile
+    base = ServeOptions(slots=slots, cache_len=cache_len, paged=True,
+                        block_size=block_size)
+    modes = {"gather": base,
+             "pallas": dataclasses.replace(base, kernel="pallas")}
+    for o in modes.values():
+        eng.serve(reqs, options=o)             # warm / compile
     walls = {m: [] for m in modes}
     lats = {m: [] for m in modes}
     reports = {}
     for _ in range(iters):
-        for mode, kw in modes.items():
-            rep = eng.serve(reqs, **base_kw, **kw)
+        for mode, o in modes.items():
+            rep = eng.serve(reqs, options=o)
             walls[mode].append(rep.wall_s)
             lats[mode].extend(r.latency_s for r in rep.results)
             reports[mode] = rep
@@ -379,17 +386,17 @@ def bench_sharded(arch: str, n_requests: int, slots: int, seed: int,
                         max_new_range=(4, 16), arrival_spacing=0.0)
     cache_len = max(r.prompt_len + r.max_new for r in reqs)
 
-    modes = {"single": {}, "sharded": dict(mesh=mesh)}
-    base_kw = dict(slots=slots, cache_len=cache_len, paged=True,
-                   block_size=block_size)
-    for kw in modes.values():
-        eng.serve(reqs, **base_kw, **kw)       # warm / compile
+    base = ServeOptions(slots=slots, cache_len=cache_len, paged=True,
+                        block_size=block_size)
+    modes = {"single": base, "sharded": dataclasses.replace(base, mesh=mesh)}
+    for o in modes.values():
+        eng.serve(reqs, options=o)             # warm / compile
     walls = {m: [] for m in modes}
     lats = {m: [] for m in modes}
     reports = {}
     for _ in range(iters):
-        for mode, kw in modes.items():
-            rep = eng.serve(reqs, **base_kw, **kw)
+        for mode, o in modes.items():
+            rep = eng.serve(reqs, options=o)
             walls[mode].append(rep.wall_s)
             lats[mode].extend(r.latency_s for r in rep.results)
             reports[mode] = rep
@@ -486,17 +493,18 @@ def bench_sla(arch: str, n_requests: int, slots: int, seed: int,
         assert np.array_equal(a.prompt, b.prompt)
     cache_len = max(r.prompt_len + r.max_new for r in reqs)
 
-    modes = {"whole": {}, "chunked": dict(prefill_chunk=prefill_chunk)}
-    base_kw = dict(slots=slots, cache_len=cache_len, paged=True,
-                   block_size=block_size, preemption=True)
-    for kw in modes.values():
-        eng.serve(reqs, **base_kw, **kw)       # warm / compile
+    base = ServeOptions(slots=slots, cache_len=cache_len, paged=True,
+                        block_size=block_size, preemption=True)
+    modes = {"whole": base,
+             "chunked": dataclasses.replace(base, prefill_chunk=prefill_chunk)}
+    for o in modes.values():
+        eng.serve(reqs, options=o)             # warm / compile
     walls = {m: [] for m in modes}
     tbt99 = {m: [] for m in modes}
     reports = {}
     for _ in range(iters):
-        for mode, kw in modes.items():
-            rep = eng.serve(reqs, **base_kw, **kw)
+        for mode, o in modes.items():
+            rep = eng.serve(reqs, options=o)
             walls[mode].append(rep.wall_s)
             tbt99[mode].append(rep.class_latency[0]["tbt_p99"])
             reports[mode] = rep
@@ -545,6 +553,139 @@ def bench_sla(arch: str, n_requests: int, slots: int, seed: int,
                        "prefill_chunk": prefill_chunk,
                        "trace": trace_path, "long_prompt": 64,
                        "burst_every": 10.0, "deadline_slack": 4.0},
+            "results": out}
+
+
+def _pool_bytes(cfg, slots: int, cache_len: int, block_size: int,
+                num_blocks: int) -> int:
+    """Device bytes of the paged KV pool (block tables excluded — they are
+    int32 bookkeeping, identical across precisions)."""
+    struct = kv_cache.paged_cache_struct(cfg, slots, cache_len, block_size,
+                                         num_blocks)
+
+    def walk(node):
+        if isinstance(node, dict):
+            return sum(walk(v) for k, v in node.items() if k != "table")
+        return int(np.prod(node.shape)) * np.dtype(node.dtype).itemsize
+
+    return walk(struct)
+
+
+def bench_kv_quant(arch: str, seed: int, iters: int) -> dict:
+    """Quantized (int8 + per-position scales) vs full-precision KV pools
+    under EVICTION PRESSURE, at a MATCHED pool-byte budget. The trace is
+    many distinct shared-prefix groups — more registered prefix blocks than
+    either pool can hold — so both allocators run LRU eviction and the pool
+    fills with resident prefixes; the int8 pool simply fits ~2x more blocks
+    into the same bytes (bf16 k+v: 4*d_head B/token-head vs int8 codes +
+    two f32 scales: 2*d_head+8), so it keeps ~2x more prefixes resident per
+    pool byte. ``capacity_per_byte_ratio`` (resident prefix blocks per pool
+    byte, int8/fp) is fully deterministic and gates via
+    ``--min-quant-capacity``; shared-vs-private bit-identity on the int8
+    engine (``token_parity``) and zero leaked blocks always gate. The
+    geometry (2 slots, 12 prefix groups, d_head=64) is part of the
+    measurement, not a knob: d_head=64 puts the byte ratio at 256/136 =
+    1.88x, and 48 prefix blocks against 14-vs-26-block pools saturates
+    both sides."""
+    block_size, prefix_len, tail_len, max_new = 4, 16, 4, 4
+    slots, groups, per_group = 2, 12, 2
+    cfg_fp = dataclasses.replace(smoke_config(arch), d_head=64)
+    cfg_q = dataclasses.replace(cfg_fp, kv_quant=True)
+
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for g in range(groups):
+        prefix = rng.integers(0, cfg_fp.vocab, size=prefix_len)
+        for j in range(per_group):
+            tail = rng.integers(0, cfg_fp.vocab, size=tail_len)
+            reqs.append(Request(
+                rid=len(reqs),
+                prompt=np.concatenate([prefix, tail]).astype(np.int32),
+                max_new=max_new, arrival=0.0, seed=4000 + len(reqs)))
+    cache_len = max(r.prompt_len + r.max_new for r in reqs)
+    C = -(-cache_len // block_size) * block_size
+    n_logical = C // block_size
+
+    # matched BYTE budget: size the fp pool to the serve geometry, then give
+    # the int8 pool however many (cheaper) blocks fit in the same bytes
+    nb_fp = slots * n_logical + 2
+    bpb_fp = _pool_bytes(cfg_fp, slots, C, block_size, 1)
+    bpb_q = _pool_bytes(cfg_q, slots, C, block_size, 1)
+    nb = {"fp": nb_fp, "int8": (nb_fp * bpb_fp) // bpb_q}
+    pool_bytes = {m: _pool_bytes(cfg, slots, C, block_size, nb[m])
+                  for m, cfg in (("fp", cfg_fp), ("int8", cfg_q))}
+
+    engines, opts = {}, {}
+    for mode, cfg in (("fp", cfg_fp), ("int8", cfg_q)):
+        model = build_model(cfg)
+        params, _ = model.init_split(jax.random.PRNGKey(0))
+        engines[mode] = Engine(model, params, max_new=max_new)
+        opts[mode] = ServeOptions(slots=slots, cache_len=cache_len,
+                                  paged=True, block_size=block_size,
+                                  num_blocks=nb[mode], prefix_share=True)
+
+    # int8 sharing must be bit-identical to int8 private blocks — the PR 4
+    # exclusion this pool design lifts
+    shared = engines["int8"].serve(reqs, options=opts["int8"])
+    private = engines["int8"].serve(
+        reqs, options=dataclasses.replace(opts["int8"],
+                                          prefix_share=False))
+    for a, b in zip(shared.results, private.results):
+        assert np.array_equal(a.tokens, b.tokens), \
+            f"int8 shared-vs-private parity broke on rid {a.rid}"
+
+    walls = {m: [] for m in engines}
+    reports, resident = {}, {}
+    for mode, eng in engines.items():
+        eng.serve(reqs, options=opts[mode])    # warm / compile
+    for _ in range(iters):
+        for mode, eng in engines.items():
+            rep = eng.serve(reqs, options=opts[mode])
+            walls[mode].append(rep.wall_s)
+            reports[mode] = rep
+            # registered prefix blocks still resident when the trace drains
+            resident[mode] = len(eng._last_alloc._by_key)
+
+    gen_tokens = sum(r.max_new for r in reqs)
+    out = {}
+    for mode in engines:
+        rep = reports[mode]
+        wall = float(np.median(walls[mode]))
+        out[mode] = {
+            "steps": rep.steps,
+            "wall_s": wall,
+            "wall_s_all": walls[mode],
+            "tokens_per_s": gen_tokens / wall,
+            "num_blocks": nb[mode],
+            "pool_bytes": pool_bytes[mode],
+            "evictions": rep.evictions,
+            "shared_prefill_tokens": rep.shared_prefill_tokens,
+            "resident_prefix_blocks": resident[mode],
+            "pool_bytes_per_resident_prefix":
+                pool_bytes[mode] / max(resident[mode], 1),
+        }
+        print(f"{mode:11s} blocks={nb[mode]:3d} "
+              f"pool={pool_bytes[mode] / 2**20:6.2f} MiB  "
+              f"resident_prefix={resident[mode]:3d} "
+              f"evictions={rep.evictions:3d} "
+              f"tps={out[mode]['tokens_per_s']:8.0f} tok/s", file=sys.stderr)
+    out["bytes_per_block_ratio"] = bpb_fp / bpb_q
+    out["capacity_per_byte_ratio"] = (
+        (resident["int8"] / pool_bytes["int8"])
+        / max(resident["fp"] / pool_bytes["fp"], 1e-12))
+    out["token_parity"] = 1.0      # the zip/assert above would have raised
+    out["leaked_blocks"] = max(r.leaked_blocks for r in reports.values())
+    out["both_pools_saturated"] = float(
+        min(r.evictions for r in reports.values()) > 0)
+    print(f"int8/fp resident prefixes per pool byte: "
+          f"{out['capacity_per_byte_ratio']:.2f}x "
+          f"(bytes/block {out['bytes_per_block_ratio']:.2f}x)",
+          file=sys.stderr)
+    return {"config": {"requests": len(reqs), "slots": slots, "seed": seed,
+                       "iters": iters, "block_size": block_size,
+                       "prefix_len": prefix_len, "groups": groups,
+                       "d_head": 64, "scheme": cfg_q.kv_quant_scheme,
+                       "num_blocks": nb, "kv_dtype": "bf16-vs-int8"},
             "results": out}
 
 
@@ -614,6 +755,17 @@ def main():
                          "by this ratio (token parity, zero leaked blocks, "
                          "the per-step prefill bound, and resume==preempt "
                          "bookkeeping always gate)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="also bench the int8 quantized KV block pool vs "
+                         "full precision at a matched pool-byte budget "
+                         "under eviction pressure (resident prefix blocks "
+                         "per pool byte)")
+    ap.add_argument("--min-quant-capacity", type=float, default=0.0,
+                    help="with --kv-quant: exit nonzero unless the int8 "
+                         "pool keeps >= this many times more resident "
+                         "prefix blocks per pool byte than fp (CI gate; "
+                         "shared-vs-private int8 bit-identity and zero "
+                         "leaked blocks always gate)")
     args = ap.parse_args()
 
     report = bench(args.arch, args.requests, args.slots, args.seed, args.iters)
@@ -637,6 +789,8 @@ def main():
         report["sla"] = bench_sla(
             args.arch, args.requests, args.slots, args.seed, args.iters,
             args.block_size, args.prefill_chunk, args.trace)
+    if args.kv_quant:
+        report["kv_quant"] = bench_kv_quant(args.arch, args.seed, args.iters)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out}")
@@ -739,6 +893,33 @@ def main():
                 f"chunked prefill p99 TBT below gate: "
                 f"{sl['tbt_p99_ratio']:.2f}x < {args.min_sla_ratio}x "
                 f"vs whole prefill")
+    if args.kv_quant:
+        kq = report["kv_quant"]["results"]
+        print(f"kv-quant (int8/fp, matched pool bytes): "
+              f"{kq['capacity_per_byte_ratio']:.2f}x resident prefix blocks "
+              f"per pool byte ({kq['fp']['resident_prefix_blocks']} -> "
+              f"{kq['int8']['resident_prefix_blocks']} resident, "
+              f"{kq['bytes_per_block_ratio']:.2f}x bytes/block), "
+              f"token_parity={kq['token_parity']:.0f}")
+        # deterministic gates: quantized sharing must stay bit-identical to
+        # private int8 blocks, never leak a block, and the comparison is
+        # only meaningful if BOTH pools actually hit eviction pressure
+        if kq["token_parity"] < 1.0:
+            raise SystemExit("int8 prefix sharing broke token parity vs "
+                             "private int8 blocks")
+        if kq["leaked_blocks"] > 0:
+            raise SystemExit(
+                f"kv-quant serve leaked {kq['leaked_blocks']} blocks")
+        if kq["both_pools_saturated"] < 1.0:
+            raise SystemExit("kv-quant bench did not saturate both pools "
+                             "(no evictions — capacity ratio meaningless)")
+        if args.min_quant_capacity > 0 and \
+                kq["capacity_per_byte_ratio"] < args.min_quant_capacity:
+            raise SystemExit(
+                f"int8 KV capacity below gate: "
+                f"{kq['capacity_per_byte_ratio']:.2f}x "
+                f"< {args.min_quant_capacity}x resident prefixes per pool "
+                f"byte vs fp")
 
 
 if __name__ == "__main__":

@@ -67,6 +67,35 @@ def dequantize_probs(p_codes, cfg: PrecisionConfig):
     return p_codes.astype(jnp.float32) * jnp.float32(2.0 ** (-cfg.P_out))
 
 
+# ---- EXAQ-style exponent-aware KV scales (arxiv 2410.03185) ------------------
+#
+# EXAQ observes that constraining quantization scales to powers of two keeps
+# dequantization a pure exponent add (a shift in integer hardware) while the
+# ceil() keeps every code representable in the int8 grid. We apply the rule
+# per KV position/head: scale = 2^ceil(log2(max(amax/127, floor))). The scale
+# is a function of that position's amax only, so it is position-local — the
+# property the serving stack relies on for chunked-prefill / prefix-sharing
+# bit-identity (requantizing a position never changes its stored bytes).
+
+
+def exaq_scale(amax, floor: float = 1e-8):
+    """Power-of-two KV scale per EXAQ: smallest 2^e with 127 * 2^e >= amax."""
+    s = jnp.maximum(amax.astype(jnp.float32) / 127.0, floor)
+    return jnp.exp2(jnp.ceil(jnp.log2(s)))
+
+
+def exaq_scale_clamped(amax, exp_bits: int, floor: float = 1e-8):
+    """EXAQ scale with the exponent clamped to a signed ``exp_bits`` field.
+
+    Models the hardware sweep axis (how many exponent bits the scale word
+    carries): exponents saturate at +/-2^(exp_bits-1), so tiny rows lose
+    resolution and huge rows clip. Accuracy-sweep only (precision_sweep.py) —
+    serving uses the unclamped rule, which stays position-local."""
+    e = jnp.ceil(jnp.log2(jnp.maximum(amax.astype(jnp.float32) / 127.0, floor)))
+    lo, hi = -(2 ** (exp_bits - 1)), 2 ** (exp_bits - 1) - 1
+    return jnp.exp2(jnp.clip(e, lo, hi))
+
+
 # ---- generic affine quantizer (substrate; used by serving & tests) -----------
 
 

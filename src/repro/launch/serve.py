@@ -108,6 +108,14 @@ def main():
                     help="--paged: premium arrivals may swap a lower-class "
                          "request's blocks to host memory and resume it "
                          "later, bit-identically")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache with per-position scales (fake-quant "
+                         "prefill; composes with every serve mode — sharing, "
+                         "chunking, preemption, speculation, pallas)")
+    ap.add_argument("--kv-quant-scheme", default="absmax",
+                    choices=("absmax", "exaq"),
+                    help="--kv-quant: scale rule (exaq = EXAQ-style "
+                         "power-of-two scales, arxiv 2410.03185)")
     args = ap.parse_args()
     if (args.paged or args.prefix_share or args.speculative or args.shards) \
             and not args.continuous:
@@ -119,24 +127,36 @@ def main():
                      f"but jax sees {len(jax.devices())}; on CPU hosts set "
                      f"XLA_FLAGS=--xla_force_host_platform_device_count="
                      f"{args.shards} before launch")
-    if args.prefix_share and not args.paged:
-        ap.error("--prefix-share requires --paged (sharing points block "
-                 "tables at resident pool blocks)")
-    if args.kernel != "jnp" and not args.paged:
-        ap.error("--kernel pallas requires --paged (the fused kernel walks "
-                 "the per-slot block table)")
     if args.prefill_chunk is not None and not args.continuous:
         ap.error("--prefill-chunk requires --continuous (it paces "
                  "Engine.serve admissions)")
-    if args.preemption and not args.paged:
-        ap.error("--preemption requires --paged (swap-out releases and "
-                 "restores pool blocks)")
+    # cross-field serve constraints (--prefix-share/--kernel/--preemption
+    # require --paged, ...) live in ONE place: ServeOptions.__post_init__.
+    # Build the options object up front so flag conflicts fail before any
+    # training/restore work happens.
+    from repro.serving import ServeOptions
+    try:
+        serve_options = ServeOptions(
+            slots=args.slots, policy=args.policy,
+            paged=args.paged, block_size=args.block_size,
+            prefix_share=args.prefix_share,
+            speculative=args.speculative, draft_k=args.draft_k,
+            kernel=args.kernel,
+            shards=args.shards if args.shards else None,
+            prefill_chunk=args.prefill_chunk,
+            preemption=args.preemption)
+    except ValueError as e:
+        ap.error(str(e))
 
     metered = get_backend(args.softmax).metered
     spec = SoftmaxSpec(args.softmax, PrecisionConfig(M=args.M, N=args.N)) \
         if metered else SoftmaxSpec(args.softmax)
     cfg = (smoke_config(args.arch, softmax=spec) if args.smoke
            else get_config(args.arch, softmax=spec))
+    if args.kv_quant:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_quant=True,
+                                  kv_quant_scheme=args.kv_quant_scheme)
     mesh = make_host_mesh()
     model = Model(cfg, rules=ShardingRules(cfg.sharding_overrides), mesh=mesh)
     # warm training keeps the requested spec when its backend differentiates
@@ -185,16 +205,10 @@ def main():
                                          2 * args.prompt_len),
                             max_new_range=(max(args.max_new // 4, 1),
                                            args.max_new))
-        serve_kw = dict(slots=args.slots, policy=args.policy,
-                        paged=args.paged, block_size=args.block_size,
-                        prefix_share=args.prefix_share,
-                        speculative=args.speculative, draft_k=args.draft_k,
-                        kernel=args.kernel,
-                        shards=args.shards if args.shards else None,
-                        prefill_chunk=args.prefill_chunk,
-                        preemption=args.preemption)
-        eng.serve(reqs, **serve_kw)  # compile
-        rep = eng.serve(reqs, report_cost=True, **serve_kw)
+        import dataclasses as _dc
+        eng.serve(reqs, options=serve_options)  # compile
+        rep = eng.serve(reqs, options=_dc.replace(serve_options,
+                                                  report_cost=True))
         import numpy as np
         gen = sum(r.max_new for r in reqs)
         lat = [r.latency_s for r in rep.results]

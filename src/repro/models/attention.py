@@ -128,19 +128,40 @@ def attn_apply(p, x, cfg, ctx: Ctx, positions, kind: str = "causal"):
     return dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
 
 
-def kv_quantize(x):
+def kv_quantize(x, scheme: str = "absmax"):
     """bf16 [B, S, KV, D] -> (int8 codes, per-(position, head) f32 scale).
     Symmetric absmax over the head dim — the integer theme of the paper
     carried into the serving cache (int8 KV halves decode HBM traffic, the
-    dominant roofline term of every decode cell)."""
+    dominant roofline term of every decode cell). ``scheme="exaq"`` rounds
+    the scale up to a power of two (core/quantization.exaq_scale), so
+    dequant is an exponent add on integer hardware. Either way the scale is
+    a function of this position's amax alone (position-local): requantizing
+    a position always reproduces its stored bytes, which is what lets
+    chunked prefill and prefix sharing stay bit-identical on int8 pools."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax / 127.0, 1e-8)
+    if scheme == "exaq":
+        from repro.core.quantization import exaq_scale
+        scale = exaq_scale(amax)
+    else:
+        scale = jnp.maximum(amax / 127.0, 1e-8)
     codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
     return codes.astype(jnp.int8), scale[..., 0]
 
 
 def kv_dequantize(codes, scale, dtype):
     return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def kv_fake_quant(x, scheme: str = "absmax"):
+    """Quantize-then-dequantize: returns (codes, scale, dequantized-as-x.dtype).
+
+    The prefill path attends the DEQUANTIZED values while committing the
+    codes+scales to the cache, so the int8 pool is the single source of
+    truth — decode/verify gathers (which only ever see codes) reproduce the
+    exact tensor prefill attended. This is the bit-identity contract that
+    lets shared/chunked/swapped int8 blocks replay byte-for-byte."""
+    codes, scale = kv_quantize(x, scheme)
+    return codes, scale, kv_dequantize(codes, scale, x.dtype)
 
 
 def cache_write(buf, new, cache_pos, axis: int = 1):
@@ -312,8 +333,9 @@ def _attn_decode_paged(p, x, cache, cache_pos, cfg, ctx: Ctx, positions, kind):
     q, k_new, v_new = project_qkv(p, x, cfg, ctx, positions)
     table = cache["table"]
     if "k_scale" in cache:
-        kq, ks = kv_quantize(k_new)
-        vq, vs = kv_quantize(v_new)
+        scheme = getattr(cfg, "kv_quant_scheme", "absmax")
+        kq, ks = kv_quantize(k_new, scheme)
+        vq, vs = kv_quantize(v_new, scheme)
         new_cache = {
             "k": paged_write(cache["k"], table, kq[:, 0], cache_pos),
             "v": paged_write(cache["v"], table, vq[:, 0], cache_pos),
@@ -356,23 +378,41 @@ def _attn_decode_paged(p, x, cache, cache_pos, cfg, ctx: Ctx, positions, kind):
 
 
 def attn_prefill_tail(p, x, prefix_k, prefix_v, cfg, ctx: Ctx, positions,
-                      prefix_len: int):
+                      prefix_len: int, prefix_k_scale=None,
+                      prefix_v_scale=None):
     """Prefill the unshared prompt tail against a shared-prefix cache.
 
     ``x`` embeds tokens[prefix_len:]; ``prefix_k``/``prefix_v`` [B, s, KV, D]
     are the prefix K/V gathered from shared pool blocks (the exact bf16
     values a full prefill would have computed and cached for those
     positions, so the tail's attention rows — and its own K/V — match the
-    full prefill bit for bit). Returns (y, {"k","v"} tail cache [B, T, ...])."""
+    full prefill bit for bit). Returns (y, {"k","v"} tail cache [B, T, ...]).
+
+    Under ``cfg.kv_quant`` the prefix arrives as int8 codes plus per-position
+    scales (``prefix_k_scale``/``prefix_v_scale`` [B, s, KV]); both the
+    prefix and the tail attend through the same quantize->dequantize round
+    trip a whole fake-quant prefill applies, and the returned tail cache
+    carries codes+scales, so shared/chunked int8 execution stays
+    bit-identical to the private whole-prefill path."""
     b, t, _ = x.shape
     q, k_t, v_t = project_qkv(p, x, cfg, ctx, positions)
-    k = jnp.concatenate([ctx.cast(prefix_k), k_t], axis=1)
-    v = jnp.concatenate([ctx.cast(prefix_v), v_t], axis=1)
+    if getattr(cfg, "kv_quant", False):
+        scheme = getattr(cfg, "kv_quant_scheme", "absmax")
+        kq, ks, k_t = kv_fake_quant(k_t, scheme)
+        vq, vs, v_t = kv_fake_quant(v_t, scheme)
+        pk = kv_dequantize(prefix_k, prefix_k_scale, k_t.dtype)
+        pv = kv_dequantize(prefix_v, prefix_v_scale, v_t.dtype)
+        tail = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    else:
+        pk, pv = ctx.cast(prefix_k), ctx.cast(prefix_v)
+        tail = {"k": k_t, "v": v_t}
+    k = jnp.concatenate([pk, k_t], axis=1)
+    v = jnp.concatenate([pv, v_t], axis=1)
     pos = positions[0] if cfg.rope_type == "mrope" else positions
     kv_pos = jnp.arange(prefix_len + t, dtype=jnp.int32)[None, :]
     out = attend_chunked(q, k, v, pos, kv_pos, "causal", cfg, ctx)
     y = dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, t, -1), ctx)
-    return y, {"k": k_t, "v": v_t}
+    return y, tail
 
 
 def attn_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
@@ -390,8 +430,9 @@ def attn_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
     q, k_new, v_new = project_qkv(p, x, cfg, ctx, positions)
     quant = "k_scale" in cache
     if quant:
-        kq, ks = kv_quantize(k_new)
-        vq, vs = kv_quantize(v_new)
+        scheme = getattr(cfg, "kv_quant_scheme", "absmax")
+        kq, ks = kv_quantize(k_new, scheme)
+        vq, vs = kv_quantize(v_new, scheme)
         k_codes = cache_write(cache["k"], kq, cache_pos)
         v_codes = cache_write(cache["v"], vq, cache_pos)
         k_sc = cache_write(cache["k_scale"], ks, cache_pos)
@@ -435,8 +476,9 @@ def attn_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
     if "table" in cache:
         table = cache["table"]
         if "k_scale" in cache:
-            kq, ks = kv_quantize(k_new)
-            vq, vs = kv_quantize(v_new)
+            scheme = getattr(cfg, "kv_quant_scheme", "absmax")
+            kq, ks = kv_quantize(k_new, scheme)
+            vq, vs = kv_quantize(v_new, scheme)
             kp = paged_write_block(cache["k"], table, kq, cache_pos)
             vp = paged_write_block(cache["v"], table, vq, cache_pos)
             ksp = paged_write_block(cache["k_scale"], table, ks, cache_pos)
@@ -468,8 +510,9 @@ def attn_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
         k = ctx.shard(k, ("batch", None, "kv_heads", None))
         v = ctx.shard(v, ("batch", None, "kv_heads", None))
     elif "k_scale" in cache:
-        kq, ks = kv_quantize(k_new)
-        vq, vs = kv_quantize(v_new)
+        scheme = getattr(cfg, "kv_quant_scheme", "absmax")
+        kq, ks = kv_quantize(k_new, scheme)
+        vq, vs = kv_quantize(v_new, scheme)
         k_codes = cache_write_block(cache["k"], kq, cache_pos)
         v_codes = cache_write_block(cache["v"], vq, cache_pos)
         k_sc = cache_write_block(cache["k_scale"], ks, cache_pos)

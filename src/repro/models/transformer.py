@@ -195,6 +195,18 @@ def attn_prefill(p, x, cfg, ctx: Ctx, positions, kind: str, cache_len: int):
     import numpy as np
     b, s, _ = x.shape
     q, k, v = project_qkv(p, x, cfg, ctx, positions)
+    quant = getattr(cfg, "kv_quant", False) and kind != "window"
+    if quant:
+        # fake-quant prefill: attend the DEQUANTIZED K/V while caching the
+        # codes+scales, so the int8 pool is the single source of truth —
+        # every later reader (decode gather, tail prefill, verify, the
+        # fused kernel) reproduces exactly what the prompt rows attended.
+        # Scales are per-position (position-local), so chunked/tail-only
+        # prefill re-deriving them yields identical bytes.
+        from repro.models.attention import kv_fake_quant
+        scheme = getattr(cfg, "kv_quant_scheme", "absmax")
+        kq, ks, k = kv_fake_quant(k, scheme)
+        vq, vs, v = kv_fake_quant(v, scheme)
     pos = positions[0] if cfg.rope_type == "mrope" else positions
     out = attend_chunked(q, k, v, pos, pos, kind, cfg, ctx)
     from repro.models.attention import _collect_heads
@@ -215,10 +227,7 @@ def attn_prefill(p, x, cfg, ctx: Ctx, positions, kind: str, cache_len: int):
         # carry, so prefill hands decode tensors already in the serving layout
         # (head-sharded under serving rules, split-KV under default rules)
         kv_ax = ("batch", "kv_seq", "kv_heads", None)
-        if getattr(cfg, "kv_quant", False):
-            from repro.models.attention import kv_quantize
-            kq, ks = kv_quantize(k)
-            vq, vs = kv_quantize(v)
+        if quant:
             cache = {"k": ctx.shard(_pad_cache(kq, cache_len), kv_ax),
                      "v": ctx.shard(_pad_cache(vq, cache_len), kv_ax),
                      "k_scale": ctx.shard(_pad_cache(ks, cache_len),
@@ -285,7 +294,9 @@ def block_prefill_tail(p, x, cfg, ctx: Ctx, positions, kind: str, prefix,
                                 cfg, ctx, positions, prefix_len)
     else:
         a, c = attn_prefill_tail(p["attn"], h, prefix["k"], prefix["v"], cfg,
-                                 ctx, positions, prefix_len)
+                                 ctx, positions, prefix_len,
+                                 prefix_k_scale=prefix.get("k_scale"),
+                                 prefix_v_scale=prefix.get("v_scale"))
     x = x + a
     h = norm_apply(p["norm2"], x, cfg.norm, ctx)
     if kind == "moe":

@@ -1,0 +1,7 @@
+"""Serving package. Kept import-light: only the options surface lives here
+(pulling ``engine`` would drag jax + the model zoo into ``import
+repro.serving``); import ``repro.serving.engine`` for Engine itself."""
+
+from repro.serving.options import POLICIES, ServeOptions
+
+__all__ = ["POLICIES", "ServeOptions"]

@@ -49,6 +49,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -59,11 +60,26 @@ import numpy as np
 from repro.backends import CostReport, telemetry
 from repro.models import kv_cache
 from repro.models.model import Model
+from repro.serving.options import ServeOptions
 from repro.serving.sampler import make_sampler, make_spec_verifier
 from repro.serving.scheduler import (
     BlockAllocator, Request, SlotScheduler, prefix_keys,
 )
 from repro.serving.speculative import make_proposer
+
+_legacy_serve_warned = False
+
+
+def _warn_legacy_serve_kwargs():
+    """One DeprecationWarning per process for Engine.serve(**kwargs) calls."""
+    global _legacy_serve_warned
+    if not _legacy_serve_warned:
+        _legacy_serve_warned = True
+        warnings.warn(
+            "Engine.serve(**kwargs) is deprecated; build a "
+            "repro.serving.ServeOptions and call "
+            "serve(requests, options=...) instead",
+            DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -606,19 +622,19 @@ class Engine:
             self._meter_cache[key] = acc.total()
         return self._meter_cache[key]
 
-    def serve(self, requests: Sequence[Request], slots: int = 4,
-              cache_len: Optional[int] = None, policy: str = "continuous",
-              report_cost: bool = False, paged: bool = False,
-              block_size: int = 16, num_blocks: Optional[int] = None,
-              prefix_share: bool = False, speculative: bool = False,
-              draft_k: int = 4, draft: str = "ngram", max_ngram: int = 3,
-              draft_model=None, draft_params=None,
-              kernel: str = "jnp", mesh=None,
-              shards: Optional[int] = None,
-              prefill_chunk: Optional[int] = None,
-              preemption: bool = False,
-              aging: float = 16.0, hol_grace: float = 32.0) -> ServeReport:
+    def serve(self, requests: Sequence[Request],
+              options: Optional[ServeOptions] = None, **legacy) -> ServeReport:
         """Continuous-batching serving over a trace of timed arrivals.
+
+        Configuration lives in ONE object: ``serve(reqs,
+        options=ServeOptions(paged=True, prefix_share=True, ...))``. Every
+        field below keeps the name and default of the keyword argument it
+        replaced; cross-field constraints (``prefix_share`` requires
+        ``paged``, ...) are validated by ``ServeOptions.__post_init__`` at
+        construction time. The legacy spelling ``serve(reqs, paged=True,
+        ...)`` still works — the kwargs are mapped onto a ``ServeOptions``
+        with a one-time ``DeprecationWarning``; passing both ``options=`` and
+        extra kwargs is an error.
 
         Runs ONE compiled decode step (``make_serve_step_fn``) in a host
         loop; between steps the scheduler admits arrived requests into free
@@ -642,10 +658,13 @@ class Engine:
         common prefix (block-granular, cumulative-content matched, refcounted
         by a :class:`~repro.serving.scheduler.BlockAllocator`, copy-on-write
         on the first divergent write) and prefills only the unshared tail.
-        Sharing covers the dense/moe/MLA families with fp KV storage; SSM
-        state and hybrid rings are whole-prefix summaries, so those families
-        page without sharing, and int8 KV is excluded because the non-paged
-        parity reference attends the prefix unquantized.
+        Sharing covers the dense/moe/MLA families — including int8 KV
+        (``cfg.kv_quant``): prefill is fake-quant (the prompt attends the
+        dequantized codes it caches — see ``transformer.attn_prefill``), and
+        per-position scales ride the pool next to the codes through scatter /
+        CoW / swap / tail gather, so shared int8 blocks replay byte-for-byte.
+        SSM state and hybrid rings are whole-prefix summaries, so those
+        families page without sharing.
 
         ``speculative=True`` switches every active slot to draft-and-verify
         decoding: a proposer guesses ``draft_k`` tokens per round
@@ -689,11 +708,12 @@ class Engine:
         step: long prompts commit in N-token chunks INTERLEAVED with decode
         steps (in-flight slots keep emitting while the newcomer prefills),
         so one long prompt no longer spikes every other request's
-        time-between-tokens. Dense/moe (incl. MLA, fp KV) chunk truly
-        incrementally — each chunk is a ``prefill_tail`` against the chunks
-        committed so far, and the result is bit-identical to whole prefill;
-        SSM/hybrid recurrences and int8 KV are not chunk-resumable at exact
-        bit parity (the SSD scan grid and quantized prefix reads depend on
+        time-between-tokens. Dense/moe (incl. MLA; fp or int8 KV — the
+        fake-quant prefill's per-position scales make quantized chunks
+        byte-stable) chunk truly incrementally — each chunk is a
+        ``prefill_tail`` against the chunks committed so far, and the result
+        is bit-identical to whole prefill; SSM/hybrid recurrences are not
+        chunk-resumable at exact bit parity (the SSD scan grid depends on
         the whole prompt), so those families ACCRUE the same N-token budget
         per step and run one whole prefill when it covers the prompt —
         identical interleaving bounds, trivially identical bits. Composes
@@ -711,6 +731,26 @@ class Engine:
         order (see ``SlotScheduler``); per-class latency lands in
         ``ServeReport.class_latency``.
         """
+        if options is not None and legacy:
+            raise TypeError("pass either options=ServeOptions(...) or legacy "
+                            "keyword arguments, not both")
+        if options is None:
+            # legacy kwarg surface: unknown names raise TypeError from the
+            # dataclass ctor exactly like the old signature did; cross-field
+            # validation happens in ServeOptions.__post_init__
+            options = ServeOptions(**legacy)
+            if legacy:
+                _warn_legacy_serve_kwargs()
+        opt = options
+        slots, cache_len, policy = opt.slots, opt.cache_len, opt.policy
+        report_cost, paged = opt.report_cost, opt.paged
+        block_size, num_blocks = opt.block_size, opt.num_blocks
+        prefix_share, speculative = opt.prefix_share, opt.speculative
+        draft_k, draft, max_ngram = opt.draft_k, opt.draft, opt.max_ngram
+        draft_model, draft_params = opt.draft_model, opt.draft_params
+        kernel, mesh, shards = opt.kernel, opt.mesh, opt.shards
+        prefill_chunk, preemption = opt.prefill_chunk, opt.preemption
+        aging, hol_grace = opt.aging, opt.hol_grace
         cfg = self.model.cfg
         if cfg.family == "encdec" or cfg.rope_type == "mrope":
             raise NotImplementedError(
@@ -724,16 +764,6 @@ class Engine:
         if cfg.family == "hybrid":
             # prefill builds window-capacity rings; the slot buffers must match
             C = max(C, cfg.window)
-        if prefix_share and not paged:
-            raise ValueError("prefix_share=True requires paged=True")
-        if prefill_chunk is not None and prefill_chunk < 1:
-            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
-        if preemption and not paged:
-            raise ValueError("preemption=True requires paged=True (swap-out "
-                             "releases pool blocks through the allocator)")
-        if kernel != "jnp" and not paged:
-            raise ValueError("kernel='pallas' requires paged=True (the "
-                             "fused kernel walks the block table)")
         if shards is not None and mesh is None:
             from repro.launch.mesh import make_serving_mesh
             mesh = make_serving_mesh(shards)
@@ -758,6 +788,9 @@ class Engine:
                 num_blocks = slots * n_logical + (n_logical if prefix_share
                                                   else 0)
             alloc = BlockAllocator(num_blocks, block_size)
+            # debug/test handle: pool bookkeeping of the most recent serve
+            # (tests assert allocator-state invariants across cache dtypes)
+            self._last_alloc = alloc
             need_max = max(alloc.blocks_needed(r.prompt_len, r.max_new)
                            for r in reqs)
             if num_blocks < need_max:
@@ -765,8 +798,9 @@ class Engine:
                     f"num_blocks {num_blocks} cannot fit the largest "
                     f"request (worst case {need_max} blocks of "
                     f"{block_size})")
-            shareable = (prefix_share and cfg.family in ("dense", "moe")
-                         and not getattr(cfg, "kv_quant", False))
+            # int8 KV shares too (PR 9 lifted the PR 4 exclusion): fake-quant
+            # prefill + position-local scales make pool bytes replayable
+            shareable = prefix_share and cfg.family in ("dense", "moe")
             sched = SlotScheduler(
                 reqs, slots, C, policy=policy,
                 admit_ok=lambda r: alloc.available() >= alloc.blocks_needed(
@@ -778,13 +812,12 @@ class Engine:
             sched = SlotScheduler(reqs, slots, C, policy=policy,
                                   aging=aging, hol_grace=hol_grace)
             cache = kv_cache.cache_zeros(cfg, slots, C)
-        # chunked prefill: dense/moe (incl. MLA) with fp KV chunk truly
+        # chunked prefill: dense/moe (incl. MLA, fp or int8 KV) chunk truly
         # incrementally (prefill_tail against the committed prefix, bit-
-        # identical); recurrent families / int8 KV accrue the same budget
-        # and prefill whole once it covers the prompt (see the docstring)
+        # identical); recurrent families accrue the same budget and prefill
+        # whole once it covers the prompt (see the docstring)
         chunkable = (prefill_chunk is not None
-                     and cfg.family in ("dense", "moe")
-                     and not getattr(cfg, "kv_quant", False))
+                     and cfg.family in ("dense", "moe"))
         if mesh is not None:
             # place the zeroed cache on the serving layout up front — the
             # donated carry then keeps it there with zero relayouts

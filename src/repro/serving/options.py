@@ -1,0 +1,86 @@
+"""ServeOptions — the consolidated configuration surface of ``Engine.serve``.
+
+``Engine.serve`` grew ~20 keyword arguments across PRs 3-8 (paging, prefix
+sharing, speculation, kernels, sharding, SLA scheduling). They are one
+coherent serving configuration, so they live in one frozen-ish dataclass with
+cross-field validation in ``__post_init__`` — the constraints that used to be
+scattered through ``serve()``'s body (``prefix_share`` requires ``paged``,
+``preemption`` requires ``paged``, ...) fail at construction time, before a
+model or trace is anywhere in sight:
+
+    from repro.serving import ServeOptions
+    rep = engine.serve(reqs, options=ServeOptions(paged=True,
+                                                  prefix_share=True,
+                                                  kernel="pallas"))
+
+Legacy ``engine.serve(reqs, paged=True, ...)`` keyword calls still work —
+``serve`` maps them onto a ``ServeOptions`` and emits a single
+``DeprecationWarning`` per process. Derive variants with
+``dataclasses.replace(opts, speculative=True)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+#: serve policies the scheduler understands (see scheduler.SlotScheduler)
+POLICIES = ("continuous", "gang")
+
+
+@dataclasses.dataclass
+class ServeOptions:
+    """Everything ``Engine.serve`` accepts besides the request trace.
+
+    Field semantics are documented on :meth:`repro.serving.engine.Engine.serve`
+    (each field keeps the exact name and default of the keyword it replaced).
+    """
+
+    # -- batching geometry --
+    slots: int = 4
+    cache_len: Optional[int] = None
+    policy: str = "continuous"
+    report_cost: bool = False
+    # -- paged pool / prefix sharing --
+    paged: bool = False
+    block_size: int = 16
+    num_blocks: Optional[int] = None
+    prefix_share: bool = False
+    # -- speculative decoding --
+    speculative: bool = False
+    draft_k: int = 4
+    draft: str = "ngram"
+    max_ngram: int = 3
+    draft_model: Any = None
+    draft_params: Any = None
+    # -- execution backend --
+    kernel: str = "jnp"
+    mesh: Any = None
+    shards: Optional[int] = None
+    # -- SLA scheduling --
+    prefill_chunk: Optional[int] = None
+    preemption: bool = False
+    aging: float = 16.0
+    hol_grace: float = 32.0
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, "
+                             f"got {self.policy!r}")
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {self.block_size}")
+        if self.prefix_share and not self.paged:
+            raise ValueError("prefix_share=True requires paged=True")
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if self.preemption and not self.paged:
+            raise ValueError("preemption=True requires paged=True (swap-out "
+                             "releases pool blocks through the allocator)")
+        if self.kernel != "jnp" and not self.paged:
+            raise ValueError("kernel='pallas' requires paged=True (the "
+                             "fused kernel walks the block table)")
+        if self.shards is not None and self.mesh is not None:
+            raise ValueError("pass either shards=N or mesh=..., not both")

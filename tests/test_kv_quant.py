@@ -1,0 +1,394 @@
+"""First-class int8 KV blocks: bit-exact parity + pool-invariant suite (PR 9).
+
+PR 4 excluded ``kv_quant`` configs from prefix sharing and PR 8 left them on
+the staged whole-prefill path. Lifting those exclusions rests on one model
+contract — fake-quant prefill: the prompt attends the DEQUANTIZED codes it
+caches (``transformer.attn_prefill``), and scales are position-local (a
+function of that position's amax only), so any re-derivation of a position's
+codes+scales reproduces its stored bytes. Everything here checks consequences
+of that contract:
+
+  * serving with ``kv_quant=True`` stays bit-identical to the per-request
+    eager reference across paged / prefix-shared / chunked / speculative /
+    preempted / Pallas-kernel execution,
+  * a chunked int8 prefill commits byte-identical cache contents (codes AND
+    scales) to a whole prefill,
+  * CoW block copies and swap-out/resume round-trips preserve the scale
+    metadata byte-exactly,
+  * ``BlockAllocator`` bookkeeping is payload-dtype-invariant: fp and int8
+    pools driven by the same trace end with the same ``state_signature``
+    (hypothesis-randomized traces),
+  * the ``ServeOptions`` surface validates cross-field constraints and the
+    legacy kwarg spelling still works (with one deprecation note).
+"""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.core.precision import PrecisionConfig
+from repro.core.softmax_variants import SoftmaxSpec
+from repro.models import build_model
+from repro.models import kv_cache
+from repro.serving import ServeOptions
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Request
+
+_CACHE = {}
+
+
+def _setup(arch="olmo-1b", quant=True, scheme="absmax", softmax=None,
+           **engine_kw):
+    key = (arch, quant, scheme, softmax, tuple(sorted(engine_kw.items())))
+    if key not in _CACHE:
+        cfg = (smoke_config(arch) if softmax is None
+               else smoke_config(arch, softmax=softmax))
+        if quant:
+            cfg = dataclasses.replace(cfg, kv_quant=True,
+                                      kv_quant_scheme=scheme)
+        m = build_model(cfg)
+        params, _ = m.init_split(jax.random.PRNGKey(0))
+        _CACHE[key] = (cfg, m, Engine(m, params, **engine_kw))
+    return _CACHE[key]
+
+
+def _trace(vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    shapes = [(4, 5, 0.0), (9, 3, 0.0), (12, 4, 1.0), (5, 4, 3.0)]
+    return [Request(rid=i, prompt=rng.integers(0, vocab, (p,), dtype=np.int32),
+                    max_new=mn, arrival=a, seed=100 + i)
+            for i, (p, mn, a) in enumerate(shapes)]
+
+
+def _shared_trace(vocab, seed=1, n=4, pre_len=8, tail=4, max_new=4):
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, vocab, (pre_len,), dtype=np.int32)
+    arrivals = [0.0] + [6.0 + i for i in range(n - 1)]
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [pre, rng.integers(0, vocab, (tail,),
+                                           dtype=np.int32)]),
+                    max_new=max_new, arrival=arrivals[i], seed=200 + i)
+            for i in range(n)]
+
+
+def _assert_eager_parity(eng, rep, reqs, ctx=()):
+    for r, req in zip(rep.results, reqs):
+        solo = eng.generate(np.asarray(req.prompt)[None],
+                            key=jax.random.PRNGKey(req.seed), mode="eager",
+                            cache_len=rep.cache_len, max_new=req.max_new)
+        assert np.array_equal(r.tokens, solo.tokens[0]), (ctx, r.rid)
+
+
+def _assert_same_tokens(rep_a, rep_b, ctx=()):
+    for a, b in zip(rep_a.results, rep_b.results):
+        assert np.array_equal(a.tokens, b.tokens), (ctx, a.rid)
+        assert a.done == b.done
+
+
+# --------------------------------------------------- serve-level bit parity
+
+
+MODES = {
+    "paged": dict(),
+    "shared": dict(prefix_share=True),
+    "chunked": dict(prefill_chunk=3),
+    "shared_chunked": dict(prefix_share=True, prefill_chunk=3),
+    "speculative": dict(speculative=True),
+}
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_quant_serve_modes_eager_parity(mode):
+    """Every int8 serve mode the lifted exclusions enable emits exactly the
+    per-request eager stream (the same bar the fp paths are held to)."""
+    cfg, m, eng = _setup(max_new=6)
+    reqs = _shared_trace(cfg.vocab)
+    opt = ServeOptions(slots=2, cache_len=16, paged=True, block_size=4,
+                       **MODES[mode])
+    rep = eng.serve(reqs, options=opt)
+    _assert_eager_parity(eng, rep, reqs, (mode,))
+    assert rep.leaked_blocks == 0
+    if mode == "shared":
+        assert rep.shared_prefill_tokens > 0
+    if "chunked" in mode:
+        # int8 chunks truly incrementally now: per-step prompt work is
+        # capped by the chunk, not by the whole prompt (staged accrual)
+        assert rep.max_prefill_per_step <= 3
+
+
+def test_quant_shared_equals_private_bitwise():
+    """The SAME trace served with and without sharing emits identical
+    tokens — shared int8 blocks replay byte-for-byte."""
+    cfg, m, eng = _setup(max_new=6)
+    reqs = _shared_trace(cfg.vocab, seed=3)
+    base = ServeOptions(slots=2, cache_len=16, paged=True, block_size=4)
+    priv = eng.serve(reqs, options=base)
+    shared = eng.serve(reqs, options=dataclasses.replace(
+        base, prefix_share=True))
+    _assert_same_tokens(priv, shared, ("share",))
+    assert shared.shared_prefill_tokens > 0
+    assert shared.prefill_tokens < priv.prefill_tokens
+
+
+def test_quant_pallas_kernel_parity():
+    """kernel="pallas" on an int8 pool (per-page fused dequant) matches the
+    jnp gather path and the eager reference bit for bit."""
+    spec = SoftmaxSpec("int", PrecisionConfig(M=6, N=16))
+    cfg, m, eng = _setup(softmax=spec, max_new=5)
+    reqs = _shared_trace(cfg.vocab, seed=9)
+    base = ServeOptions(slots=2, cache_len=16, paged=True, block_size=4,
+                        prefix_share=True)
+    rep_jnp = eng.serve(reqs, options=base)
+    rep_pal = eng.serve(reqs, options=dataclasses.replace(
+        base, kernel="pallas"))
+    _assert_same_tokens(rep_jnp, rep_pal, ("pallas",))
+    _assert_eager_parity(eng, rep_pal, reqs, ("pallas",))
+
+
+def test_quant_preempt_resume_parity():
+    """Swap-out/resume round-trips int8 private blocks (codes + scales)
+    through host memory byte-exactly: the resumed stream equals solo eager."""
+    cfg, m, eng = _setup(max_new=12)
+    rng = np.random.default_rng(4)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, (12,), dtype=np.int32),
+                    max_new=12, arrival=0.0, seed=300 + i, priority=1)
+            for i in range(2)]
+    reqs.append(Request(rid=2,
+                        prompt=rng.integers(0, cfg.vocab, (12,),
+                                            dtype=np.int32),
+                        max_new=12, arrival=4.0, seed=302, priority=0))
+    rep = eng.serve(reqs, options=ServeOptions(
+        slots=3, paged=True, block_size=4, num_blocks=16, preemption=True))
+    assert rep.preemptions >= 1
+    assert rep.resumes == rep.preemptions
+    assert rep.leaked_blocks == 0
+    _assert_eager_parity(eng, rep, reqs, ("preempt",))
+
+
+def test_quant_exaq_scheme_parity_and_pow2_scales():
+    """kv_quant_scheme="exaq": serving stays eager-bit-identical and every
+    committed scale is a power of two (dequant = exponent add)."""
+    cfg, m, eng = _setup(scheme="exaq", max_new=5)
+    reqs = _shared_trace(cfg.vocab, seed=7)
+    rep = eng.serve(reqs, options=ServeOptions(
+        slots=2, cache_len=16, paged=True, block_size=4, prefix_share=True,
+        prefill_chunk=3))
+    _assert_eager_parity(eng, rep, reqs, ("exaq",))
+    params, _ = m.init_split(jax.random.PRNGKey(0))
+    x = np.asarray(reqs[0].prompt)[None]
+    _, cache = m.prefill(params, {"tokens": jnp.asarray(x)}, cache_len=16)
+    P = x.shape[1]
+    leaves = {".".join(str(getattr(p, "key", p)) for p in path): leaf
+              for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]}
+    scales = [np.asarray(leaf[:, :, :P], np.float64)
+              for name, leaf in leaves.items() if name.endswith("_scale")]
+    assert scales
+    for s in scales:
+        exps = np.log2(s)
+        np.testing.assert_array_equal(exps, np.round(exps))
+
+
+# ------------------------------------------------- model-level byte identity
+
+
+def test_quant_chunked_cache_bytes_match_whole_prefill():
+    """Committing an int8 prompt in prefill_tail chunks writes the SAME
+    codes AND scales as one whole prefill — the cache-bytes identity that
+    makes incremental chunking sound for the quantized family (position-
+    local scales: requantizing a position reproduces its bytes)."""
+    cfg, m, _ = _setup(max_new=4)
+    params, _ = m.init_split(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    P, C = 11, 16
+    x = rng.integers(0, cfg.vocab, (1, P), dtype=np.int32)
+
+    logits_w, cache_w = m.prefill(params, {"tokens": jnp.asarray(x)},
+                                  cache_len=C)
+    committed = None
+    logits_c = None
+    c0 = 0
+    for ck in (3, 5, 2, 1):
+        c1 = min(c0 + ck, P)
+        if c0 == 0:
+            logits_c, committed = m.prefill(
+                params, {"tokens": jnp.asarray(x[:, :c1])}, cache_len=C)
+        else:
+            prefix = kv_cache.slot_prefix_view(committed, 0, s=c0)
+            logits_c, piece = m.prefill_tail(
+                params, {"tokens": jnp.asarray(x[:, c0:c1])}, prefix,
+                prefix_len=c0)
+            committed = kv_cache.slot_scatter(committed, piece, 0, c0,
+                                              t0=0, t1=c1 - c0)
+        c0 = c1
+    np.testing.assert_array_equal(np.asarray(logits_c[:, -1]),
+                                  np.asarray(logits_w[:, -1]))
+    for lw, lc in zip(jax.tree.leaves(cache_w), jax.tree.leaves(committed)):
+        np.testing.assert_array_equal(np.asarray(lw[:, :, :P]),
+                                      np.asarray(lc[:, :, :P]))
+
+
+def _quant_pool(cfg, rng, num_blocks=6, block_size=4):
+    """A paged int8 pool with random codes and scales in every block."""
+    pool = kv_cache.paged_cache_zeros(cfg, 1, 16, block_size, num_blocks)
+
+    def fill(leaf):
+        if leaf.dtype == jnp.int8:
+            return jnp.asarray(rng.integers(-127, 128, leaf.shape), jnp.int8)
+        if leaf.dtype == jnp.float32 and leaf.ndim == 4:   # scale leaves
+            return jnp.asarray(
+                np.exp2(rng.integers(-8, 2, leaf.shape)), jnp.float32)
+        return leaf
+    return jax.tree.map(fill, pool)
+
+
+def test_quant_cow_copy_preserves_scale_metadata():
+    """paged_copy_block moves codes and BOTH scale planes together — a CoW'd
+    int8 block is byte-identical to its source in all four leaves."""
+    cfg, m, _ = _setup(max_new=4)
+    rng = np.random.default_rng(11)
+    pool = _quant_pool(cfg, rng)
+    out = kv_cache.paged_copy_block(pool, src=2, dst=5)
+    names = {".".join(str(getattr(p, "key", p)) for p in path): leaf
+             for path, leaf in jax.tree_util.tree_flatten_with_path(out)[0]}
+    checked = 0
+    for name, leaf in names.items():
+        if name.endswith("table"):
+            continue
+        np.testing.assert_array_equal(np.asarray(leaf[:, 5]),
+                                      np.asarray(leaf[:, 2]), err_msg=name)
+        checked += 1
+    assert checked >= 4    # k, v, k_scale, v_scale
+
+
+def test_quant_swap_roundtrip_byte_exact():
+    """swap_read -> host numpy -> swap_write round-trips int8 codes and f32
+    scales byte-exactly, including into DIFFERENT destination block ids."""
+    cfg, m, _ = _setup(max_new=4)
+    rng = np.random.default_rng(13)
+    pool = _quant_pool(cfg, rng)
+    ids = jnp.asarray([1, 4], jnp.int32)
+    host = jax.tree.map(np.asarray, kv_cache.swap_read(pool, 0, ids))
+    # restore into DIFFERENT block ids; table row maps them then sentinels
+    dst = jnp.asarray([5, 0], jnp.int32)
+    row = jnp.asarray([5, 0, 6, 6], jnp.int32)    # sentinel == num_blocks
+    restored = kv_cache.swap_write(pool, host, 0, dst, row)
+    back = jax.tree.map(np.asarray, kv_cache.swap_read(restored, 0, dst))
+    for a, b in zip(jax.tree.leaves(host), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------- allocator dtype invariance
+
+
+try:        # hypothesis is a soft dep (requirements-dev.txt); only the
+    from hypothesis import given, settings, strategies as st  # noqa: E402
+    HAVE_HYPOTHESIS = True
+except ImportError:   # property test skips, the rest of this file still runs
+    HAVE_HYPOTHESIS = False
+
+
+def _check_signature_invariant(reqs):
+    """fp and int8 pools driven by the same trace finish with identical
+    allocator state signatures, eviction/CoW counters included."""
+    _, _, eng_fp = _setup(quant=False, max_new=4)
+    _, _, eng_q = _setup(quant=True, max_new=4)
+    opt = ServeOptions(slots=2, cache_len=16, paged=True, block_size=4,
+                       prefix_share=True)
+    eng_fp.serve(reqs, options=opt)
+    sig_fp = eng_fp._last_alloc.state_signature()
+    eng_q.serve(reqs, options=opt)
+    sig_q = eng_q._last_alloc.state_signature()
+    assert sig_fp == sig_q
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def quant_traces(draw):
+        """Small shared-prefix traces over a FIXED set of prompt lengths
+        (each distinct length costs a prefill trace; the jit cache is
+        shared across examples)."""
+        rng = np.random.default_rng(draw(st.integers(0, 2 ** 16)))
+        pre_len = draw(st.sampled_from([0, 4, 8]))
+        pre = rng.integers(0, 512, (pre_len,), dtype=np.int32)
+        n = draw(st.integers(1, 4))
+        reqs = []
+        for rid in range(n):
+            tail = rng.integers(0, 512, (4,), dtype=np.int32)
+            reqs.append(Request(
+                rid=rid, prompt=np.concatenate([pre, tail]),
+                max_new=draw(st.sampled_from([2, 4])),
+                arrival=float(draw(st.sampled_from([0.0, 6.0]))),
+                seed=500 + rid))
+        return reqs
+
+    @given(reqs=quant_traces())
+    @settings(max_examples=6, deadline=None)
+    def test_allocator_state_signature_dtype_invariant(reqs):
+        """BlockAllocator bookkeeping never looks inside a block: fp and
+        int8 pools driven by the same trace (same prompts, arrivals,
+        budgets — block CONTENT differs) stay signature-identical
+        (hypothesis-randomized traces)."""
+        _check_signature_invariant(reqs)
+else:
+    def test_allocator_state_signature_dtype_invariant():
+        """Deterministic fallback when hypothesis is absent: one fixed
+        shared-prefix trace through the same fp-vs-int8 signature check."""
+        cfg, _, _ = _setup(max_new=4)
+        _check_signature_invariant(_shared_trace(cfg.vocab, seed=21))
+
+
+# ------------------------------------------------- ServeOptions surface
+
+
+def test_serve_options_validation():
+    with pytest.raises(ValueError, match="prefix_share"):
+        ServeOptions(prefix_share=True)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeOptions(prefill_chunk=0)
+    with pytest.raises(ValueError, match="preemption"):
+        ServeOptions(preemption=True)
+    with pytest.raises(ValueError, match="pallas"):
+        ServeOptions(kernel="pallas")
+    with pytest.raises(ValueError, match="slots"):
+        ServeOptions(slots=0)
+    with pytest.raises(ValueError, match="policy"):
+        ServeOptions(policy="fifo")
+    with pytest.raises(ValueError, match="shards"):
+        ServeOptions(shards=2, mesh=object())
+    # valid combos construct fine
+    ServeOptions(paged=True, prefix_share=True, preemption=True,
+                 kernel="pallas", prefill_chunk=3)
+
+
+def test_serve_legacy_kwargs_map_onto_options():
+    """The old kwarg spelling still serves (identically), raises the same
+    validation errors, warns exactly once, and rejects mixing with
+    options=."""
+    import repro.serving.engine as engine_mod
+    cfg, m, eng = _setup(max_new=4)
+    reqs = _trace(cfg.vocab)
+    engine_mod._legacy_serve_warned = False
+    with pytest.warns(DeprecationWarning, match="ServeOptions"):
+        rep_legacy = eng.serve(reqs, slots=2, cache_len=16, paged=True,
+                               block_size=4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        rep_again = eng.serve(reqs, slots=2, cache_len=16, paged=True,
+                              block_size=4)   # warned once per process only
+    rep_opt = eng.serve(reqs, options=ServeOptions(
+        slots=2, cache_len=16, paged=True, block_size=4))
+    _assert_same_tokens(rep_legacy, rep_opt)
+    _assert_same_tokens(rep_again, rep_opt)
+    with pytest.raises(ValueError, match="preemption"):
+        eng.serve(reqs, slots=2, preemption=True)
+    with pytest.raises(TypeError):
+        eng.serve(reqs, bogus_kwarg=1)
+    with pytest.raises(TypeError, match="not both"):
+        eng.serve(reqs, options=ServeOptions(), slots=2)
