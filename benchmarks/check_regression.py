@@ -108,6 +108,19 @@ def _kind(name: str):
     everything else unlisted defaults to deterministic."""
     if name in METRICS:
         return METRICS[name]
+    if name.startswith("frontier."):
+        # BENCH_frontier.json rows: parity is the deterministic contract;
+        # quality errors gate lower-is-better (a variant silently losing
+        # fidelity is the regression); the cost-model columns (cycles /
+        # energy / EDP) are retunable schedule constants, so they report
+        # noise-aware; top1 on a tiny untrained probe is jax-version
+        # sensitive, so informational only
+        if name.endswith(".parity"):
+            return ("det", None)
+        if name.endswith(".logit_rel_err") or name.endswith(".tv") \
+                or name.endswith(".kl"):
+            return ("det_low", None)
+        return ("abs", None)
     if name.endswith("calls_per_s") or name.endswith("tokens_per_s"):
         return ("abs", None)
     return ("det", None)
@@ -133,9 +146,33 @@ def _kernel_metrics(report: dict) -> dict:
     return out
 
 
+def _frontier_metrics(report: dict) -> dict:
+    """BENCH_frontier.json rows (benchmarks/frontier.py): the serving panel
+    per family x variant, plus the operator quality/cost panel. Gate classes
+    route by name in ``_kind``."""
+    out = {}
+    for arch, kinds in report.get("frontier", {}).items():
+        for kind, r in kinds.items():
+            base = f"frontier.{arch}.{kind}"
+            out[f"{base}.parity"] = float(bool(r.get("parity")))
+            for key in ("cycles", "energy_j", "edp", "logit_rel_err",
+                        "logit_top1_match"):
+                if key in r:
+                    out[f"{base}.{key}"] = float(r[key])
+    for kind, r in report.get("operator", {}).items():
+        base = f"frontier.operator.{kind}"
+        for key in ("tv", "kl", "cycles_per_vec", "edp_per_vec"):
+            if key in r:
+                out[f"{base}.{key}"] = float(r[key])
+    return out
+
+
 def _metrics(report: dict) -> dict:
     """Flatten the gated metrics (higher is better for every one of them).
-    Detects BENCH_kernels.json reports by shape and routes accordingly."""
+    Detects BENCH_kernels.json / BENCH_frontier.json reports by shape and
+    routes accordingly."""
+    if report.get("bench") == "frontier" or "frontier" in report:
+        return _frontier_metrics(report)
     if "paged_decode" in report or ("rows" in report
                                     and "results" not in report):
         return _kernel_metrics(report)

@@ -1,0 +1,229 @@
+"""Quality-vs-EDP frontier of the softmax-variant zoo, per model family.
+
+The paper evaluates ONE operator point (the Alg.-1 integer softmax at its
+BEST precision). The zoo (``consmax`` / ``sole`` / ``mive`` — see
+``backends/variant_backends.py``) spans the frontier around it; this
+benchmark records, for each variant x family:
+
+  * **operator panel** — distribution quality (total variation + KL vs the
+    fp softmax over attention-calibrated scores) against the variant's
+    per-vector Table-II cost (cycles, energy, EDP). ConSmax is calibrated
+    here the way a trained deployment would be (beta = mean row max,
+    gamma = 1 / mean row sum of the shifted exponentials) — its learnable
+    params are THE mechanism, so the uncalibrated default would misreport
+    the operator.
+  * **serving panel** — ``Engine.serve(..., softmax_kind=<variant>)`` on a
+    small trace per family (dense, encoder-decoder with per-request frames,
+    M-RoPE VLM), gating bit-parity against the variant's own per-request
+    eager reference, and recording the metered serving cost (cycles /
+    energy / EDP of the whole trace) plus model-level logit divergence vs
+    the fp reference on a probe prefill. ConSmax serves at its DEFAULT
+    operating point (the engine's params carry no trained ``smx`` leaves):
+    its quality row is honestly poor and its parity row is the gate.
+
+``BENCH_frontier.json`` at the repo root is the committed baseline;
+``check_regression.py`` gates parity/quality rows deterministically and the
+cycles/energy/EDP rows noise-aware (the cost model may be retuned).
+
+    PYTHONPATH=src:. python benchmarks/frontier.py --smoke
+    PYTHONPATH=src:. python benchmarks/frontier.py --out BENCH_frontier.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import smoke_config
+from repro.core import fp_softmax, int_softmax
+from repro.core.precision import BEST
+from repro.core.softmax_variants import (
+    ConSmaxCfg, SoftmaxSpec, consmax, mive_softmax, sole_softmax,
+)
+from repro.ap import cost_model as cm
+from repro.models.model import build_model
+from repro.serving import ServeOptions
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Request
+
+#: family sweep: one representative smoke config per serving-relevant family
+FAMILIES = ("olmo-1b", "whisper-base", "qwen2-vl-7b")
+#: the zoo + the paper's own point (fp is the reference, not a row)
+KINDS = ("int", "consmax", "sole", "mive")
+
+OP_SEQ = 64          # operator panel row length (matches the golden pins)
+OP_ROWS = 128
+
+
+def operator_panel() -> dict:
+    """Distribution quality vs per-vector Table-II cost, per variant."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0.0, 2.0, (OP_ROWS, OP_SEQ)), jnp.float32)
+    f = np.asarray(fp_softmax(x), np.float64)
+
+    # calibrated ConSmax: the stats a trained deployment's beta/gamma learn
+    beta = float(jnp.mean(jnp.max(x, axis=-1)))
+    shifted = jnp.exp(jnp.clip(x - beta, BEST.T_C, 0.0))
+    gamma = float(1.0 / jnp.mean(jnp.sum(shifted, axis=-1)))
+    ccfg = ConSmaxCfg(beta=beta, gamma=gamma, precision=BEST)
+
+    outs = {
+        "int": int_softmax(x, BEST),
+        "consmax": consmax(x, cfg=ccfg),
+        "sole": sole_softmax(x, cfg=BEST),
+        "mive": mive_softmax(x, cfg=BEST),
+    }
+    panel = {}
+    for kind, y in outs.items():
+        p = np.asarray(y, np.float64)
+        tv = float(np.mean(0.5 * np.abs(f - p).sum(-1)))
+        kl = float(np.mean(np.sum(
+            f * (np.log(f + 1e-12) - np.log(np.abs(p) + 1e-12)), -1)))
+        if kind == "int":
+            cycles, lat, energy, _ = cm.softmax_vector_cost(BEST, OP_SEQ)
+        else:
+            cycles, lat, energy, _ = cm.variant_vector_cost(kind, BEST,
+                                                            OP_SEQ)
+        panel[kind] = {
+            "tv": tv, "kl": kl,
+            "cycles_per_vec": int(cycles),
+            "energy_per_vec_j": float(energy),
+            "edp_per_vec": float(energy * lat),
+        }
+        print(f"operator {kind:8s} TV={tv:.5f} cycles/vec={cycles} "
+              f"EDP/vec={energy * lat:.3e}", file=sys.stderr)
+    return panel
+
+
+def _family_requests(cfg, rng, max_new: int):
+    """A tiny mixed-length trace + the per-request eager extra inputs."""
+    prompts = [rng.integers(0, cfg.vocab, size=(n,)).astype(np.int32)
+               for n in (5, 3, 7)]
+    extras = [None] * len(prompts)
+    reqs = []
+    if cfg.family == "encdec":
+        enc_len = 16
+        frames = [rng.normal(size=(enc_len, cfg.d_model)).astype(np.float32)
+                  for _ in prompts]
+        extras = [{"frames": fr[None]} for fr in frames]
+        reqs = [Request(rid=i, prompt=p, max_new=max_new, seed=i,
+                        frames=frames[i])
+                for i, p in enumerate(prompts)]
+    else:
+        reqs = [Request(rid=i, prompt=p, max_new=max_new, seed=i)
+                for i, p in enumerate(prompts)]
+        if cfg.rope_type == "mrope":
+            extras = [{"positions": jnp.broadcast_to(
+                jnp.arange(p.shape[0], dtype=jnp.int32)[None, None, :],
+                (3, 1, p.shape[0]))} for p in prompts]
+    return prompts, reqs, extras
+
+
+def _probe_logits(model, params, cfg, rng):
+    """Prefill logits on a fixed probe batch (the quality probe input)."""
+    P = 12
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(2, P)).astype(np.int32))}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(2, 16, cfg.d_model)).astype(np.float32))
+    elif cfg.rope_type == "mrope":
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(P, dtype=jnp.int32)[None, None, :], (3, 2, P))
+    logits, _ = model.prefill(params, batch, cache_len=P + 2)
+    return np.asarray(logits, np.float64)
+
+
+def serving_panel(arch: str, max_new: int) -> dict:
+    """Per-variant serve parity + metered cost + logit divergence vs fp."""
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    eng = Engine(model, params, max_new=max_new, sampler="greedy",
+                 eos_id=None)
+    rng = np.random.default_rng(7)
+    prompts, reqs, extras = _family_requests(cfg, rng, max_new)
+
+    probe_rng = np.random.default_rng(11)
+    ref_logits = _probe_logits(model, params, cfg,
+                               np.random.default_rng(11))
+    ref_scale = float(np.mean(np.abs(ref_logits)))
+
+    rows = {}
+    for kind in KINDS:
+        rep = eng.serve(reqs, options=ServeOptions(
+            slots=2, report_cost=True, softmax_kind=kind))
+        vmodel = build_model(cfg.with_softmax(SoftmaxSpec(kind, BEST)))
+        veng = Engine(vmodel, params, max_new=max_new, sampler="greedy",
+                      eos_id=None)
+        parity = True
+        for r in rep.results:
+            i = r.rid
+            ref = veng.generate(
+                prompts[i][None], key=jax.random.PRNGKey(i), mode="eager",
+                max_new=max_new, cache_len=rep.cache_len,
+                extra_inputs=extras[i])
+            parity &= bool(np.array_equal(r.tokens, ref.tokens[0]))
+        v_logits = _probe_logits(vmodel, params, cfg,
+                                 np.random.default_rng(11))
+        rel_err = float(np.mean(np.abs(v_logits - ref_logits))
+                        / max(ref_scale, 1e-12))
+        top1 = float(np.mean(np.argmax(v_logits, -1)
+                             == np.argmax(ref_logits, -1)))
+        rows[kind] = {
+            "parity": parity,
+            "cycles": float(rep.cost.cycles),
+            "energy_j": float(rep.cost.energy_j),
+            "edp": float(rep.cost.edp),
+            "logit_rel_err": rel_err,
+            "logit_top1_match": top1,
+        }
+        print(f"{arch:14s} {kind:8s} parity={parity} "
+              f"cycles={rep.cost.cycles:.0f} edp={rep.cost.edp:.3e} "
+              f"rel_err={rel_err:.4f} top1={top1:.3f}", file=sys.stderr)
+        if not parity:
+            raise SystemExit(
+                f"frontier parity gate failed: serve(softmax_kind={kind!r}) "
+                f"diverged from the eager {kind} reference on {arch}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI budget: short decode budgets, same sweep")
+    ap.add_argument("--max-new", type=int, default=None,
+                    help="decode budget per request (default: 4 smoke, 8)")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report (e.g. BENCH_frontier.json)")
+    args = ap.parse_args()
+    max_new = args.max_new if args.max_new else (4 if args.smoke else 8)
+
+    report = {
+        "bench": "frontier",
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "config": {"families": list(FAMILIES), "kinds": list(KINDS),
+                   "max_new": max_new, "op_seq": OP_SEQ,
+                   "op_rows": OP_ROWS},
+        "operator": operator_panel(),
+        "frontier": {arch: serving_panel(arch, max_new)
+                     for arch in FAMILIES},
+    }
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        json.dump(report, sys.stdout, indent=1, sort_keys=True)
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -87,7 +87,7 @@ def run() -> list:
     return rows
 
 
-def kv_quant_rows() -> list:
+def kv_quant_rows(granularity: str = "position") -> list:
     """EXAQ exponent-bits sweep for the int8 KV pool (arxiv 2410.03185):
     per-position dequantization error of absmax scales vs power-of-two EXAQ
     scales, unclamped and with the exponent clamped to a signed ``exp_bits``
@@ -96,13 +96,24 @@ def kv_quant_rows() -> list:
     Expected shape of the table: pow2 rounding costs < 2x absmax (the scale
     is at most one octave too coarse), a 5-bit exponent field already covers
     the whole range (clamped == unclamped bit for bit), and 3 bits visibly
-    clips the quiet positions."""
+    clips the quiet positions.
+
+    ``granularity`` picks the scale axis: ``"position"`` (one scale per
+    position vector — what the serving pool stores, and the layout sharing/
+    chunking need: a position's bytes never depend on its neighbours) or
+    ``"head"`` (one scale per channel shared across ALL positions — fewer
+    scale words, but the shared scale must span the whole position dynamic
+    range, so quiet positions quantize against a loud neighbour's scale)."""
     from repro.core.quantization import exaq_scale, exaq_scale_clamped
     rng = np.random.default_rng(7)
     x = rng.standard_normal((256, 64)).astype(np.float32)
     x *= np.exp2(rng.uniform(-6.0, 6.0, (256, 1))).astype(np.float32)
     xj = jnp.asarray(x)
-    amax = jnp.max(jnp.abs(xj), axis=-1, keepdims=True)
+    if granularity not in ("position", "head"):
+        raise ValueError(f"granularity must be 'position' or 'head', "
+                         f"got {granularity!r}")
+    axis = -1 if granularity == "position" else 0
+    amax = jnp.max(jnp.abs(xj), axis=axis, keepdims=True)
 
     def rel_err(scale):
         codes = jnp.clip(jnp.round(xj / scale), -127, 127)
@@ -125,6 +136,15 @@ def kv_quant_rows() -> list:
                  str(bool(abs(errs["exaq_eb5"] - errs["exaq"]) < 1e-9))))
     rows.append(("table4.kv_quant.eb3_clips_quiet_positions", 0.0,
                  f"{errs['exaq_eb3'] / max(errs['exaq'], 1e-12):.1f}x_worse"))
+    if granularity == "position":
+        # one committed granularity row: per-head absmax error relative to
+        # per-position — the shared scale drowns quiet positions, which is
+        # why the serving pool pays a scale word per position
+        head_err = kv_quant_rows(granularity="head")[0]
+        ratio = (float(head_err[2].split("=")[1])
+                 / max(errs["absmax"], 1e-12))
+        rows.append(("table4.kv_quant.per_head_vs_per_position", 0.0,
+                     f"{ratio:.1f}x_worse"))
     return rows
 
 

@@ -142,6 +142,117 @@ def softmax_vector_cost(cfg: PrecisionConfig, seq_len: int,
     return cycles, latency, energy, design
 
 
+# ------------------------------------------------- softmax-variant schedules
+#
+# Table-II compositions for the variant zoo (core.softmax_variants), built
+# from the same elementary-op formulas as the Alg.-1 schedule above so every
+# variant's CostReport is comparable cycle-for-cycle. Each breakdown is ONE
+# softmax vector of ``seq_len`` words, word-parallel on seq_len/2 rows.
+
+LOG2E_FIXED = 0b101110   # log2(e) ~= 1.0111b at 5 fractional bits (popcount 4)
+
+
+def consmax_row_bits(cfg: PrecisionConfig) -> int:
+    """ConSmax column budget: no sum accumulator (nothing is reduced)."""
+    w = cfg.table1_widths()
+    return w["v"] + w["v"] + w["poly"] + w["result"] + 2
+
+
+def consmax_cycle_breakdown(cfg: PrecisionConfig) -> Dict[str, int]:
+    """ConSmax (2402.10930): beta-subtract + Alg.-1 integer exp + gamma
+    multiply. No reduction and no division — the per-vector cost is
+    independent of ``seq_len``, which is the variant's whole pitch."""
+    M = cfg.M
+    w = cfg.table1_widths()
+    return {
+        "s1_beta_sub": cycles_add(M),                               # x - beta
+        "s2_barrett_mul": cycles_mult(M),                           # v * mu
+        "s3_shift_2M": 1,                                           # >> 2M
+        "s4_mul_vln2": cycles_mult(w["v_ln2"]),                     # q * v_ln2
+        "s5_sub_corr": cycles_add(M) + 2,                           # v_corr
+        "s6_add_vb": cycles_add(M),                                 # + v_b
+        "s7_square": cycles_mult(M),                                # (.)^2
+        "s8_add_vc": cycles_add(2 * M),                             # + v_c
+        "s9_varshift_q": cycles_varshift(w["v_approx"], cfg.q_max), # << (F - q)
+        "s10_gamma_mul": cycles_mult(M),                            # * gamma
+        "s11_writeback": 2 * M,
+    }
+
+
+def sole_row_bits(cfg: PrecisionConfig) -> int:
+    """SOLE column budget: the exp column is the v_approx fixed point, the
+    poly working column of Alg. 1 disappears (no polynomial)."""
+    w = cfg.table1_widths()
+    return w["v"] + w["v"] + w["v_approx"] + w["sum"] + w["result"] + 2
+
+
+def sole_cycle_breakdown(cfg: PrecisionConfig, seq_len: int) -> Dict[str, int]:
+    """SOLE-style two-stage schedule: shift-add base-2 exp on the v_approx
+    grid, reduction, then a log-domain reciprocal (leading-one detect +
+    linear fraction) instead of a divider; applying the per-vector reciprocal
+    is a constant multiply at the M-bit stored width — the same discipline
+    the Alg.-1 schedule (``softmax_cycle_breakdown`` s12) uses."""
+    M = cfg.M
+    w = cfg.table1_widths()
+    w_lp = w["v_approx"]            # 1.(w_vapprox) fixed point
+    return {
+        "s1_max_sub": cycles_add(M),                                # x - max
+        "s2_log2e_mul": cycles_const_mult(M, LOG2E_FIXED),          # t = x*log2e
+        "s3_split": 1,                                              # int/frac re-address
+        "s4_frac_add1": cycles_add(w_lp),                           # 1 + frac
+        "s5_exp_shift": cycles_varshift(w_lp, w_lp),                # << int(t)
+        "s6_round_lp": 1,                                           # grid truncate
+        "s7_reduction": cycles_reduction(w["sum"], seq_len),        # sum
+        "s8_lod": w["sum"] + 2,                                     # leading-one detect
+        "s9_log_frac": cycles_add(w_lp),                            # linear log2 frac
+        "s10_recip_mul": cycles_mult(M),                            # e * recip (const)
+        "s11_writeback": 2 * M,
+    }
+
+
+def mive_row_bits(cfg: PrecisionConfig) -> int:
+    """MIVE column budget: exponent codes live in the v_approx column."""
+    w = cfg.table1_widths()
+    return w["v"] + w["v_approx"] + w["sum"] + w["result"] + 2
+
+
+def mive_cycle_breakdown(cfg: PrecisionConfig, seq_len: int) -> Dict[str, int]:
+    """MIVE-style shift-add schedule: integer exponents (exp = shift of a
+    unit code), reduction, and a single shift-add reciprocal — no multiplier
+    cycles anywhere, the minimal lowering of the zoo."""
+    M = cfg.M
+    w = cfg.table1_widths()
+    w_acc = w["v_approx"]           # exp shift range == the column width
+    return {
+        "s1_max_sub": cycles_add(M),                                # x - max
+        "s2_log2e_mul": cycles_const_mult(M, LOG2E_FIXED),          # t = x*log2e
+        "s3_round": 1,                                              # to integer exp
+        "s4_exp_shift": cycles_varshift(w_acc, w_acc),              # 1 << t
+        "s5_reduction": cycles_reduction(w["sum"], seq_len),        # sum
+        "s6_lod": w["sum"] + 2,                                     # leading-one detect
+        "s7_recip_sub": cycles_add(w_acc),                          # 1.5 - frac/2
+        "s8_apply_shift": cycles_varshift(w_acc, w_acc),            # scalar >> -t
+        "s9_writeback": 2 * M,
+    }
+
+
+_VARIANT_SCHEDULES = {
+    "consmax": (lambda cfg, L: consmax_cycle_breakdown(cfg), consmax_row_bits),
+    "sole": (sole_cycle_breakdown, sole_row_bits),
+    "mive": (mive_cycle_breakdown, mive_row_bits),
+}
+
+
+def variant_vector_cost(kind: str, cfg: PrecisionConfig, seq_len: int):
+    """(cycles, latency_s, energy_j, design) for one variant softmax vector —
+    the variant-zoo counterpart of :func:`softmax_vector_cost`."""
+    breakdown, row_bits = _VARIANT_SCHEDULES[kind]
+    cycles = sum(breakdown(cfg, seq_len).values())
+    design = APDesign(rows=max(seq_len // 2, 1), row_bits=row_bits(cfg))
+    return (cycles, cycles / FREQ_HZ,
+            cycles * design.cells * E_CELL_FJ * 1e-15, design)
+
+
 def attention_softmax_cost(cfg: PrecisionConfig, seq_len: int, batch: int,
                            n_heads: int, n_rows: int = None,
                            incam_division: bool = False):

@@ -80,6 +80,13 @@ class IntBackendBase(SoftmaxBackend):
         mid-initialization (registry bootstrap during an import cycle)."""
         return cm.E_CELL_FJ
 
+    def _vector_cost(self, seq_len: int):
+        """(cycles, latency_s, energy_j, design) for one softmax vector.
+        Variant backends (``variant_backends``) override this hook to swap in
+        their own Table-II schedule while inheriting the vectors/heads
+        accounting below unchanged."""
+        return cm.softmax_vector_cost(self.cfg, seq_len)
+
     def meter(self, shape: Sequence[int], axis: int = -1,
               heads: int = 1) -> Optional[CostReport]:
         shape = tuple(int(d) for d in shape)
@@ -92,7 +99,7 @@ class IntBackendBase(SoftmaxBackend):
         vectors //= max(seq_len, 1)
         if vectors == 0 or seq_len == 0:
             return CostReport(backend=self.name)
-        cycles_v, lat_v, e_v, _ = cm.softmax_vector_cost(self.cfg, seq_len)
+        cycles_v, lat_v, e_v, _ = self._vector_cost(seq_len)
         # One AP per head (Sec. V-B): a head-AP runs its vectors sequentially
         # (word-parallel inside each vector); distinct heads run in parallel.
         per_ap = -(-vectors // max(int(heads), 1))  # ceil

@@ -68,7 +68,7 @@ def _load_builtins(strict: bool) -> bool:
     _LOADING = True
     try:
         from repro.backends import (  # noqa: F401
-            ap_backend, jax_backends, paged_kernel,
+            ap_backend, jax_backends, paged_kernel, variant_backends,
         )
         return True
     except ImportError:

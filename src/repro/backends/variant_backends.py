@@ -1,0 +1,116 @@
+"""Softmax-variant zoo backends: ConSmax, SOLE, MIVE as serving backends.
+
+Each variant pairs its math from ``core.softmax_variants`` with an honest
+Table-II cost schedule from ``ap.cost_model`` (``*_cycle_breakdown`` +
+``*_row_bits``), so ``SlotCostAttributor``/EDP telemetry meters them exactly
+like the Alg.-1 family — same vectors/heads accounting, different per-vector
+schedule. Registered kinds become valid ``SoftmaxSpec``/``ServeOptions
+.softmax_kind`` values with no engine changes.
+
+The zoo spans the frontier the paper leaves unexplored (one operator point):
+
+* ``consmax`` — learnable beta/gamma, NO reduction or division; per-vector
+  cycles independent of seq_len. Cheap and trainable, but an untrained
+  (default beta/gamma) instance is only as good as its calibration.
+* ``sole`` — two-stage low-precision base-2 softmax; keeps the reduction but
+  replaces the divider with a log-domain reciprocal.
+* ``mive`` — minimal shift-add integer-vector lowering; cheapest schedule,
+  coarsest grid (weights are powers of two).
+
+None of these is the Alg.-1 dataflow, so the fused Pallas paged kernel
+(Alg.-1-only by design) rejects them — ``Engine.serve`` validates the
+variant x kernel combination loudly.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.ap import cost_model as cm
+from repro.backends.registry import register_backend
+from repro.core.precision import BEST, PrecisionConfig
+from repro.core.softmax_variants import (
+    CONSMAX_DEFAULT,
+    ConSmaxCfg,
+    consmax,
+    mive_softmax,
+    sole_softmax,
+)
+from repro.backends.jax_backends import IntBackendBase
+
+
+@register_backend("consmax")
+class ConSmaxBackend(IntBackendBase):
+    """ConSmax (arxiv 2402.10930): gamma * exp(x - beta), learnable params.
+
+    ``apply`` accepts an optional ``params`` dict ({"beta", "gamma"} arrays
+    broadcastable to the scores) — the learned per-head values a model
+    initialized with ``softmax.kind == "consmax"`` carries in ``p["smx"]``;
+    without it the cfg's scalar defaults apply. Forward is the integer
+    I-BERT exp (STE backward), so serve == eager bit-exactly.
+    """
+
+    name = "consmax"
+    default_cfg = CONSMAX_DEFAULT
+    learnable = True  # attention passes p["smx"] through apply(params=...)
+
+    def __init__(self, cfg: Optional[ConSmaxCfg] = None):
+        if cfg is None:
+            cfg = CONSMAX_DEFAULT
+        elif isinstance(cfg, PrecisionConfig):
+            # SoftmaxSpec resolves backends with its PrecisionConfig — wrap
+            # it at the default beta/gamma operating point
+            cfg = ConSmaxCfg(precision=cfg)
+        super().__init__(cfg)
+
+    def apply(self, scores, mask=None, axis: int = -1, params=None):
+        beta = None if params is None else params.get("beta")
+        gamma = None if params is None else params.get("gamma")
+        return consmax(scores, cfg=self.cfg, mask=mask, axis=axis,
+                       beta=beta, gamma=gamma)
+
+    def _vector_cost(self, seq_len: int):
+        return cm.variant_vector_cost("consmax", self.cfg.precision, seq_len)
+
+    def design(self, seq_len: int) -> cm.APDesign:
+        return cm.APDesign(rows=max(seq_len // 2, 1),
+                           row_bits=cm.consmax_row_bits(self.cfg.precision))
+
+
+class _PrecisionVariantBase(IntBackendBase):
+    """Shared shell for the PrecisionConfig-keyed variants (sole/mive)."""
+
+    kind: str = "?"
+
+    def __init__(self, cfg: Optional[PrecisionConfig] = None):
+        super().__init__(cfg or BEST)
+
+    def _vector_cost(self, seq_len: int):
+        return cm.variant_vector_cost(self.kind, self.cfg, seq_len)
+
+    def design(self, seq_len: int) -> cm.APDesign:
+        _, _, _, design = cm.variant_vector_cost(self.kind, self.cfg, seq_len)
+        return design
+
+
+@register_backend("sole")
+class SoleBackend(_PrecisionVariantBase):
+    """SOLE-style two-stage low-precision softmax (shift-add exp + log-domain
+    reciprocal); ``cfg.M`` is the low-precision fractional width."""
+
+    name = "sole"
+    kind = "sole"
+
+    def apply(self, scores, mask=None, axis: int = -1):
+        return sole_softmax(scores, cfg=self.cfg, mask=mask, axis=axis)
+
+
+@register_backend("mive")
+class MiveBackend(_PrecisionVariantBase):
+    """MIVE-style minimal shift-add integer-vector softmax lowering."""
+
+    name = "mive"
+    kind = "mive"
+
+    def apply(self, scores, mask=None, axis: int = -1):
+        return mive_softmax(scores, cfg=self.cfg, mask=mask, axis=axis)

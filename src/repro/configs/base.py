@@ -79,7 +79,8 @@ class ModelConfig:
     logits_dtype: str = "float32"
     scores_dtype: str = "float32"  # attention score storage (bf16 = low-mem)
     kv_quant: bool = False         # int8 KV cache (per-position/head scales)
-    kv_quant_scheme: str = "absmax"  # absmax | exaq (EXAQ pow2 scales, 2410.03185)
+    kv_quant_scheme: str = "absmax"  # absmax | exaq (EXAQ pow2 scales,
+                                     # 2410.03185) | exaq_clamped (5-bit exp)
 
     # --- sharding rule overrides (logical axis -> mesh axes), see distributed/sharding.py
     sharding_overrides: Tuple[Tuple[str, Optional[Tuple[str, ...]]], ...] = ()
@@ -92,7 +93,8 @@ class ModelConfig:
         if self.n_kv_heads == 0:
             object.__setattr__(self, "n_kv_heads", self.n_heads)
         assert self.family in ("dense", "moe", "ssm", "hybrid", "encdec"), self.family
-        assert self.kv_quant_scheme in ("absmax", "exaq"), self.kv_quant_scheme
+        assert self.kv_quant_scheme in ("absmax", "exaq", "exaq_clamped"), \
+            self.kv_quant_scheme
         if self.family != "ssm":
             assert self.n_heads % max(self.n_kv_heads, 1) == 0
 

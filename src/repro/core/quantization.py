@@ -89,8 +89,11 @@ def exaq_scale_clamped(amax, exp_bits: int, floor: float = 1e-8):
 
     Models the hardware sweep axis (how many exponent bits the scale word
     carries): exponents saturate at +/-2^(exp_bits-1), so tiny rows lose
-    resolution and huge rows clip. Accuracy-sweep only (precision_sweep.py) —
-    serving uses the unclamped rule, which stays position-local."""
+    resolution and huge rows clip. Swept in precision_sweep.py; serving maps
+    ``kv_quant_scheme="exaq_clamped"`` to the 5-bit point (eb5 matches the
+    unclamped rule on realistic KV magnitudes). The clamp is a function of
+    this position's amax alone, so the scheme stays position-local and keeps
+    the shared/chunked bit-identity contract."""
     e = jnp.ceil(jnp.log2(jnp.maximum(amax.astype(jnp.float32) / 127.0, floor)))
     lo, hi = -(2 ** (exp_bits - 1)), 2 ** (exp_bits - 1) - 1
     return jnp.exp2(jnp.clip(e, lo, hi))

@@ -1,4 +1,5 @@
-"""Softmax dispatcher: the pluggable point where SoftmAP enters the models.
+"""Softmax dispatcher + variant math: the pluggable point where SoftmAP (and
+its hardware-friendly alternatives) enter the models.
 
 ``SoftmaxSpec`` names an execution backend from the registry in
 ``repro.backends`` plus its precision point. ``"fp"`` is the baseline,
@@ -8,12 +9,30 @@ and ``"ap_sim"`` executes rows on the functional 2D-AP simulator via a host
 callback. New backends register themselves with
 ``repro.backends.register_backend`` and become valid ``kind`` values with no
 change here.
+
+This module also holds the math of the softmax-variant zoo — drop-in
+attention-weight functions sharing Alg. 1's quantization grid so they map to
+the same 2D-AP column layout (cost models in ``repro.ap.cost_model``):
+
+* :func:`consmax` — ConSmax (arxiv 2402.10930): ``gamma * exp(x - beta)`` with
+  LEARNABLE per-head ``beta``/``gamma`` replacing the max-subtraction and the
+  sum/division. No cross-row reduction at all — the hardware pitch.
+* :func:`sole_softmax` — SOLE-style two-stage low-precision softmax: linear-
+  fraction base-2 exp at ``M`` fractional bits, then a log-domain reciprocal
+  (leading-one detect + linear fraction) instead of a full divider.
+* :func:`mive_softmax` — MIVE-style minimal integer-vector lowering: exponents
+  rounded to integers so every weight is a power of two (exp = pure shift) and
+  normalization is a single shift-add reciprocal.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
+
+import jax
+import jax.numpy as jnp
 
 from repro.backends.base import SoftmaxBackend
 from repro.backends.registry import get_backend, settled_backend_names
@@ -55,3 +74,117 @@ def get_softmax(spec: Optional[SoftmaxSpec]):
 
 FP = SoftmaxSpec("fp")
 INT_BEST = SoftmaxSpec("int", BEST)
+
+
+# --------------------------------------------------------------- variant math
+
+LOG2E = 1.0 / math.log(2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConSmaxCfg:
+    """ConSmax operating point: default beta/gamma (used when a model carries
+    no learned ``smx`` params) + the Alg.-1 precision grid its integer exp
+    runs on. Frozen/hashable so the backend registry can cache on it."""
+
+    beta: float = 0.0
+    gamma: float = 1.0
+    precision: PrecisionConfig = BEST
+
+
+CONSMAX_DEFAULT = ConSmaxCfg()
+
+
+def consmax(x, cfg: ConSmaxCfg = CONSMAX_DEFAULT, mask=None, axis: int = -1,
+            beta=None, gamma=None):
+    """ConSmax attention weights: ``gamma * exp(clip(x - beta, T_C, 0))``.
+
+    ``beta`` substitutes for the row max and ``gamma`` for the reciprocal sum,
+    so there is NO cross-row reduction or division — the two serialization
+    points of a softmax on wide vectors. The exp runs through the shared
+    Alg.-1 integer machinery (M-bit codes -> I-BERT polynomial), with the
+    smooth fp exp as the backward pass (STE), so ``beta``/``gamma`` — and the
+    scores — receive useful gradients while the forward is the exact value an
+    AP lowering would produce. ``beta``/``gamma`` accept broadcastable arrays
+    (learned per-head params); ``cfg`` supplies scalar defaults. The clip to
+    ``[T_C, 0]`` is the quantization domain: scores above ``beta`` saturate at
+    weight ``gamma``. ``axis`` is accepted for protocol compatibility but
+    unused — the map is elementwise.
+    """
+    from repro.core.alg1 import int_exp_codes
+
+    pc = cfg.precision
+    x = x.astype(jnp.float32)
+    b = jnp.float32(cfg.beta) if beta is None else beta.astype(jnp.float32)
+    g = jnp.float32(cfg.gamma) if gamma is None else gamma.astype(jnp.float32)
+    xs = jnp.clip(x - b, pc.T_C, 0.0)
+    y_fp = jnp.exp(xs)
+    v = jnp.round(xs / jnp.float32(pc.S)).astype(jnp.int32)
+    y_int = int_exp_codes(v, pc).astype(jnp.float32) * jnp.float32(pc.exp_scale)
+    y = g * (y_fp + jax.lax.stop_gradient(y_int - y_fp))
+    if mask is not None:
+        y = jnp.where(mask, y, 0.0)
+    return y
+
+
+def sole_softmax(x, cfg: PrecisionConfig = BEST, mask=None, axis: int = -1):
+    """SOLE-style two-stage low-precision softmax.
+
+    Stage 1 (per element, shift-add only): ``t = (x - max) * log2(e)`` splits
+    into integer + fraction; ``2^t ~= (1 + frac) << int`` (piecewise-linear
+    base-2 exp — no Barrett reduction, no polynomial multiplies), rounded to
+    the ``w_vapprox``-fractional-bit fixed point (Alg. 1's own intermediate
+    grid). Stage 2 (per vector): the sum is inverted in the LOG domain —
+    leading-one detection gives ``floor(log2 s)``, the residue's linear
+    fraction completes ``log2 s``, and the reciprocal is the same linear
+    base-2 exp of its negation — so the divider disappears; the reciprocal is
+    then a per-vector constant multiply, exactly the discipline Alg. 1's own
+    schedule uses for its reciprocal. Deterministic and jit-traceable; the
+    matching Table-II schedule is ``ap.cost_model.sole_cycle_breakdown``.
+    """
+    x = x.astype(jnp.float32)
+    if mask is not None:
+        x = jnp.where(mask, x, -1e30)
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    t = (x - m) * jnp.float32(LOG2E)
+    ti = jnp.floor(t)
+    e = (1.0 + (t - ti)) * jnp.exp2(ti)
+    grid = jnp.float32(2.0 ** cfg.w_vapprox)
+    e = jnp.round(e * grid) / grid
+    if mask is not None:
+        e = jnp.where(mask, e, 0.0)
+    s = jnp.maximum(jnp.sum(e, axis=axis, keepdims=True), 1.0 / grid)
+    ls = jnp.floor(jnp.log2(s))
+    ls = ls + (s * jnp.exp2(-ls) - 1.0)          # linear log2 fraction
+    li = jnp.floor(-ls)
+    recip = (1.0 + (-ls - li)) * jnp.exp2(li)    # linear base-2 exp again
+    return e * recip
+
+
+def mive_softmax(x, cfg: PrecisionConfig = BEST, mask=None, axis: int = -1):
+    """MIVE-style minimal integer-vector shift-add softmax.
+
+    Exponents round to INTEGERS, so every weight is a power of two and the
+    exp is a pure shift of a unit code; exponents below the ``w_vapprox``
+    column width underflow to zero (the bit budget). Normalization is a
+    single shift-add reciprocal: ``1/s ~= (1.5 - s_frac/2) * 2^-floor(log2
+    s)`` (exact at both ends of the octave, <= ~6% inside), applied to each
+    power-of-two weight as a shift of the scalar. No multiplier anywhere —
+    the cheapest point of the zoo, and the coarsest (the pow2 exp grid costs
+    up to ~sqrt(2) per element). Table-II schedule:
+    ``ap.cost_model.mive_cycle_breakdown``.
+    """
+    x = x.astype(jnp.float32)
+    if mask is not None:
+        x = jnp.where(mask, x, -1e30)
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    t = jnp.round((x - m) * jnp.float32(LOG2E))
+    w_acc = jnp.float32(cfg.w_vapprox)
+    e = jnp.where(t >= -w_acc, jnp.exp2(jnp.maximum(t, -w_acc)), 0.0)
+    if mask is not None:
+        e = jnp.where(mask, e, 0.0)
+    s = jnp.maximum(jnp.sum(e, axis=axis, keepdims=True),
+                    jnp.exp2(-w_acc))
+    si = jnp.floor(jnp.log2(s))
+    recip = (1.5 - 0.5 * s * jnp.exp2(-si)) * jnp.exp2(-si)
+    return e * recip

@@ -24,7 +24,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.backends import available_backends, get_backend
+from repro.backends import get_backend
+from repro.backends.registry import settled_backend_names
 from repro.checkpoint import checkpointer as ckpt
 from repro.configs.registry import get_config, smoke_config
 from repro.core.precision import PrecisionConfig
@@ -40,8 +41,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama2-7b")
     ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--softmax", default="int",
-                    choices=sorted(available_backends()))
+    # registered-names validation at argparse time: a typo'd --softmax or
+    # --serve-softmax fails with the full registry listed, before any model
+    # or training work (settled_backend_names() is None only mid-import,
+    # which cannot happen at __main__ time — but degrade to unvalidated
+    # rather than crash if it ever does)
+    _names = settled_backend_names()
+    backend_names = sorted(_names) if _names is not None else None
+    ap.add_argument("--softmax", default="int", choices=backend_names,
+                    help="softmax backend the MODEL is built (and warm-"
+                         "trained, if differentiable) with")
+    ap.add_argument("--serve-softmax", default=None, choices=backend_names,
+                    help="--continuous: serve-time softmax-variant override "
+                         "(ServeOptions.softmax_kind) — the variant zoo "
+                         "shares the engine's params; e.g. consmax, sole, "
+                         "mive")
     ap.add_argument("--M", type=int, default=6)
     ap.add_argument("--N", type=int, default=16)
     ap.add_argument("--ckpt-dir", default=None,
@@ -113,9 +127,10 @@ def main():
                          "prefill; composes with every serve mode — sharing, "
                          "chunking, preemption, speculation, pallas)")
     ap.add_argument("--kv-quant-scheme", default="absmax",
-                    choices=("absmax", "exaq"),
+                    choices=("absmax", "exaq", "exaq_clamped"),
                     help="--kv-quant: scale rule (exaq = EXAQ-style "
-                         "power-of-two scales, arxiv 2410.03185)")
+                         "power-of-two scales, arxiv 2410.03185; "
+                         "exaq_clamped = 5-bit-exponent hardware point)")
     args = ap.parse_args()
     if (args.paged or args.prefix_share or args.speculative or args.shards) \
             and not args.continuous:
@@ -130,6 +145,9 @@ def main():
     if args.prefill_chunk is not None and not args.continuous:
         ap.error("--prefill-chunk requires --continuous (it paces "
                  "Engine.serve admissions)")
+    if args.serve_softmax is not None and not args.continuous:
+        ap.error("--serve-softmax requires --continuous (it overrides the "
+                 "softmax variant for Engine.serve)")
     # cross-field serve constraints (--prefix-share/--kernel/--preemption
     # require --paged, ...) live in ONE place: ServeOptions.__post_init__.
     # Build the options object up front so flag conflicts fail before any
@@ -143,6 +161,7 @@ def main():
             speculative=args.speculative, draft_k=args.draft_k,
             kernel=args.kernel,
             shards=args.shards if args.shards else None,
+            softmax_kind=args.serve_softmax,
             prefill_chunk=args.prefill_chunk,
             preemption=args.preemption)
     except ValueError as e:

@@ -15,19 +15,30 @@ import jax.numpy as jnp
 from repro.backends import telemetry
 from repro.core.softmax_variants import spec_backend
 from repro.models.layers import (
-    Ctx, apply_mrope, apply_rope, dense_apply, dense_init,
+    Ctx, Param, apply_mrope, apply_rope, dense_apply, dense_init,
 )
 
 
 def attn_init(key, cfg, cross: bool = False):
     d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     ks = jax.random.split(key, 4)
-    return {
+    p = {
         "wq": dense_init(ks[0], d, h * dh, ("embed", "heads"), bias=cfg.qkv_bias),
         "wk": dense_init(ks[1], d, kv * dh, ("embed", "kv_heads"), bias=cfg.qkv_bias),
         "wv": dense_init(ks[2], d, kv * dh, ("embed", "kv_heads"), bias=cfg.qkv_bias),
         "wo": dense_init(ks[3], h * dh, d, ("heads", "embed")),
     }
+    backend = spec_backend(cfg.softmax)
+    if getattr(backend, "learnable", False):
+        # learnable softmax params (ConSmax beta/gamma): one scalar per query
+        # head, initialized from the backend cfg's operating point. Tiny and
+        # replicated — every device applies the same elementwise map.
+        c = backend.cfg
+        p["smx"] = {
+            "beta": Param(jnp.full((h,), c.beta, jnp.float32), (None,)),
+            "gamma": Param(jnp.full((h,), c.gamma, jnp.float32), (None,)),
+        }
+    return p
 
 
 def _rope(x, positions, cfg):
@@ -63,8 +74,11 @@ def _mask(q_pos, kv_pos, kind: str, window: int):
     return m
 
 
-def attend(q, k, v, mask, cfg, ctx: Ctx, scale: Optional[float] = None):
-    """q [B,Sq,H,D], k/v [B,Skv,KV,D] -> [B,Sq,H,D]. mask [B?,Sq,Skv] or None."""
+def attend(q, k, v, mask, cfg, ctx: Ctx, scale: Optional[float] = None,
+           smx=None):
+    """q [B,Sq,H,D], k/v [B,Skv,KV,D] -> [B,Sq,H,D]. mask [B?,Sq,Skv] or None.
+    ``smx``: learned softmax params ({"beta","gamma"} [H]) when the configured
+    backend is learnable (ConSmax); None falls back to the backend cfg."""
     b, sq, h, dh = q.shape
     kvh = k.shape[2]
     group = h // kvh
@@ -79,20 +93,27 @@ def attend(q, k, v, mask, cfg, ctx: Ctx, scale: Optional[float] = None):
     # time, so metering rides along with jax.eval_shape cost passes for free
     telemetry.record_softmax(backend, scores.shape, heads=kvh * group)
     m = None if mask is None else mask[:, None, None, :, :]
-    w = backend.apply(scores, mask=m).astype(ctx.dtype)
+    if smx is not None and getattr(backend, "learnable", False):
+        # head h = kv_head * group + g — the same order qg unpacked above
+        w = backend.apply(scores, mask=m, params={
+            "beta": smx["beta"].reshape(kvh, group, 1, 1),
+            "gamma": smx["gamma"].reshape(kvh, group, 1, 1),
+        }).astype(ctx.dtype)
+    else:
+        w = backend.apply(scores, mask=m).astype(ctx.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
     return out.reshape(b, sq, h, v.shape[-1])  # v dim may differ (MLA)
 
 
 def attend_chunked(q, k, v, q_pos, kv_pos, kind, cfg, ctx: Ctx,
-                   scale: Optional[float] = None):
+                   scale: Optional[float] = None, smx=None):
     """Query-chunked attention: bounds live score memory to
     [B, H, chunk, Skv] (the 32k-prefill enabler). Exact (full rows per chunk)."""
     b, sq, h, dh = q.shape
     chunk = cfg.attn_chunk
     if chunk <= 0 or sq <= chunk or sq % chunk != 0:
         mask = _mask(q_pos, kv_pos, kind, cfg.window)
-        return attend(q, k, v, mask, cfg, ctx, scale)
+        return attend(q, k, v, mask, cfg, ctx, scale, smx=smx)
     n = sq // chunk
     qc = q.reshape(b, n, chunk, h, dh).transpose(1, 0, 2, 3, 4)
     pc = q_pos.reshape(q_pos.shape[0], n, chunk).transpose(1, 0, 2)
@@ -100,7 +121,7 @@ def attend_chunked(q, k, v, q_pos, kv_pos, kind, cfg, ctx: Ctx,
     def body(carry, xs):
         qi, pi = xs
         mask = _mask(pi, kv_pos, kind, cfg.window)
-        return carry, attend(qi, k, v, mask, cfg, ctx, scale)
+        return carry, attend(qi, k, v, mask, cfg, ctx, scale, smx=smx)
 
     with telemetry.repeat(n):  # scan body traces once, executes n times
         _, out = jax.lax.scan(body, None, (qc, pc))
@@ -123,7 +144,7 @@ def attn_apply(p, x, cfg, ctx: Ctx, positions, kind: str = "causal"):
     b, s, _ = x.shape
     q, k, v = project_qkv(p, x, cfg, ctx, positions)
     pos = positions[0] if cfg.rope_type == "mrope" else positions
-    out = attend_chunked(q, k, v, pos, pos, kind, cfg, ctx)
+    out = attend_chunked(q, k, v, pos, pos, kind, cfg, ctx, smx=p.get("smx"))
     out = _collect_heads(out, ctx)
     return dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
 
@@ -137,11 +158,18 @@ def kv_quantize(x, scheme: str = "absmax"):
     dequant is an exponent add on integer hardware. Either way the scale is
     a function of this position's amax alone (position-local): requantizing
     a position always reproduces its stored bytes, which is what lets
-    chunked prefill and prefix sharing stay bit-identical on int8 pools."""
+    chunked prefill and prefix sharing stay bit-identical on int8 pools.
+    ``scheme="exaq_clamped"`` additionally clamps the power-of-two exponent
+    to a signed 5-bit field (core/quantization.exaq_scale_clamped) — the
+    scale word a real exponent-add datapath would carry; still position-local,
+    so the same bit-identity contract holds."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
     if scheme == "exaq":
         from repro.core.quantization import exaq_scale
         scale = exaq_scale(amax)
+    elif scheme == "exaq_clamped":
+        from repro.core.quantization import exaq_scale_clamped
+        scale = exaq_scale_clamped(amax, 5)
     else:
         scale = jnp.maximum(amax / 127.0, 1e-8)
     codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
@@ -372,7 +400,7 @@ def _attn_decode_paged(p, x, cache, cache_pos, cfg, ctx: Ctx, positions, kind):
     valid = valid_upto(l_max, cache_pos,
                        cfg.window if kind == "window" else 0)
     mask = jnp.broadcast_to(valid[:, None, :], (b, 1, l_max))
-    out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
+    out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx, smx=p.get("smx"))
     y = dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, s, -1), ctx)
     return y, new_cache
 
@@ -410,7 +438,8 @@ def attn_prefill_tail(p, x, prefix_k, prefix_v, cfg, ctx: Ctx, positions,
     v = jnp.concatenate([pv, v_t], axis=1)
     pos = positions[0] if cfg.rope_type == "mrope" else positions
     kv_pos = jnp.arange(prefix_len + t, dtype=jnp.int32)[None, :]
-    out = attend_chunked(q, k, v, pos, kv_pos, "causal", cfg, ctx)
+    out = attend_chunked(q, k, v, pos, kv_pos, "causal", cfg, ctx,
+                         smx=p.get("smx"))
     y = dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, t, -1), ctx)
     return y, tail
 
@@ -456,7 +485,7 @@ def attn_decode(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
     valid = valid_upto(l_max, cache_pos,
                        cfg.window if kind == "window" else 0)
     mask = jnp.broadcast_to(valid[:, None, :], (b, 1, l_max))
-    out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
+    out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx, smx=p.get("smx"))
     y = dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, s, -1), ctx)
     return y, new_cache
 
@@ -530,7 +559,7 @@ def attn_verify(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
     l_max = k.shape[1]
     mask = verify_mask(l_max, positions,
                        cfg.window if kind == "window" else 0)
-    out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
+    out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx, smx=p.get("smx"))
     y = dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, t, -1), ctx)
     return y, new_cache
 
@@ -590,7 +619,7 @@ def attn_decode_ring(p, x, cache, cache_pos, cfg, ctx: Ctx, positions,
         pos_col = cache_pos[:, None]
     valid = (pos_buf >= 0) & (pos_buf <= pos_col) & (pos_buf > pos_col - window)
     mask = jnp.broadcast_to(valid[:, None, :], (b, 1, w_cap))
-    out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx)
+    out = attend(q, ctx.cast(k), ctx.cast(v), mask, cfg, ctx, smx=p.get("smx"))
     y = dense_apply(p["wo"], _collect_heads(out, ctx).reshape(b, s, -1), ctx)
     return y, {"k": k, "v": v, "pos": pos_buf}
 
@@ -601,7 +630,7 @@ def attn_cross(p, x, enc_k, enc_v, cfg, ctx: Ctx):
     h, dh = cfg.n_heads, cfg.d_head
     q = dense_apply(p["wq"], x, ctx).reshape(b, s, h, dh)
     q = ctx.shard(q, ("batch", None, "heads", None))
-    out = attend(q, enc_k, enc_v, None, cfg, ctx)
+    out = attend(q, enc_k, enc_v, None, cfg, ctx, smx=p.get("smx"))
     return dense_apply(p["wo"], out.reshape(b, s, -1), ctx)
 
 

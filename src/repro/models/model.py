@@ -191,9 +191,17 @@ class Model:
         return norm_apply(p["enc_final_norm"], x, cfg.norm, ctx)
 
     def _dec_embed(self, p, tokens, offset):
+        """Decoder embedding + learned positional table. ``offset`` is the
+        first absolute position: a scalar/int (uniform batch — prefill, the
+        fused generate scan) or a per-row [B] vector (each serving slot at
+        its own length under continuous batching)."""
         cfg, ctx = self.cfg, self.ctx
         x = embed_apply(p["embed"], tokens, ctx)
-        pos = offset + jnp.arange(tokens.shape[1])
+        off = jnp.asarray(offset, jnp.int32)
+        steps = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        # scalar -> pos [S] (take yields [S, D], broadcasts over the batch);
+        # per-row -> pos [B, S] (take yields [B, S, D], one row per slot)
+        pos = off[:, None] + steps[None, :] if off.ndim == 1 else off + steps
         x = x + ctx.cast(jnp.take(p["pos_embed"], pos, axis=0))
         return ctx.shard(x, ("batch", None, None))
 
@@ -305,16 +313,17 @@ class Model:
         ``jax.lax.scan`` (serving/engine.make_generate_fn) and the jit can
         donate it for in-place updates. ``cache_pos`` may be a traced scalar
         (the scan's ``base_pos + t``) or traced vector (the serve step's
-        slot positions). The encdec family is scalar-only (its positional
-        embedding lookup and cross cache are not slot-addressed)."""
+        slot positions) — for every family including encdec, whose
+        positional-embedding lookup and self cache are per-row-addressed and
+        whose cross K/V rides slot-resident in the cache pytree."""
         cfg, ctx = self.cfg, self.ctx
         if cfg.family == "encdec":
-            if jnp.ndim(cache_pos) != 0:
-                raise NotImplementedError(
-                    "encdec decode takes a scalar cache_pos")
             x = self._dec_embed(p, batch["token"], cache_pos)
-            positions = cache_pos + jnp.zeros(
-                (batch["token"].shape[0], 1), jnp.int32)
+            b = batch["token"].shape[0]
+            cp = jnp.asarray(cache_pos, jnp.int32)
+            positions = (jnp.broadcast_to(cp[:, None], (b, 1))
+                         if cp.ndim == 1
+                         else cp + jnp.zeros((b, 1), jnp.int32))
 
             def body(carry, xs):
                 layer_p, c = xs

@@ -237,7 +237,15 @@ def make_serve_step_fn(model: Model, sample_fn: Callable,
     pad = eos_id if pad_id is None else pad_id
 
     def serve_step(params, cache, tok, pos, keys, done):
-        logits, cache = model.decode_step(params, cache, {"token": tok}, pos)
+        step_in = {"token": tok}
+        if model.cfg.rope_type == "mrope":
+            # text-only decode: all three M-RoPE position streams sit at the
+            # slot's cache position — the same values the eager loop's
+            # jnp.full((3, b, 1), pos) feeds, so slot streams replay the
+            # per-request eager streams bit-for-bit
+            step_in["positions"] = jnp.broadcast_to(
+                pos.astype(jnp.int32)[None, :, None], (3, pos.shape[0], 1))
+        logits, cache = model.decode_step(params, cache, step_in, pos)
 
         def one(row_logits, key):
             key, sub = jax.random.split(key)
@@ -457,18 +465,32 @@ class Engine:
 
     # ------------------------------------------------- continuous batching
 
-    def _meter_prefill(self, p_len: int, cache_len: int) -> CostReport:
-        key = ("prefill", p_len, cache_len)
+    @staticmethod
+    def _spec_kind(model: Model) -> Optional[str]:
+        spec = model.cfg.softmax
+        return None if spec is None else spec.kind
+
+    def _meter_prefill(self, p_len: int, cache_len: int, enc_len: int = 0,
+                       model: Optional[Model] = None) -> CostReport:
+        model = self.model if model is None else model
+        key = ("prefill", p_len, cache_len, enc_len, self._spec_kind(model))
         if key not in self._meter_cache:
+            batch = {"tokens": jnp.zeros((1, p_len), jnp.int32)}
+            if enc_len:
+                batch["frames"] = jnp.zeros((1, enc_len, model.cfg.d_model),
+                                            jnp.float32)
+            if model.cfg.rope_type == "mrope":
+                batch["positions"] = jnp.zeros((3, 1, p_len), jnp.int32)
             with telemetry.collect() as acc:
                 jax.eval_shape(
-                    functools.partial(self.model.prefill, cache_len=cache_len),
-                    self.params, {"tokens": jnp.zeros((1, p_len), jnp.int32)})
+                    functools.partial(model.prefill, cache_len=cache_len),
+                    self.params, batch)
             self._meter_cache[key] = acc.total()
         return self._meter_cache[key]
 
     def _meter_serve_step(self, slots: int, cache_len: int,
-                          paged_geom=None, t: int = 1) -> CostReport:
+                          paged_geom=None, t: int = 1, enc_len: int = 0,
+                          model: Optional[Model] = None) -> CostReport:
         """Softmax AP cost of ONE slot-batched step (static shapes — one
         abstract trace, memoized). ``t=1`` meters the plain decode step;
         ``t>1`` meters the speculative verify step (``Model.verify_step``
@@ -476,66 +498,117 @@ class Engine:
         queries per head, which the meter sees through the static score
         shapes). ``paged_geom``: (block_size, num_blocks) to meter the
         paged layout (same softmax shapes — the gather materializes the
-        same [B, C] view — but kept honest)."""
-        key = ("serve_step", slots, cache_len, paged_geom, t)
+        same [B, C] view — but kept honest). ``model`` (default: the
+        engine's own) lets a softmax-variant serve meter ITS schedule."""
+        model = self.model if model is None else model
+        key = ("serve_step", slots, cache_len, paged_geom, t, enc_len,
+               self._spec_kind(model))
         if key not in self._meter_cache:
             if paged_geom is None:
-                struct = kv_cache.cache_struct(self.model.cfg, slots, cache_len)
+                struct = kv_cache.cache_struct(model.cfg, slots, cache_len,
+                                               enc_len)
             else:
                 struct = kv_cache.paged_cache_struct(
-                    self.model.cfg, slots, cache_len, *paged_geom)
-            fn = self.model.decode_step if t == 1 else self.model.verify_step
+                    model.cfg, slots, cache_len, *paged_geom)
+            fn = model.decode_step if t == 1 else model.verify_step
+            step_in = {"token": jnp.zeros((slots, t), jnp.int32)}
+            if model.cfg.rope_type == "mrope":
+                step_in["positions"] = jnp.zeros((3, slots, t), jnp.int32)
             with telemetry.collect() as acc:
                 jax.eval_shape(fn, self.params, struct,
-                               {"token": jnp.zeros((slots, t), jnp.int32)},
+                               {**step_in},
                                jnp.zeros((slots,), jnp.int32))
             self._meter_cache[key] = acc.total()
         return self._meter_cache[key]
 
     _INT_KINDS = ("int", "int_jax", "int_pallas", "int_pallas_paged")
 
-    def _kernel_model(self, kernel: str) -> Model:
+    def _variant_model(self, softmax_kind: Optional[str]) -> Model:
+        """The Model serving under ``ServeOptions.softmax_kind`` — the
+        engine's own config with the softmax spec's kind swapped (precision
+        point kept), SHARING ``self.params``. A model whose params carry no
+        learned softmax state (``p["smx"]``) serves a learnable variant at
+        the backend cfg's default operating point; extra param leaves under a
+        non-learnable variant simply ride along unused."""
+        if softmax_kind is None:
+            return self.model
+        key = ("softmax", softmax_kind)
+        if key not in self._kernel_models:
+            from repro.core.softmax_variants import SoftmaxSpec
+
+            spec = self.model.cfg.softmax or SoftmaxSpec()
+            var = (spec if spec.kind == softmax_kind
+                   else dataclasses.replace(spec, kind=softmax_kind))
+            ctx = self.model.ctx
+            self._kernel_models[key] = Model(
+                self.model.cfg.with_softmax(var), rules=ctx.rules,
+                mesh=ctx.mesh, dtype=ctx.dtype)
+        return self._kernel_models[key]
+
+    def _variant_prefill(self, softmax_kind: Optional[str], tail: bool):
+        """Memoized prefill / prefill_tail jit for a softmax variant (the
+        engine's own jits when ``softmax_kind`` is None)."""
+        if softmax_kind is None:
+            return self._prefill_tail if tail else self._prefill
+        key = ("prefill_tail" if tail else "prefill", softmax_kind)
+        if key not in self._serve_jits:
+            m = self._variant_model(softmax_kind)
+            self._serve_jits[key] = (
+                jax.jit(m.prefill_tail, static_argnames=("prefix_len",))
+                if tail else
+                jax.jit(m.prefill, static_argnames=("cache_len",)))
+        return self._serve_jits[key]
+
+    def _kernel_model(self, kernel: str,
+                      softmax_kind: Optional[str] = None) -> Model:
         """The Model variant executing decode under ``kernel``.
 
-        ``"jnp"`` is the engine's own model. ``"pallas"`` swaps the softmax
-        spec to ``int_pallas_paged`` — the SAME Alg.-1 ``apply`` body, so
-        prefill and every non-paged-decode site lower identically and the
-        variant SHARES ``self.params`` — while the paged decode/verify sites
-        route through the fused block-table kernel. Requires an integer-
-        family base spec: the fused kernel runs the integer softmax, so a
-        float-softmax model has no bit-identical fused counterpart."""
+        ``"jnp"`` is the engine's own model (or its ``softmax_kind``
+        variant). ``"pallas"`` swaps the softmax spec to ``int_pallas_paged``
+        — the SAME Alg.-1 ``apply`` body, so prefill and every
+        non-paged-decode site lower identically and the variant SHARES
+        ``self.params`` — while the paged decode/verify sites route through
+        the fused block-table kernel. Requires an integer-family effective
+        spec: the fused kernel runs Alg. 1 and nothing else, so a float or
+        zoo-variant softmax has no bit-identical fused counterpart and is
+        rejected loudly."""
+        base = self._variant_model(softmax_kind)
         if kernel == "jnp":
-            return self.model
+            return base
         if kernel != "pallas":
             raise ValueError(
                 f"unknown decode kernel {kernel!r} (expected jnp | pallas)")
-        if kernel not in self._kernel_models:
-            spec = self.model.cfg.softmax
+        key = ("pallas", softmax_kind)
+        if key not in self._kernel_models:
+            spec = base.cfg.softmax
             if spec is None or spec.kind not in self._INT_KINDS:
                 kind = None if spec is None else spec.kind
                 raise ValueError(
-                    "kernel='pallas' serves the integer softmax family "
-                    f"(one of {self._INT_KINDS}); this engine's model uses "
-                    f"{kind!r}")
+                    "kernel='pallas' serves the Alg.-1 integer softmax "
+                    f"family (one of {self._INT_KINDS}); the requested "
+                    f"softmax {kind!r} is not an Alg.-1 dataflow — serve "
+                    "it with kernel='jnp'")
             var = dataclasses.replace(spec, kind="int_pallas_paged")
-            ctx = self.model.ctx
-            self._kernel_models[kernel] = Model(
-                self.model.cfg.with_softmax(var), rules=ctx.rules,
+            ctx = base.ctx
+            self._kernel_models[key] = Model(
+                base.cfg.with_softmax(var), rules=ctx.rules,
                 mesh=ctx.mesh, dtype=ctx.dtype)
-        return self._kernel_models[kernel]
+        return self._kernel_models[key]
 
-    def _serving_model(self, kernel: str, mesh) -> Model:
+    def _serving_model(self, kernel: str, mesh,
+                       softmax_kind: Optional[str] = None) -> Model:
         """The Model variant decoding under ``kernel`` ON ``mesh``: same
         config and params as :meth:`_kernel_model`, but built with the
         serving rules (heads / MLA latents on the model axis, kv_seq
         unsharded) so every ``ctx.shard`` carry constraint resolves to the
-        stable head-sharded layout. Memoized per (kernel, mesh) — a mesh is
-        hashable and serve() reuses one mesh object across calls."""
+        stable head-sharded layout. Memoized per (kernel, mesh[, softmax]) —
+        a mesh is hashable and serve() reuses one mesh object across
+        calls."""
         from repro.distributed.sharding import ShardingRules, serving_rules
 
-        key = (kernel, mesh)
+        key = (kernel, mesh, softmax_kind)
         if key not in self._mesh_models:
-            base = self._kernel_model(kernel)   # validates the kernel name
+            base = self._kernel_model(kernel, softmax_kind)  # validates both
             ctx = base.ctx
             rules = serving_rules(
                 ctx.rules if ctx.rules is not None
@@ -544,7 +617,7 @@ class Engine:
                                            dtype=ctx.dtype)
         return self._mesh_models[key]
 
-    def _mesh_exec(self, mesh) -> dict:
+    def _mesh_exec(self, mesh, softmax_kind: Optional[str] = None) -> dict:
         """Per-mesh executor state: params placed ONCE (column/row-parallel
         NamedShardings via the serving rules) plus the prefill jits bound to
         the mesh-rules model. Committed-device arrays cannot mix with
@@ -552,46 +625,57 @@ class Engine:
         params or cache gets a per-mesh instance; the cache-surgery jits
         (scatter / copy / insert / prefix-gather) are placement-agnostic
         pytree ops and are shared with the single-device path."""
-        if mesh not in self._mesh_execs:
+        key = (mesh, softmax_kind)
+        if key not in self._mesh_execs:
             from repro.serving.sharded import shard_params
 
-            m = self._serving_model("jnp", mesh)
-            self._mesh_execs[mesh] = {
+            m = self._serving_model("jnp", mesh, softmax_kind)
+            # params place once PER MESH — the variant models share the
+            # engine's param tree, so any already-placed copy is reused
+            placed = next((ex["params"] for (ms, _), ex
+                           in self._mesh_execs.items() if ms == mesh), None)
+            if placed is None:
+                placed = shard_params(self.params, self.model.param_axes(),
+                                      m.ctx.rules, mesh)
+            self._mesh_execs[key] = {
                 "rules": m.ctx.rules,
-                "params": shard_params(self.params, self.model.param_axes(),
-                                       m.ctx.rules, mesh),
+                "params": placed,
                 "prefill": jax.jit(m.prefill, static_argnames=("cache_len",)),
                 "prefill_tail": jax.jit(m.prefill_tail,
                                         static_argnames=("prefix_len",)),
             }
-        return self._mesh_execs[mesh]
+        return self._mesh_execs[key]
 
-    def _get_serve_step(self, kernel: str = "jnp", mesh=None):
-        """The compiled continuous-batching step for one decode kernel
-        (memoized; ``"jnp"`` aliases the step built in ``__init__``; with a
-        ``mesh`` the step closes over the serving-rules model variant)."""
-        key = kernel if mesh is None else (kernel, mesh)
+    def _get_serve_step(self, kernel: str = "jnp", mesh=None,
+                        softmax_kind: Optional[str] = None):
+        """The compiled continuous-batching step for one (decode kernel,
+        softmax variant) (memoized; plain ``"jnp"`` aliases the step built in
+        ``__init__``; with a ``mesh`` the step closes over the serving-rules
+        model variant)."""
+        key = (kernel if mesh is None else (kernel, mesh)
+               ) if softmax_kind is None else (kernel, mesh, softmax_kind)
         if key not in self._serve_jits:
-            model = (self._kernel_model(kernel) if mesh is None
-                     else self._serving_model(kernel, mesh))
+            model = (self._kernel_model(kernel, softmax_kind) if mesh is None
+                     else self._serving_model(kernel, mesh, softmax_kind))
             self._serve_jits[key] = jax.jit(
                 make_serve_step_fn(model, self.sample,
                                    self.eos_id, self.pad_id),
                 donate_argnums=(1,))
         return self._serve_jits[key]
 
-    def _get_spec_step(self, draft_k: int, kernel: str = "jnp", mesh=None):
+    def _get_spec_step(self, draft_k: int, kernel: str = "jnp", mesh=None,
+                       softmax_kind: Optional[str] = None):
         """The compiled draft-verify step for one (draft depth, kernel[,
-        mesh]) — shapes are static per (slots, cache_len, K), so serving any
-        number of traces shares one compilation per geometry."""
-        key = (draft_k, kernel) if mesh is None else (draft_k, kernel, mesh)
+        mesh, softmax]) — shapes are static per (slots, cache_len, K), so
+        serving any number of traces shares one compilation per geometry."""
+        key = (draft_k, kernel, mesh, softmax_kind)
         if key not in self._spec_jits:
             verifier = make_spec_verifier(
                 self._sampler_kind,
                 pad_id=self.pad_id if self.pad_id is not None else 0,
                 **self._sampler_kw)
-            model = (self._kernel_model(kernel) if mesh is None
-                     else self._serving_model(kernel, mesh))
+            model = (self._kernel_model(kernel, softmax_kind) if mesh is None
+                     else self._serving_model(kernel, mesh, softmax_kind))
             self._spec_jits[key] = jax.jit(
                 make_spec_step_fn(model, verifier, draft_k),
                 donate_argnums=(1,))
@@ -607,15 +691,17 @@ class Engine:
             functools.partial(kv_cache.paged_prefix_view, s=s),
             struct, jax.ShapeDtypeStruct((1,), jnp.int32))
 
-    def _meter_prefill_tail(self, s: int, tail: int) -> CostReport:
+    def _meter_prefill_tail(self, s: int, tail: int,
+                            model: Optional[Model] = None) -> CostReport:
         """Softmax AP cost of a tail-only prefill (tail tokens attending over
         s shared-prefix positions) — what a prefix-shared admission actually
         executes."""
-        key = ("prefill_tail", s, tail)
+        model = self.model if model is None else model
+        key = ("prefill_tail", s, tail, self._spec_kind(model))
         if key not in self._meter_cache:
             with telemetry.collect() as acc:
                 jax.eval_shape(
-                    functools.partial(self.model.prefill_tail, prefix_len=s),
+                    functools.partial(model.prefill_tail, prefix_len=s),
                     self.params,
                     {"tokens": jnp.zeros((1, tail), jnp.int32)},
                     self._prefix_struct(s))
@@ -751,14 +837,42 @@ class Engine:
         kernel, mesh, shards = opt.kernel, opt.mesh, opt.shards
         prefill_chunk, preemption = opt.prefill_chunk, opt.preemption
         aging, hol_grace = opt.aging, opt.hol_grace
-        cfg = self.model.cfg
-        if cfg.family == "encdec" or cfg.rope_type == "mrope":
+        smx_kind = opt.softmax_kind
+        cfg = self._variant_model(smx_kind).cfg
+        if cfg.family == "encdec":
+            off = [n for n, v in (
+                ("paged", paged), ("prefix_share", prefix_share),
+                ("speculative", speculative),
+                ("prefill_chunk", prefill_chunk is not None),
+                ("kernel", kernel != "jnp"),
+                ("mesh/shards", mesh is not None or shards is not None),
+            ) if v]
+            if off:
+                raise NotImplementedError(
+                    "encdec serving covers the contiguous single-device "
+                    "executor (cross K/V is slot-resident in the cache "
+                    f"pytree); unsupported option(s): {', '.join(off)}")
+        if cfg.rope_type == "mrope" and (speculative or prefix_share):
             raise NotImplementedError(
-                "serve() supports the decoder-only lm families "
-                "(dense/moe/mla/ssm/hybrid) with scalar-position rope")
+                "mrope serving covers plain and paged decode; speculative "
+                "verify and prefix sharing need scalar-position rope "
+                "(Model.verify_step / prefill_tail)")
         reqs = list(requests)
         if not reqs:
             return ServeReport([], 0, 0.0, slots, cache_len or 0, None)
+        enc_len = 0
+        if cfg.family == "encdec":
+            # cross-attention is mask-free (attn_cross), so every admitted
+            # request must share ONE encoder frame geometry — padding a
+            # shorter clip would change its attention rows vs eager
+            shapes = {None if r.frames is None
+                      else tuple(np.asarray(r.frames).shape) for r in reqs}
+            if None in shapes or len(shapes) != 1:
+                raise ValueError(
+                    "encdec serving needs every request to carry encoder "
+                    "frames of one shared [enc_len, d_model] shape "
+                    f"(cross-attention is mask-free); got {sorted(shapes, key=str)}")
+            enc_len = next(iter(shapes))[0]
         need = max(r.prompt_len + r.max_new for r in reqs)
         C = need if cache_len is None else cache_len
         if cfg.family == "hybrid":
@@ -770,13 +884,15 @@ class Engine:
         if mesh is not None:
             from repro.serving.sharded import validate_serving_mesh
             validate_serving_mesh(cfg, mesh)
-            ex = self._mesh_exec(mesh)
+            ex = self._mesh_exec(mesh, smx_kind)
             params, prefill = ex["params"], ex["prefill"]
             prefill_tail = ex["prefill_tail"]
         else:
-            params, prefill = self.params, self._prefill
-            prefill_tail = self._prefill_tail
-        serve_step = self._get_serve_step(kernel, mesh)
+            params, prefill = self.params, self._variant_prefill(smx_kind,
+                                                                 tail=False)
+            prefill_tail = self._variant_prefill(smx_kind, tail=True)
+        serve_step = self._get_serve_step(kernel, mesh, smx_kind)
+        meter_model = self._variant_model(smx_kind)
         alloc = None
         shareable = False
         if paged:
@@ -811,13 +927,15 @@ class Engine:
         else:
             sched = SlotScheduler(reqs, slots, C, policy=policy,
                                   aging=aging, hol_grace=hol_grace)
-            cache = kv_cache.cache_zeros(cfg, slots, C)
+            cache = kv_cache.cache_zeros(cfg, slots, C, enc_len=enc_len)
         # chunked prefill: dense/moe (incl. MLA, fp or int8 KV) chunk truly
         # incrementally (prefill_tail against the committed prefix, bit-
-        # identical); recurrent families accrue the same budget and prefill
-        # whole once it covers the prompt (see the docstring)
+        # identical); recurrent families — and mrope, whose prefill_tail is
+        # rejected — accrue the same budget and prefill whole once it covers
+        # the prompt (see the docstring)
         chunkable = (prefill_chunk is not None
-                     and cfg.family in ("dense", "moe"))
+                     and cfg.family in ("dense", "moe")
+                     and cfg.rope_type != "mrope")
         if mesh is not None:
             # place the zeroed cache on the serving layout up front — the
             # donated carry then keeps it there with zero relayouts
@@ -843,12 +961,14 @@ class Engine:
                     f"draft model vocab {proposer.model.cfg.vocab} != "
                     f"target vocab {cfg.vocab}")
             proposer.begin(slots, C)
-            spec_step = self._get_spec_step(draft_k, kernel, mesh)
+            spec_step = self._get_spec_step(draft_k, kernel, mesh, smx_kind)
         attr = telemetry.SlotCostAttributor() if report_cost else None
         geom = (block_size, num_blocks) if paged else None
-        step_cost = (self._meter_serve_step(slots, C, geom)
+        step_cost = (self._meter_serve_step(slots, C, geom, enc_len=enc_len,
+                                            model=meter_model)
                      if report_cost and not speculative else None)
-        verify_cost = (self._meter_serve_step(slots, C, geom, t=draft_k + 1)
+        verify_cost = (self._meter_serve_step(slots, C, geom, t=draft_k + 1,
+                                              model=meter_model)
                        if report_cost and speculative else None)
         draft_cost = (proposer.meter_round()
                       if report_cost and speculative else None)
@@ -903,6 +1023,22 @@ class Engine:
                 ttft_s=(ew[0] - q0) if ew else 0.0,
                 tbt_s=[b - a for a, b in zip(ew, ew[1:])],
                 preempts=st.preempts)
+
+        def prompt_batch(req: Request, lo: int = 0, hi=None) -> dict:
+            """Prefill input dict for prompt positions [lo, hi): tokens plus
+            the family's extra stream — encoder frames (encdec, whole-prompt
+            admissions only) or text-axis M-RoPE positions (a text-only
+            serving trace walks all three streams along the token axis,
+            matching the eager reference's ``extra_inputs``)."""
+            b = {"tokens": jnp.asarray(req.prompt[None, lo:hi])}
+            if cfg.family == "encdec":
+                b["frames"] = jnp.asarray(req.frames)[None]
+            elif cfg.rope_type == "mrope":
+                n = (req.prompt_len if hi is None else hi) - lo
+                b["positions"] = jnp.broadcast_to(
+                    jnp.arange(lo, lo + n, dtype=jnp.int32)[None, None, :],
+                    (3, 1, n))
+            return b
 
         def paged_admit(req: Request) -> dict:
             """Reserve one request's paged residency: match + refcount the
@@ -959,9 +1095,8 @@ class Engine:
             bs = block_size
             id_arr = np.asarray(adm["ids"], np.int32)
             if c0 == 0:
-                logits, slot_cache = prefill(
-                    params, {"tokens": jnp.asarray(req.prompt[None, :c1])},
-                    cache_len=C)
+                logits, slot_cache = prefill(params, prompt_batch(req, 0, c1),
+                                             cache_len=C)
             else:
                 kp = -(-c0 // bs)
                 prefix = self._paged_prefix(cache, jnp.asarray(id_arr[:kp]),
@@ -978,16 +1113,20 @@ class Engine:
             pf_this_step += c1 - c0
             if attr is not None:
                 if c0 == 0:
-                    attr.record_request(req.rid, self._meter_prefill(c1, C))
+                    attr.record_request(req.rid, self._meter_prefill(
+                        c1, C, model=meter_model))
                 elif c0 == adm["s"]:
                     # first executed piece past a shared prefix: log the
                     # sharing savings once
                     attr.record_shared_prefill(
-                        req.rid, self._meter_prefill_tail(c0, c1 - c0),
-                        self._meter_prefill(c0, C), c0)
+                        req.rid,
+                        self._meter_prefill_tail(c0, c1 - c0,
+                                                 model=meter_model),
+                        self._meter_prefill(c0, C, model=meter_model), c0)
                 else:
                     attr.record_request(
-                        req.rid, self._meter_prefill_tail(c0, c1 - c0))
+                        req.rid, self._meter_prefill_tail(c0, c1 - c0,
+                                                          model=meter_model))
             return logits
 
         def contig_commit(slot: int, req: Request, c0: int, c1: int):
@@ -1000,7 +1139,8 @@ class Engine:
                     params, {"tokens": jnp.asarray(req.prompt[None, :c1])},
                     cache_len=C)
                 if attr is not None:
-                    attr.record_request(req.rid, self._meter_prefill(c1, C))
+                    attr.record_request(req.rid, self._meter_prefill(
+                        c1, C, model=meter_model))
             else:
                 prefix = self._slot_prefix(cache, jnp.int32(slot), s=c0)
                 logits, slot_cache = prefill_tail(
@@ -1008,7 +1148,8 @@ class Engine:
                     prefix, prefix_len=c0)
                 if attr is not None:
                     attr.record_request(
-                        req.rid, self._meter_prefill_tail(c0, c1 - c0))
+                        req.rid, self._meter_prefill_tail(c0, c1 - c0,
+                                                          model=meter_model))
             cache = self._slot_scatter(cache, slot_cache, jnp.int32(slot),
                                        jnp.int32(c0), t0=0, t1=c1 - c0)
             prefill_tok += c1 - c0
@@ -1144,14 +1285,14 @@ class Engine:
                         "kind": "chunk" if chunkable else "staged",
                         "req": req, "adm": None, "committed": 0, "budget": 0}
                     return
-                logits, slot_cache = prefill(
-                    params, {"tokens": jnp.asarray(req.prompt[None])},
-                    cache_len=C)
+                logits, slot_cache = prefill(params, prompt_batch(req),
+                                             cache_len=C)
                 cache = self._insert_slot(cache, slot_cache, jnp.int32(slot))
                 prefill_tok += P
                 pf_this_step += P
                 if attr is not None:
-                    attr.record_request(req.rid, self._meter_prefill(P, C))
+                    attr.record_request(req.rid, self._meter_prefill(
+                        P, C, enc_len=enc_len, model=meter_model))
             activate(slot, req, logits)
 
         def advance_chunks() -> None:
@@ -1174,15 +1315,14 @@ class Engine:
                     paged_register(job["adm"])
                 else:
                     logits, slot_cache = prefill(
-                        params, {"tokens": jnp.asarray(req.prompt[None])},
-                        cache_len=C)
+                        params, prompt_batch(req), cache_len=C)
                     cache = self._insert_slot(cache, slot_cache,
                                               jnp.int32(slot))
                     prefill_tok += P
                     pf_this_step += P
                     if attr is not None:
-                        attr.record_request(req.rid,
-                                            self._meter_prefill(P, C))
+                        attr.record_request(req.rid, self._meter_prefill(
+                            P, C, model=meter_model))
                 del chunk_jobs[slot]
                 activate(slot, req, logits)
                 return

@@ -57,6 +57,10 @@ class ServeOptions:
     kernel: str = "jnp"
     mesh: Any = None
     shards: Optional[int] = None
+    # -- softmax variant --
+    # registry backend name overriding the model's softmax for THIS serve
+    # call (the variant shares the engine's params); None = the model's own
+    softmax_kind: Optional[str] = None
     # -- SLA scheduling --
     prefill_chunk: Optional[int] = None
     preemption: bool = False
@@ -84,3 +88,10 @@ class ServeOptions:
                              "fused kernel walks the block table)")
         if self.shards is not None and self.mesh is not None:
             raise ValueError("pass either shards=N or mesh=..., not both")
+        if self.softmax_kind is not None:
+            from repro.backends.registry import settled_backend_names
+            names = settled_backend_names()
+            if names is not None and self.softmax_kind not in names:
+                raise ValueError(
+                    f"unknown softmax_kind {self.softmax_kind!r}; registered "
+                    f"backends: {', '.join(names)}")

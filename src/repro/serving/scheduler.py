@@ -81,6 +81,10 @@ class Request:
     seed: int = 0
     priority: int = 0
     deadline: Optional[float] = None
+    # encoder-decoder only: precomputed encoder frames [enc_len, d_model]
+    # (the stub frontend's output); every request in one serve call must
+    # share a single frames shape — cross-attention is mask-free
+    frames: Optional[np.ndarray] = None
 
     @property
     def prompt_len(self) -> int:

@@ -30,6 +30,53 @@ def test_builtin_backends_registered():
         assert n in names, n
 
 
+def test_variant_zoo_registered_and_round_trips():
+    """consmax / sole / mive register like any built-in: SoftmaxSpec
+    round-trips them, get_backend caches per (class, cfg), and each meters
+    its own (distinct) Table-II schedule."""
+    names = available_backends()
+    for n in ("consmax", "sole", "mive"):
+        assert n in names, n
+        spec = SoftmaxSpec(n, BEST)
+        be = spec.backend()
+        assert be.name == n
+        assert be is spec.backend()          # cached instance round-trip
+    # distinct per-vector schedules (the frontier's cost axis): one shared
+    # score batch, one AP per head
+    shape = (1, 4, 1, 64)
+    cycles = {n: get_backend(n, BEST).meter(shape, heads=4).cycles
+              for n in ("consmax", "sole", "mive", "int")}
+    assert cycles["mive"] < cycles["sole"] < cycles["consmax"] \
+        < cycles["int"]
+
+
+def test_consmax_backend_cfg_coercion():
+    """SoftmaxSpec resolves backends with its PrecisionConfig; the ConSmax
+    backend wraps it into a ConSmaxCfg at the default operating point, and
+    a full ConSmaxCfg passes through untouched."""
+    from repro.core.softmax_variants import ConSmaxCfg
+
+    be = get_backend("consmax", BEST)
+    assert isinstance(be.cfg, ConSmaxCfg)
+    assert be.cfg.precision == BEST
+    assert be.learnable
+    custom = ConSmaxCfg(beta=1.5, gamma=0.25, precision=BEST)
+    assert get_backend("consmax", custom).cfg is custom
+
+
+def test_variant_apply_masked_rows():
+    """Variant zoo apply(): masked positions emit zero mass; sole/mive rows
+    still normalize to ~1 over the surviving positions."""
+    x = jnp.asarray(RNG.normal(0, 2, (6, 64)), jnp.float32)
+    mask = jnp.asarray(RNG.random((6, 64)) > 0.3)
+    for name in ("sole", "mive"):
+        got = np.asarray(get_backend(name, BEST).apply(x, mask=mask))
+        assert (got[~np.asarray(mask)] == 0.0).all(), name
+        np.testing.assert_allclose(got.sum(-1), 1.0, atol=0.35, err_msg=name)
+    got = np.asarray(get_backend("consmax", BEST).apply(x, mask=mask))
+    assert (got[~np.asarray(mask)] == 0.0).all()
+
+
 def test_unknown_backend_raises():
     # spec first: validation must be eager even before any registry lookup
     with pytest.raises(ValueError, match="unknown softmax kind"):

@@ -67,6 +67,39 @@ def test_softmax_vector_cost_golden():
     assert (design.rows, design.row_bits) == (32, 81)
 
 
+def test_variant_vector_cost_golden():
+    """Frozen per-vector Table-II schedules of the softmax-variant zoo at
+    the BEST point, seq 64 — the frontier's cost axis. The ordering IS the
+    story: mive (shift-add, coarsest) < sole (low-precision two-stage) <
+    consmax (no reduction/division but learnable mul) < the full Alg.-1
+    integer softmax."""
+    pins = {"consmax": (1572, 2.2661952e-09),
+            "sole": (1434, 3.0423744e-09),
+            "mive": (1144, 2.2404096e-09)}
+    got = {}
+    for kind, (cyc, en) in pins.items():
+        cycles, latency, energy, design = cm.variant_vector_cost(
+            kind, BEST, 64)
+        assert cycles == cyc, (kind, cycles)
+        assert latency == pytest.approx(cyc / cm.FREQ_HZ)
+        assert energy == pytest.approx(en)
+        assert design.rows == 32 and design.row_bits > 0
+        got[kind] = cycles
+    alg1 = cm.softmax_vector_cost(BEST, 64)[0]
+    assert got["mive"] < got["sole"] < got["consmax"] < alg1
+
+
+def test_consmax_cycles_seq_independent():
+    """ConSmax has no reduction or division: per-vector cycles must not
+    depend on the row length (the normalizer is a learned constant)."""
+    c64 = cm.variant_vector_cost("consmax", BEST, 64)[0]
+    c2048 = cm.variant_vector_cost("consmax", BEST, 2048)[0]
+    assert c64 == c2048
+    # sole/mive keep the sum reduction, so longer rows cost more cycles
+    assert cm.variant_vector_cost("sole", BEST, 2048)[0] > \
+        cm.variant_vector_cost("sole", BEST, 64)[0]
+
+
 def test_sequential_rows_times_cycles_schedule():
     """The PR-2 execution schedule: vectors mapped to one head-AP run
     SEQUENTIALLY (latency multiplies by vectors-per-AP), distinct head-APs

@@ -1,0 +1,160 @@
+"""Softmax-variant zoo math + the learnable ConSmax parameter path.
+
+Covers the operator contracts the serving layer builds on: sole/mive stay
+close to the fp softmax on attention-like scores, calibration makes ConSmax
+competitive, the ConSmax forward is the integer I-BERT exponential with an
+STE backward, and a model initialized with ``softmax.kind == "consmax"``
+carries trainable per-head beta/gamma (``p["smx"]``) that receive gradient.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fp_softmax
+from repro.core.precision import BEST
+from repro.core.softmax_variants import (
+    CONSMAX_DEFAULT, ConSmaxCfg, SoftmaxSpec, consmax, mive_softmax,
+    sole_softmax,
+)
+
+RNG = np.random.default_rng(3)
+
+
+def _scores(rows=64, seq=64, scale=2.0):
+    return jnp.asarray(RNG.normal(0.0, scale, (rows, seq)), jnp.float32)
+
+
+def _tv(f, p):
+    f = np.asarray(f, np.float64)
+    p = np.asarray(p, np.float64)
+    return float(np.mean(0.5 * np.abs(f - p).sum(-1)))
+
+
+# ----------------------------------------------------------- operator math
+
+
+def test_sole_mive_close_to_fp():
+    """Two-stage low-precision (sole) and shift-add (mive) lowerings track
+    the fp softmax on attention-calibrated scores; the grid coarseness
+    ordering holds (sole's 2^w grid beats mive's power-of-two weights)."""
+    x = _scores()
+    f = fp_softmax(x)
+    tv_sole = _tv(f, sole_softmax(x, cfg=BEST))
+    tv_mive = _tv(f, mive_softmax(x, cfg=BEST))
+    assert tv_sole < 0.08, tv_sole
+    assert tv_mive < 0.15, tv_mive
+    assert tv_sole < tv_mive
+
+
+def test_variants_normalize_and_mask():
+    x = _scores(rows=8)
+    mask = jnp.asarray(RNG.random((8, 64)) > 0.4)
+    for fn in (sole_softmax, mive_softmax):
+        y = np.asarray(fn(x, cfg=BEST, mask=mask))
+        assert (y[~np.asarray(mask)] == 0.0).all()
+        assert np.isfinite(y).all()
+    y = np.asarray(consmax(x, mask=mask))
+    assert (y[~np.asarray(mask)] == 0.0).all()
+
+
+def test_consmax_calibration_beats_default():
+    """beta = mean row max, gamma = 1/mean row sum (what training learns)
+    turns the unnormalized default into a softmax approximation."""
+    x = _scores()
+    f = fp_softmax(x)
+    beta = float(jnp.mean(jnp.max(x, axis=-1)))
+    shifted = jnp.exp(jnp.clip(x - beta, BEST.T_C, 0.0))
+    gamma = float(1.0 / jnp.mean(jnp.sum(shifted, axis=-1)))
+    cal = ConSmaxCfg(beta=beta, gamma=gamma, precision=BEST)
+    tv_cal = _tv(f, consmax(x, cfg=cal))
+    tv_def = _tv(f, consmax(x, cfg=CONSMAX_DEFAULT))
+    assert tv_cal < tv_def
+    assert tv_cal < 0.5, tv_cal
+
+
+def test_consmax_forward_is_integer_codes():
+    """The STE construction: forward values are EXACTLY the integer
+    exponential codes scaled by gamma (y_fp + stop_grad(y_int - y_fp)
+    evaluates to y_int), so serve == eager needs no float luck."""
+    from repro.core.alg1 import int_exp_codes
+
+    x = _scores(rows=4)
+    cfg = ConSmaxCfg(beta=0.5, gamma=0.125, precision=BEST)
+    y = np.asarray(consmax(x, cfg=cfg))
+    xs = jnp.clip(x - cfg.beta, BEST.T_C, 0.0)
+    v = jnp.round(xs / jnp.float32(BEST.S)).astype(jnp.int32)
+    codes = int_exp_codes(v, BEST).astype(jnp.float32)
+    y_int = np.asarray(
+        jnp.float32(cfg.gamma) * (codes * jnp.float32(BEST.exp_scale)),
+        np.float32)
+    assert np.array_equal(y, y_int)
+
+
+def test_consmax_gradients_flow():
+    """STE backward: d/dx, d/dbeta, d/dgamma are all nonzero through the
+    integer forward (per-element beta/gamma arrays included)."""
+    x = _scores(rows=4, seq=16, scale=1.0)
+    beta = jnp.zeros((4, 1))
+    gamma = jnp.ones((4, 1))
+
+    def loss(x, b, g):
+        return jnp.sum(consmax(x, beta=b, gamma=g) ** 2)
+
+    gx, gb, gg = jax.grad(loss, argnums=(0, 1, 2))(x, beta, gamma)
+    assert float(jnp.abs(gx).sum()) > 0
+    assert float(jnp.abs(gb).sum()) > 0
+    assert float(jnp.abs(gg).sum()) > 0
+    assert np.isfinite(np.asarray(gx)).all()
+
+
+# ------------------------------------------- model param threading (p.smx)
+
+
+def _smx_leaves(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat
+            if "smx" in jax.tree_util.keystr(path)]
+
+
+def test_consmax_model_carries_learnable_smx():
+    from repro.configs.registry import smoke_config
+    from repro.models import build_model
+
+    cfg = smoke_config("olmo-1b", softmax=SoftmaxSpec("consmax", BEST))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    leaves = _smx_leaves(params)
+    assert leaves, "consmax model must init p['smx'] beta/gamma"
+    # per-head: every layer's beta/gamma carry n_heads entries
+    assert all(leaf.shape[-1] == cfg.n_heads for _, leaf in leaves)
+    # a non-learnable variant inits NO smx state
+    cfg2 = smoke_config("olmo-1b", softmax=SoftmaxSpec("sole", BEST))
+    params2, _ = build_model(cfg2).init_split(jax.random.PRNGKey(0))
+    assert not _smx_leaves(params2)
+
+
+def test_consmax_smx_receives_gradient():
+    from repro.configs.registry import smoke_config
+    from repro.models import build_model
+
+    cfg = smoke_config("olmo-1b", softmax=SoftmaxSpec("consmax", BEST))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab, (2, 8)), jnp.int32)
+
+    def loss(p):
+        logits, _ = model.train_logits(p, {"tokens": tokens})
+        return jnp.mean(logits ** 2)
+
+    grads = jax.grad(loss)(params)
+    gleaves = _smx_leaves(grads)
+    assert gleaves
+    total = sum(float(jnp.abs(g).sum()) for _, g in gleaves)
+    assert total > 0, "beta/gamma got zero gradient"
+
+
+def test_spec_rejects_unknown_variant_kind():
+    with pytest.raises(ValueError, match="unknown softmax kind"):
+        SoftmaxSpec("consmax2")

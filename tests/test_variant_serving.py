@@ -1,0 +1,241 @@
+"""Serving-layer integration of the softmax-variant zoo + the new families.
+
+The tentpole contract: ``ServeOptions(softmax_kind=...)`` swaps the attention
+softmax of an already-built engine, and every serve stream stays bit-identical
+to the per-request eager reference of a model built WITH that variant.
+Alongside: whisper-base (encdec, slot-resident cross K/V) and qwen2-vl
+(M-RoPE positions) serve bit-identically to eager, unsupported option
+combinations fail loudly, and ``kv_quant_scheme="exaq_clamped"`` keeps
+shared-prefix and private-prefix streams identical.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.models.model import build_model
+from repro.serving import ServeOptions
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Request
+
+MAX_NEW = 6
+VARIANTS = ("sole", "mive", "consmax", "int")
+
+
+def _requests(rng, cfg, lens=(5, 3, 7), frames=None):
+    prompts = [rng.integers(0, cfg.vocab, size=(n,)).astype(np.int32)
+               for n in lens]
+    reqs = [Request(rid=i, prompt=prompts[i], max_new=MAX_NEW, seed=i,
+                    frames=None if frames is None else frames[i])
+            for i in range(len(lens))]
+    return prompts, reqs
+
+
+# ------------------------------------------------------- softmax-variant zoo
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = smoke_config("olmo-1b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    eng = Engine(model, params, max_new=MAX_NEW, sampler="greedy", eos_id=None)
+    prompts, reqs = _requests(np.random.default_rng(2), cfg)
+    return cfg, eng, params, prompts, reqs
+
+
+@pytest.fixture(scope="module")
+def variant_reps(olmo):
+    """One serve per zoo kind (plus the unmodified baseline), memoized so the
+    parity / metering / ordering assertions share the work."""
+    _, eng, _, _, reqs = olmo
+    reps = {None: eng.serve(reqs, options=ServeOptions(slots=2))}
+    for kind in VARIANTS:
+        reps[kind] = eng.serve(reqs, options=ServeOptions(
+            slots=2, report_cost=True, softmax_kind=kind))
+    return reps
+
+
+@pytest.mark.parametrize("kind", VARIANTS)
+def test_variant_serve_matches_eager(olmo, variant_reps, kind):
+    """serve(softmax_kind=k) == eager generate on a model BUILT with k, for
+    every request — same params, swapped attention softmax."""
+    cfg, _, params, prompts, _ = olmo
+    rep = variant_reps[kind]
+    vcfg = cfg.with_softmax(dataclasses.replace(cfg.softmax, kind=kind))
+    veng = Engine(build_model(vcfg), params, max_new=MAX_NEW,
+                  sampler="greedy", eos_id=None)
+    for r in rep.results:
+        ref = veng.generate(prompts[r.rid][None],
+                            key=jax.random.PRNGKey(r.rid),
+                            mode="eager", max_new=MAX_NEW,
+                            cache_len=rep.cache_len)
+        assert np.array_equal(r.tokens, ref.tokens[0]), (kind, r.rid)
+
+
+def test_variant_serves_metered_with_distinct_costs(variant_reps):
+    """Each variant serve carries its OWN Table-II meter — the per-trace
+    cycle ordering matches the per-vector golden pins (mive < sole <
+    consmax < full Alg.-1 int)."""
+    cycles = {k: variant_reps[k].cost.cycles for k in VARIANTS}
+    assert all(c > 0 for c in cycles.values()), cycles
+    assert cycles["mive"] < cycles["sole"] < cycles["consmax"] \
+        < cycles["int"], cycles
+    energies = {k: variant_reps[k].cost.energy_j for k in VARIANTS}
+    assert all(e > 0 for e in energies.values()), energies
+
+
+def test_variant_changes_stream_and_baseline_untouched(olmo, variant_reps):
+    """The zoo actually changes decoding (at least one kind diverges from
+    the fp baseline on this trace) and softmax_kind=None / the model's own
+    kind leave the existing stream bit-identical."""
+    _, eng, _, _, reqs = olmo
+    base = variant_reps[None]
+    assert any(
+        any(not np.array_equal(a.tokens, b.tokens)
+            for a, b in zip(variant_reps[k].results, base.results))
+        for k in VARIANTS)
+    again = eng.serve(reqs, options=ServeOptions(slots=2, softmax_kind="fp"))
+    for a, b in zip(again.results, base.results):
+        assert np.array_equal(a.tokens, b.tokens)
+
+
+def test_unknown_softmax_kind_rejected_at_options():
+    with pytest.raises(ValueError, match="softmax_kind"):
+        ServeOptions(softmax_kind="nope")
+
+
+def test_pallas_kernel_rejects_variant_kinds(olmo):
+    """kernel='pallas' implements only the Alg.-1 integer family; a zoo
+    variant must be rejected loudly, not silently served with jnp."""
+    _, eng, _, _, reqs = olmo
+    with pytest.raises(ValueError, match="pallas"):
+        eng.serve(reqs, options=ServeOptions(
+            slots=2, paged=True, kernel="pallas", softmax_kind="sole"))
+
+
+# ----------------------------------------------------- encoder-decoder serve
+
+
+@pytest.fixture(scope="module")
+def whisper():
+    cfg = smoke_config("whisper-base")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    eng = Engine(model, params, max_new=MAX_NEW, sampler="greedy", eos_id=None)
+    rng = np.random.default_rng(0)
+    frames = [rng.normal(size=(16, cfg.d_model)).astype(np.float32)
+              for _ in range(3)]
+    prompts, reqs = _requests(rng, cfg, frames=frames)
+    return cfg, eng, prompts, frames, reqs
+
+
+def test_encdec_serve_matches_eager(whisper):
+    """whisper-base continuous serving: per-request encoder frames ride the
+    admission path, cross K/V become slot-resident, and every stream equals
+    the eager reference driven with the same frames."""
+    _, eng, prompts, frames, reqs = whisper
+    rep = eng.serve(reqs, options=ServeOptions(slots=2, report_cost=True))
+    for r in rep.results:
+        ref = eng.generate(prompts[r.rid][None],
+                           key=jax.random.PRNGKey(r.rid),
+                           extra_inputs={"frames": frames[r.rid][None]},
+                           mode="eager", max_new=MAX_NEW,
+                           cache_len=rep.cache_len)
+        assert np.array_equal(r.tokens, ref.tokens[0]), r.rid
+    # fp engine: metering runs (report present) but AP cost is zero
+    assert rep.cost is not None and rep.cost.cycles == 0
+
+
+def test_encdec_rejects_unsupported_options(whisper):
+    _, eng, _, _, reqs = whisper
+    for opts in (ServeOptions(slots=2, paged=True),
+                 ServeOptions(slots=2, speculative=True),
+                 ServeOptions(slots=2, prefill_chunk=4)):
+        with pytest.raises(NotImplementedError, match="encdec"):
+            eng.serve(reqs, options=opts)
+
+
+def test_encdec_rejects_mixed_frame_shapes(whisper):
+    cfg, eng, prompts, frames, _ = whisper
+    rng = np.random.default_rng(9)
+    bad = [Request(rid=0, prompt=prompts[0], max_new=2, frames=frames[0]),
+           Request(rid=1, prompt=prompts[1], max_new=2,
+                   frames=rng.normal(size=(8, cfg.d_model)).astype(
+                       np.float32))]
+    with pytest.raises(ValueError, match="frames"):
+        eng.serve(bad, options=ServeOptions(slots=2))
+
+
+# ------------------------------------------------------- M-RoPE (qwen2-vl)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = smoke_config("qwen2-vl-7b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    eng = Engine(model, params, max_new=MAX_NEW, sampler="greedy", eos_id=None)
+    prompts, reqs = _requests(np.random.default_rng(1), cfg)
+    return cfg, eng, prompts, reqs
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["plain", "paged"])
+def test_mrope_serve_matches_eager(qwen, paged):
+    """qwen2-vl text-only serving: admission synthesizes the [3,1,P] M-RoPE
+    position ladder; plain and paged streams equal the eager reference."""
+    _, eng, prompts, reqs = qwen
+    opts = ServeOptions(slots=2, paged=paged,
+                        block_size=4 if paged else 16, report_cost=True)
+    rep = eng.serve(reqs, options=opts)
+    for r in rep.results:
+        P = prompts[r.rid].shape[0]
+        pos = jnp.broadcast_to(
+            jnp.arange(P, dtype=jnp.int32)[None, None, :], (3, 1, P))
+        ref = eng.generate(prompts[r.rid][None],
+                           key=jax.random.PRNGKey(r.rid),
+                           extra_inputs={"positions": pos},
+                           mode="eager", max_new=MAX_NEW,
+                           cache_len=rep.cache_len)
+        assert np.array_equal(r.tokens, ref.tokens[0]), r.rid
+
+
+def test_mrope_rejects_unsupported_options(qwen):
+    _, eng, _, reqs = qwen
+    with pytest.raises(NotImplementedError, match="mrope"):
+        eng.serve(reqs, options=ServeOptions(slots=2, paged=True,
+                                             prefix_share=True))
+    with pytest.raises(NotImplementedError, match="mrope"):
+        eng.serve(reqs, options=ServeOptions(slots=2, speculative=True))
+
+
+# -------------------------------------------------- exaq_clamped KV quant
+
+
+def test_exaq_clamped_shared_vs_private_parity():
+    """Position-local clamped-exponent KV scales: sharing a 16-token prefix
+    must not perturb any stream vs fully-private prefills (the scheme's
+    scales depend only on each position's own values)."""
+    cfg = dataclasses.replace(smoke_config("olmo-1b"), kv_quant=True,
+                              kv_quant_scheme="exaq_clamped")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    eng = Engine(model, params, max_new=MAX_NEW, sampler="greedy",
+                 eos_id=None)
+    rng = np.random.default_rng(3)
+    common = rng.integers(0, cfg.vocab, size=(16,)).astype(np.int32)
+    reqs = [Request(rid=i, prompt=np.concatenate(
+                [common,
+                 rng.integers(0, cfg.vocab, size=(3 + i,)).astype(np.int32)]),
+            max_new=MAX_NEW, seed=i) for i in range(3)]
+    shared = eng.serve(reqs, options=ServeOptions(
+        slots=2, paged=True, block_size=4, prefix_share=True))
+    private = eng.serve(reqs, options=ServeOptions(
+        slots=2, paged=True, block_size=4, prefix_share=False))
+    assert shared.shared_prefill_tokens > 0, "prefix sharing never engaged"
+    for a, b in zip(shared.results, private.results):
+        assert np.array_equal(a.tokens, b.tokens), a.rid
